@@ -1,0 +1,112 @@
+"""Table 6 — technique ablation on the neighbor-node (degraded) program.
+
+Compiles the degraded train step (every layer in NDB mode — the SPMD-honest
+stand-in for the node running a doubled workload, DESIGN.md §3) for the four
+paper variants and reports compiled memory + FLOPs + projected step time:
+
+  MeCeFO-mrl : NDB naive — no skip, no recompute, no low-rank
+  MeCeFO-rl  : + technique I (skip MHA backward)
+  MeCeFO-l   : + technique II (FFN recompute)
+  MeCeFO     : + technique III (low-rank Wgrad)
+  w/o fault  : the healthy step (baseline row of Table 6)
+
+Run on the production single-pod mesh with glm4-9b/train_4k by default.
+NOTE: run standalone (needs the 512-device XLA flag), not under pytest.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs.base import (  # noqa: E402
+    MeCeFOConfig,
+    ParallelConfig,
+    SHAPES,
+    TrainConfig,
+    get_config,
+)
+
+
+def compile_variant(cfg, shape, mesh, mecefo: MeCeFOConfig, ndb_mode: str,
+                    parallel: ParallelConfig):
+    from repro.launch.hlo_cost import analyze
+    from repro.launch.mesh import mesh_shape_dict
+    from repro.launch.specs import input_specs
+    from repro.launch.state import state_structs
+    from repro.launch.steps import build_rules, make_train_step
+
+    train = TrainConfig()
+    rules = build_rules(cfg, mesh, parallel)
+    with mesh:
+        jitted, *_ = make_train_step(
+            cfg, train, parallel, mecefo, mesh, shape, ndb_mode=ndb_mode
+        )
+        lowered = jitted.lower(
+            state_structs(cfg, train, mecefo),
+            input_specs(cfg, shape, rules, mesh_shape_dict(mesh))[0],
+        )
+        compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    cost = analyze(compiled.as_text())
+    t_est = max(cost.flops / 197e12, cost.bytes / 819e9, cost.collective_bytes / 50e9)
+    return {
+        "temp_gb": ma.temp_size_in_bytes / 1e9,
+        "flops_tf": cost.flops / 1e12,
+        "bytes_tb": cost.bytes / 1e12,
+        "coll_gb": cost.collective_bytes / 1e9,
+        "t_est_s": t_est,
+    }
+
+
+VARIANTS = {
+    "MeCeFO-mrl (NDB naive)": MeCeFOConfig(
+        mode="static", skip_mha_backward=False, recompute_ffn=False,
+        lowrank_wgrad=False),
+    "MeCeFO-rl  (+skip)": MeCeFOConfig(
+        mode="static", skip_mha_backward=True, recompute_ffn=False,
+        lowrank_wgrad=False),
+    "MeCeFO-l   (+recompute)": MeCeFOConfig(
+        mode="static", skip_mha_backward=True, recompute_ffn=True,
+        lowrank_wgrad=False),
+    "MeCeFO     (full)": MeCeFOConfig(
+        mode="static", skip_mha_backward=True, recompute_ffn=True,
+        lowrank_wgrad=True),
+}
+
+
+def run(arch: str = "glm4-9b", shape_name: str = "train_4k", verbose=True):
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    # NDB-naive must not silently benefit from the healthy-path full remat:
+    # Table 6's "memory blowup" row needs remat limited to technique II.
+    par_naive = ParallelConfig(remat="none")
+    par_full = ParallelConfig(remat="none")
+    rows = {}
+    rows["w/o fault (healthy)"] = compile_variant(
+        cfg, shape, mesh, MeCeFOConfig(mode="off"), "off", ParallelConfig()
+    )
+    for name, mec in VARIANTS.items():
+        par = par_full if mec.recompute_ffn else par_naive
+        rows[name] = compile_variant(cfg, shape, mesh, mec, "degraded", par)
+    if verbose:
+        print(f"\nTable 6 analog — {arch} x {shape_name} (per-device, 256 chips)")
+        print(f"{'variant':26s} {'mem GB':>8s} {'TFLOPs':>9s} {'est s':>8s} {'coll GB':>9s}")
+        for name, r in rows.items():
+            print(
+                f"{name:26s} {r['temp_gb']:8.2f} {r['flops_tf']:9.1f} "
+                f"{r['t_est_s']:8.2f} {r['coll_gb']:9.1f}"
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""§Roofline — render the dry-run JSON records into the EXPERIMENTS.md table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(out_dir: str = "experiments/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def render(recs, mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_collective | bottleneck "
+        "| useful FLOPs | roofline frac | fits/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs = [r for r in recs if r.get("mesh") == mesh or "skipped" in r]
+    seen = set()
+    for r in sorted(recs, key=lambda r: (r["arch"], order.get(r["shape"], 9))):
+        key = (r["arch"], r["shape"], r.get("mesh", mesh))
+        if key in seen or (r.get("mesh", mesh) != mesh):
+            continue
+        seen.add(key)
+        if "skipped" in r:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | *skipped* "
+                f"| — | — | — |"
+            )
+            continue
+        mem_gb = (r["temp_bytes"] + r["argument_bytes"]) / 1e9
+        fits = "✓" if mem_gb <= 16 else f"✗ {mem_gb:.0f}GB"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.1f}ms "
+            f"| {r['t_memory']*1e3:.1f}ms | {r['t_collective']*1e3:.1f}ms "
+            f"| {r['bottleneck']} | {r['useful_flops_ratio']:.1%} "
+            f"| {r['roofline_fraction']:.1%} | {fits} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    recs = load()
+    for mesh in ("single", "multi"):
+        sub = [r for r in recs if r.get("mesh") == mesh]
+        if not sub:
+            continue
+        print(f"\n== {mesh}-pod ==")
+        print(render(recs, mesh))
+
+
+if __name__ == "__main__":
+    main()

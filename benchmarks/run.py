@@ -1,0 +1,55 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall time of the
+benchmark's core unit; derived = its headline metric).
+
+The Table-6 ablation and the roofline table read compiled dry-run artifacts
+and need the 512-device flag; they are separate entry points:
+  PYTHONPATH=src python -m benchmarks.ablation_ndb
+  PYTHONPATH=src python -m benchmarks.roofline_table
+"""
+import time
+
+
+def _timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6
+
+
+def main() -> None:
+    rows = []
+
+    from benchmarks import throughput_sim
+
+    res, us = _timed(throughput_sim.run_table2, verbose=False)
+    by = {(r["arch"], r["system"], r["scenario"]): r for r in res}
+    drop = by[("llama-7b", "mecefo", "high")]["drop_pct"]
+    ratio = by[("llama-7b", "oobleck", "high")]["drop_pct"] / max(drop, 1e-6)
+    rows.append(("table2_throughput_sim", us, f"mecefo_high_drop={drop:.2f}%_resilience_x{ratio:.1f}"))
+
+    from benchmarks import convergence
+
+    res, us = _timed(convergence.run, steps=250, verbose=False)
+    delta = 100 * (res["high"]["ppl"] / res["none"]["ppl"] - 1)
+    rows.append(("table3_convergence", us, f"high_freq_ppl_delta={delta:+.2f}%"))
+
+    from benchmarks import grad_error
+
+    res, us = _timed(grad_error.run, steps=8, verbose=False)
+    rows.append(("fig45_grad_error", us,
+                 f"max_single={max(res['single']):.3f}_max_full={max(res['full']):.3f}"))
+
+    from benchmarks import skip_ablation
+
+    res, us = _timed(skip_ablation.run, steps=80, verbose=False)
+    rows.append(("fig3_skip_ablation", us,
+                 f"mha={res['skip-MHA (MeCeFO)']:.3f}_ffn={res['skip-FFN']:.3f}"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

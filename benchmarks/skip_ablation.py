@@ -1,0 +1,111 @@
+"""Fig. 3 — module-skip ablation: why MeCeFO skips MHA and not FFN.
+
+Trains the tiny LLaMA with backward-skip applied to (a) nothing,
+(b) MHA only (MeCeFO's choice), (c) FFN only, (d) both, under a fixed
+degraded mask, and compares final losses.  The paper's observation:
+skipping MHA disrupts training far less than skipping FFN.
+
+FFN-skip is emulated with the same grad_gate machinery wrapped around the
+FFN branch (a benchmark-only model variant).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeConfig, TrainConfig, get_config, reduced
+from repro.core.skipconn import grad_gate
+from repro.data.pipeline import SyntheticLM, make_batch
+from repro.launch.mesh import make_host_mesh
+from repro.launch.state import init_state
+from repro.configs.base import MeCeFOConfig, ParallelConfig
+from repro.launch.steps import build_flags, build_rules
+from repro.models import frontends
+from repro.models.layers import attention_block, chunked_cross_entropy, ffn_block, rmsnorm
+from repro.models.params import block_layout
+from repro.optim.optimizers import apply_update, clip_by_global_norm, init_opt_state
+from repro.parallel.sharding import ShardingRules
+
+
+def _loss_with_skips(params, batch, cfg, rules, flags, skip_mha, skip_ffn, keep):
+    """Forward with selectable backward-skips on either module."""
+    h, token_w = frontends.embed_inputs(params, batch, cfg)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    labels = batch["labels"]
+    layout = block_layout(cfg)
+    n_periods = cfg.n_layers // cfg.block_period
+
+    def body(h, xs):
+        bp = xs
+        for p in range(cfg.block_period):
+            mha_keep = keep if skip_mha else 1.0
+            h, _ = attention_block(bp[p]["mixer"], h, cfg, rules, mha_keep,
+                                   positions, attn_chunk=flags.attn_chunk)
+            x_res = h
+            h = ffn_block(bp[p]["ffn"], h, cfg, rules)
+            if skip_ffn:
+                h = x_res + grad_gate(h - x_res, keep)
+        return h, None
+
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    unembed = params.get("unembed", params["embed"].T)
+    return chunked_cross_entropy(h, unembed, labels, token_w, rules,
+                                 chunk=flags.ce_chunk, vocab_size=cfg.vocab_size)
+
+
+def run(steps: int = 250, verbose: bool = True, seed: int = 0):
+    cfg = reduced(get_config("llama-350m"), dtype="float32")
+    B, S = 8, 64
+    shape = ShapeConfig("abl", S, B, "train")
+    mesh = make_host_mesh()
+    par = ParallelConfig(fsdp=False)
+    rules = build_rules(cfg, mesh, par)
+    flags = build_flags(cfg, par, mesh, shape)
+    src = SyntheticLM(cfg.vocab_size)
+    tc = TrainConfig(learning_rate=3e-3)
+
+    # every example degraded every step — the harshest case: the skipped
+    # module receives NO weight gradient at all for the whole run
+    keep = jnp.zeros(B)
+
+    results = {}
+    for name, (sm, sf) in {
+        "no-skip": (False, False),
+        "skip-MHA (MeCeFO)": (True, False),
+        "skip-FFN": (False, True),
+        "skip-both": (True, True),
+    }.items():
+        with mesh:
+            state = init_state(cfg, tc, MeCeFOConfig(), jax.random.PRNGKey(seed))
+        params, opt = state.params, state.opt
+        grad_fn = jax.jit(jax.value_and_grad(
+            lambda p, b: _loss_with_skips(p, b, cfg, rules, flags, sm, sf, keep)
+        ))
+        losses = []
+        for t in range(steps):
+            batch = make_batch(cfg, shape, t, source=src)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            loss, g = grad_fn(params, batch)
+            g, _ = clip_by_global_norm(g, tc.grad_clip)
+            params, opt = apply_update(params, g, opt, tc.learning_rate,
+                                       jnp.int32(t), tc)
+            losses.append(float(loss))
+        results[name] = float(np.mean(losses[-10:]))
+        if verbose:
+            print(f"{name:18s} final loss {results[name]:.4f}")
+    if verbose:
+        print(
+            "\nPaper Fig. 3 (LLaMA-130M on C4): skip-MHA ~ no-skip << skip-FFN."
+            "\nAt CPU scale on the synthetic bigram corpus the single-skip"
+            "\nordering is data-dependent (bigram prediction barely needs"
+            "\nattention, so a frozen-but-mixing MHA hurts more here);"
+            "\nskip-both >> either single skip reproduces robustly."
+        )
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,214 @@
+"""Table 2 — throughput under failure scenarios: MeCeFO vs Bamboo vs Oobleck.
+
+Discrete-event simulation over a DP×PP device grid with the paper's Table-1
+failure scenarios.  Per-system policy models (costs derived from each
+method's mechanism, FLOP-level accounting from the model config):
+
+* MeCeFO — neighbor-do-both; degraded pipeline step cost from the technique
+  FLOP model (skip MHA bwd: −attn Wgrad/Dgrad; FFN recompute: +1 FFN fwd;
+  low-rank Wgrad: −FFN Wgrad + tiny projected cost); failover pause =
+  peer-fetch bytes / interconnect BW.
+* Bamboo — redundant computation: every node also runs its neighbor's
+  forward (+fwd/3 of total ≈ +1/3 compute always); failures mostly free.
+* Oobleck — exact computation, reconfigured pipelines: throughput scales
+  with surviving nodes; each event costs a reconfiguration stall.
+
+Steady-state throughput is reported like the paper: tokens/s and drop% vs
+the system's own fault-free rate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, get_config
+from repro.ft.failures import SCENARIOS, FailureProcess
+
+
+# ---------------------------------------------------------------------------
+# FLOP accounting for the MeCeFO techniques (per paper §3.2–3.4)
+# ---------------------------------------------------------------------------
+
+
+def technique_cost_model(cfg: ModelConfig, rank: int = 64) -> Dict[str, float]:
+    """Relative per-layer compute of a degraded layer vs healthy (fwd=1)."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    attn_proj = 2 * d * (cfg.n_heads + 2 * cfg.n_kv_heads + cfg.n_heads) * hd
+    n_mat = 3 if cfg.ffn_act == "swiglu" else 2
+    ffn = 2 * n_mat * d * (cfg.d_ff or (cfg.moe.d_ff_expert * cfg.moe.top_k if cfg.moe else 0))
+    total_fwd = attn_proj + ffn
+    # healthy: fwd + bwd(2x) = 3x fwd
+    healthy = 3.0 * total_fwd
+    # MeCeFO degraded: fwd + FFN recompute + FFN Dgrad + lowrank Wgrad
+    lowrank_wgrad = ffn * rank / d if d else 0  # ~2brm'+... << exact
+    degraded = total_fwd + ffn + ffn + lowrank_wgrad  # Alg. 2/3
+    # NDB naive: doubled workload, exact everything
+    return {
+        "healthy": healthy,
+        "mecefo_degraded": degraded,
+        "ndb_naive": 2.0 * healthy,
+        "frac_attn": attn_proj / total_fwd,
+    }
+
+
+@dataclass
+class SimResult:
+    system: str
+    scenario: str
+    tokens_per_s: float
+    drop_pct: float
+
+
+def simulate(
+    system: str,
+    cfg: ModelConfig,
+    scenario_name: str,
+    *,
+    n_dp: int = 4,
+    n_stages: int = 8,
+    healthy_step_s: float = 1.0,
+    tokens_per_step: float = 1.0e6,
+    sim_steps: int = 20_000,
+    comm_frac: float = 1.0,      # t_comm / t_compute (overlap model)
+    fetch_pause_s: float = 3.0,
+    reconfig_pause_s: float = 150.0,
+    promote_pause_s: float = 10.0,
+    seed: int = 0,
+) -> float:
+    """Returns steady-state tokens/s for one (system, scenario).
+
+    Step-time model: compute and DP communication overlap, so
+    ``t_step = t_compute_bottleneck ⊕ t_comm = max(...)``.  MeCeFO's
+    inexact-gradient tolerance additionally allows DP *load rebalancing*
+    (uneven per-rank token shares; eq. (1) keeps the update well-defined),
+    which its HexiScale base framework performs — exact-computation systems
+    (Bamboo/Oobleck) cannot shift load without changing semantics.
+    """
+    costs = technique_cost_model(cfg)
+    scenario = SCENARIOS[scenario_name]
+    proc = FailureProcess(scenario, n_dp, n_stages, healthy_step_s, seed=seed)
+    t_comp = healthy_step_s
+    t_comm = comm_frac * healthy_step_s
+    t = 0.0
+    toks = 0.0
+    prev_failed = frozenset()
+    for step in range(sim_steps):
+        plan = proc.step(step)
+        new_fail = plan.failed - prev_failed
+        recovered = prev_failed - plan.failed
+        prev_failed = plan.failed
+
+        if system == "bamboo":
+            # redundant fwd of the neighbor stage always (+fwd/3 compute);
+            # on failure the replica node runs BOTH stages exactly (2x) and
+            # re-replication traffic stalls the affected pipeline
+            worst = 1.0 + 1.0 / 3.0
+            for r in range(n_dp):
+                if any(rr == r for (rr, s_) in plan.failed):
+                    worst = max(worst, 2.0)
+            step_s = max(t_comp * worst, t_comm)
+            if new_fail:
+                t += promote_pause_s * len(new_fail)
+            t += step_s
+            toks += tokens_per_step
+            continue
+
+        if system == "oobleck":
+            # template switch: surviving nodes in an affected pipeline take
+            # the extra EXACT workload (no approximations available)
+            worst = 1.0
+            for r in range(n_dp):
+                n_failed = len([1 for (rr, s) in plan.failed if rr == r])
+                if n_failed:
+                    worst = max(
+                        worst, n_stages / max(n_stages - n_failed, 1)
+                    )
+            step_s = max(t_comp * worst, t_comm)
+            if new_fail or recovered:
+                t += reconfig_pause_s * (len(new_fail) + len(recovered))
+            t += step_s
+            toks += tokens_per_step
+            continue
+
+        # mecefo
+        if new_fail or recovered:
+            t += fetch_pause_s * (len(new_fail) + len(recovered))
+        # per-pipeline relative speed (bottleneck stage of each pipeline)
+        speeds = []
+        for r in range(n_dp):
+            deg = plan.degraded_stages(r)
+            if not deg:
+                speeds.append(1.0)
+                continue
+            # the doubled node is the bottleneck stage of this pipeline
+            rel = 2.0 * costs["mecefo_degraded"] / costs["healthy"]
+            speeds.append(1.0 / max(rel, 1.0))
+        dropped = plan.dropped_ranks()
+        for r in dropped:
+            speeds[r] = 0.0
+        # load rebalancing: token shares proportional to speed
+        total_speed = sum(speeds)
+        if total_speed <= 0:
+            t += healthy_step_s  # fully stalled step
+            continue
+        # compute-throughput scales with total_speed/n_dp; comm overlaps
+        step_s = max(t_comp * (n_dp / total_speed), t_comm)
+        t += step_s
+        toks += tokens_per_step
+    return toks / t
+
+# NOTE (EXPERIMENTS.md §Table 2): this simulator is *more pessimistic* for
+# MeCeFO than the paper's cluster measurements (which additionally benefit
+# from HexiScale's heterogeneity-aware pipeline re-partitioning that we do
+# not model): our high-freq drops are ~3-5x the paper's absolute numbers.
+# The ordering (MeCeFO >> Oobleck/Bamboo resilience) and the growth of the
+# gap with model size reproduce.
+
+
+def run_table2(verbose: bool = True):
+    rows = []
+    # comm/compute balance: small models are DP-comm bound at seq 256 with
+    # huge global batches (Table 11), the 7B run is compute-bound
+    comm = {"llama-350m": 1.30, "llama-1b": 1.12, "llama-7b": 0.92}
+    for arch in ("llama-350m", "llama-1b", "llama-7b"):
+        cfg = get_config(arch)
+        base_step = {"llama-350m": 0.35, "llama-1b": 0.9, "llama-7b": 2.4}[arch]
+        for system in ("bamboo", "oobleck", "mecefo"):
+            base = simulate(system, cfg, "none", healthy_step_s=base_step,
+                            comm_frac=comm[arch])
+            for scen in ("none", "low", "mid", "high"):
+                tps = simulate(system, cfg, scen, healthy_step_s=base_step,
+                               comm_frac=comm[arch])
+                drop = 100.0 * (1 - tps / base)
+                rows.append(
+                    dict(arch=arch, system=system, scenario=scen,
+                         tokens_per_s=tps, drop_pct=drop)
+                )
+                if verbose:
+                    print(
+                        f"{arch:12s} {system:8s} {scen:5s} "
+                        f"{tps/1e3:10.1f}k tok/s  drop {drop:6.2f}%"
+                    )
+    return rows
+
+
+def main():
+    rows = run_table2()
+    # headline claim check (paper: MeCeFO high-freq drop ~4%, others 5-6.7x worse)
+    by = {(r["arch"], r["system"], r["scenario"]): r for r in rows}
+    for arch in ("llama-7b",):
+        m = by[(arch, "mecefo", "high")]["drop_pct"]
+        o = by[(arch, "oobleck", "high")]["drop_pct"]
+        b = by[(arch, "bamboo", "high")]["drop_pct"]
+        print(
+            f"\n{arch}: high-freq drop mecefo={m:.2f}% oobleck={o:.2f}% "
+            f"bamboo={b:.2f}%  resilience x{o/max(m,1e-6):.1f} vs oobleck"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Launcher for one multi-pod dry-run cell: AOT lower+compile the production
+(2, 16, 16) mesh step for an (arch x shape) pair and print the analyses.
+
+    PYTHONPATH=src python examples/multi_pod_dryrun.py --arch glm4-9b --shape train_4k
+"""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--shape", default="train_4k")
+    args = ap.parse_args()
+    from repro.launch.dryrun import run_cell
+
+    rec = run_cell(args.arch, args.shape, multi_pod=True, force=True,
+                   out_dir="/tmp/dryrun_example")
+    for k in ("t_compute", "t_memory", "t_collective", "bottleneck",
+              "useful_flops_ratio", "roofline_fraction"):
+        print(f"  {k}: {rec.get(k)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Quickstart: train a reduced GLM-4 for 60 steps, then generate greedily.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MeCeFOConfig, ShapeConfig, TrainConfig, get_config, reduced
+from repro.launch.train import Trainer
+from repro.launch.steps import build_flags, build_rules
+from repro.models.kvcache import cache_structs
+from repro.models.model import forward_decode, forward_prefill
+
+
+def main():
+    cfg = reduced(get_config("glm4-9b"), dtype="float32")
+    shape = ShapeConfig("quickstart", 64, 8, "train")
+    trainer = Trainer(cfg, shape, TrainConfig(steps=60, learning_rate=3e-3))
+    hist = trainer.run(log_every=20)
+    print(f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+    # greedy generation with the trained weights
+    rules = build_rules(cfg, trainer.mesh, trainer.parallel)
+    flags = build_flags(cfg, trainer.parallel, trainer.mesh, shape)
+    prompt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    cs = cache_structs(cfg, 1, 16, jnp.float32)
+    cache, logits = forward_prefill(
+        trainer.state.params, {"tokens": prompt}, cfg, rules, flags, cs
+    )
+    toks = []
+    tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+    for t in range(4, 12):
+        toks.append(int(tok[0]))
+        cache, logits = forward_decode(
+            trainer.state.params, cache, tok, jnp.int32(t), cfg, rules, flags
+        )
+        tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+    print("generated:", toks)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Batched serving: prefill a batch of prompts, decode new tokens for all of
+them in lock-step (one serve_step per token, KV caches threaded through).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeConfig, get_config, reduced, ParallelConfig
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import build_flags, build_rules
+from repro.models.kvcache import cache_structs
+from repro.models.model import forward_decode, forward_prefill
+from repro.models.params import init_params
+
+
+def main():
+    cfg = reduced(get_config("qwen3-moe-30b-a3b"), dtype="float32")
+    B, S_prompt, S_gen = 4, 16, 16
+    mesh = make_host_mesh()
+    par = ParallelConfig(fsdp=False)
+    rules = build_rules(cfg, mesh, par)
+    flags = build_flags(cfg, par, mesh)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S_prompt), 0, cfg.vocab_size)
+
+    cs = cache_structs(cfg, B, S_prompt + S_gen, jnp.float32)
+    prefill = jax.jit(lambda p, b: forward_prefill(p, b, cfg, rules, flags, cs))
+    decode = jax.jit(
+        lambda p, c, t, n: forward_decode(p, c, t, n, cfg, rules, flags)
+    )
+
+    t0 = time.time()
+    cache, logits = prefill(params, {"tokens": prompts})
+    tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+    out = [tok]
+    for t in range(S_prompt, S_prompt + S_gen - 1):
+        cache, logits = decode(params, cache, tok, jnp.int32(t))
+        tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+        out.append(tok)
+    gen = jnp.stack(out, axis=1)
+    dt = time.time() - t0
+    print(f"generated {B}x{gen.shape[1]} tokens in {dt:.2f}s "
+          f"({B*gen.shape[1]/dt:.1f} tok/s incl. compile)")
+    for b in range(B):
+        print(f"  prompt {b}: {list(map(int, gen[b][:10]))} ...")
+
+
+if __name__ == "__main__":
+    main()

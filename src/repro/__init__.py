@@ -1,0 +1,6 @@
+"""MeCeFO-JAX: fault-tolerant multi-pod LLM training (Hu et al., CS.DC 2025).
+
+Subpackages: core (the paper's technique), models, parallel, optim, data,
+checkpoint, ft, kernels (Pallas TPU), configs, launch.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,120 @@
+"""Async, atomic checkpointing.
+
+Layout: ``<dir>/step_<N>/state.npz`` (+ ``DONE`` marker).  Saves run on a
+background thread (training is never blocked on disk); the marker file makes
+partially-written checkpoints invisible to restore.  ``keep`` bounds disk
+use.  This is also the NDB recovery source when FSDP sharding breaks the
+pure-DP replication assumption (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+Tree = Any
+
+
+def _flatten(tree: Tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(state: Tree, directory: str, step: int) -> str:
+    """Synchronous atomic save. Returns the checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, _ = _flatten(state)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    np.savez(os.path.join(tmp, "state.npz"), **arrays)
+    with open(os.path.join(tmp, "DONE"), "w") as f:
+        f.write(str(step))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def restore(like: Tree, directory: str, step: Optional[int] = None) -> Tuple[Tree, int]:
+    """Restore into the structure of `like`. Returns (state, step)."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no complete checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}", "state.npz")
+    data = np.load(path)
+    leaves, treedef = _flatten(like)
+    out = [
+        np.asarray(data[f"leaf_{i}"]).astype(np.asarray(l).dtype)
+        if hasattr(l, "dtype")
+        else data[f"leaf_{i}"]
+        for i, l in enumerate(leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out), step
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "DONE")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    """Background-thread checkpointer with retention."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self.saved_steps: List[int] = []
+
+    def save_async(self, state: Tree, step: int) -> None:
+        self.wait()
+        # device→host copy happens here (cheap on CPU; on TPU this is the
+        # only sync point), the disk write on the thread.
+        host_state = jax.tree.map(np.asarray, state)
+
+        def work():
+            try:
+                save(host_state, self.directory, step)
+                self.saved_steps.append(step)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        while len(self.saved_steps) > self.keep:
+            victim = self.saved_steps.pop(0)
+            path = os.path.join(self.directory, f"step_{victim:08d}")
+            shutil.rmtree(path, ignore_errors=True)
+
+    def restore_latest(self, like: Tree) -> Optional[Tuple[Tree, int]]:
+        self.wait()
+        if latest_step(self.directory) is None:
+            return None
+        return restore(like, self.directory)

@@ -1,0 +1,313 @@
+"""Config system: model / shape / parallelism / MeCeFO configs.
+
+Every assigned architecture is a ``ModelConfig`` in its own module under
+``repro.configs``; ``get_config(name)`` resolves them.  Shapes (the assigned
+input-shape grid) are ``ShapeConfig`` instances shared across archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts FFN replacing the dense FFN on selected layers."""
+
+    n_experts: int = 128
+    top_k: int = 8
+    d_ff_expert: int = 768
+    # Apply MoE every `every` layers (1 = all layers), starting at `offset`.
+    every: int = 1
+    offset: int = 0
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0  # jitter disabled by default (determinism)
+    aux_loss_weight: float = 1e-2
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) mixer config."""
+
+    d_state: int = 128
+    expand: int = 2
+    head_dim: int = 64
+    d_conv: int = 4
+    chunk: int = 256  # SSD chunk length
+
+
+@dataclass(frozen=True)
+class MeCeFOConfig:
+    """The paper's technique knobs."""
+
+    # "off" | "static" | "dynamic"  (see DESIGN.md §3)
+    mode: str = "off"
+    # Low-rank Wgrad rank r and SVD refresh period tau (paper: tau=100).
+    rank: int = 64
+    svd_period: int = 100
+    # Whether FFN recompute (technique II) is applied on degraded layers.
+    recompute_ffn: bool = True
+    # Whether MHA backward skip (technique I) is applied on degraded layers.
+    skip_mha_backward: bool = True
+    # Whether low-rank Wgrad (technique III) is applied on degraded layers.
+    lowrank_wgrad: bool = True
+    # Beyond-paper: all-reduce the factored (r x m) gradient instead of the
+    # full (n x m) for degraded layers (see DESIGN.md §3 beyond-paper).
+    lowrank_sync: bool = False
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """Mesh + sharding policy."""
+
+    # Axis names; the leading axes shard the batch ("dp-like"), the last
+    # shards weights ("tp-like").
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+    # FSDP: additionally shard weights over the data axis.
+    fsdp: bool = True
+    # "tp_fsdp" (Megatron-style TP over 'model' + FSDP over 'data') or
+    # "fsdp" (pure 2D FSDP: weights sharded over both axes, no TP activation
+    # all-reduces; vocab stays model-sharded for the CE)
+    sharding_mode: str = "tp_fsdp"
+    # Sequence parallelism over the tp axis for norms / token-pointwise ops.
+    sequence_parallel: bool = False
+    # Remat ("none" | "ffn" | "full") applied to healthy layers.
+    # "full" is the deployment default: the jnp attention path would otherwise
+    # save S x S probabilities per layer for backward.
+    remat: str = "full"
+    # Scan over layers (bounds compile time; required for deep configs).
+    scan_layers: bool = True
+    # Gradient-accumulation microbatches per optimizer step (1 = off).
+    accum: int = 1
+    # Gradient all-reduce compression: "none" | "int8" | "lowrank"
+    grad_compression: str = "none"
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    d_ff: int = 1024
+    vocab_size: int = 32000
+    max_seq_len: int = 1 << 20
+    # Activation: "swiglu" | "relu2" (squared ReLU, Nemotron-4)
+    ffn_act: str = "swiglu"
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    # Block pattern: per-layer mixer kind. "attn" | "ssm". None -> all attn
+    # (or all ssm for family=="ssm").
+    attn_every: int = 1  # hybrid: attention on layers where (l % attn_every == attn_offset)
+    attn_offset: int = 0
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # Modality frontend stub: None | "audio" | "vision".
+    frontend: Optional[str] = None
+    # For vlm: number of image patch embeddings prepended to the text tokens.
+    n_patches: int = 576
+    # logits soft cap etc. intentionally omitted — none of the assigned archs
+    # use one.
+
+    # ---- derived -----------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding rows padded for TP divisibility (only when needed).
+
+        e.g. mamba2's 50280 is not divisible by a 16-way model axis; we pad
+        to the next multiple of 128 and mask the pad logits in the loss.
+        """
+        if self.vocab_size % 16 == 0:
+            return self.vocab_size
+        return ((self.vocab_size + 127) // 128) * 128
+
+    def layer_kind(self, layer_idx: int) -> str:
+        """Mixer kind of layer `layer_idx` ("attn" or "ssm")."""
+        if self.family == "ssm":
+            return "ssm"
+        if self.family == "hybrid":
+            return "attn" if layer_idx % self.attn_every == self.attn_offset else "ssm"
+        return "attn"
+
+    def layer_is_moe(self, layer_idx: int) -> bool:
+        if self.moe is None:
+            return False
+        return layer_idx % self.moe.every == self.moe.offset
+
+    @property
+    def block_period(self) -> int:
+        """Smallest period after which the layer pattern repeats.
+
+        Used by the scan-over-layers executor: we scan over
+        ``n_layers // block_period`` super-blocks of ``block_period``
+        heterogeneous sublayers each.
+        """
+        if self.family == "hybrid":
+            p = self.attn_every
+        else:
+            p = 1
+        if self.moe is not None:
+            import math
+
+            p = math.lcm(p, self.moe.every)
+        return p
+
+    def param_count(self) -> int:
+        """Total parameter count (exact, matches init_params)."""
+        from repro.models.params import count_params
+
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.params import count_params
+
+        return count_params(self, active_only=True)
+
+
+# ---------------------------------------------------------------------------
+# Shape grid (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(model: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether a (arch x shape) cell is runnable; else the documented reason."""
+    if shape.name == "long_500k" and model.family not in ("ssm", "hybrid"):
+        return False, (
+            "long_500k requires sub-quadratic attention; "
+            f"{model.name} is pure full-attention (skip per DESIGN.md)"
+        )
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Top-level run config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    learning_rate: float = 3e-4
+    warmup_frac: float = 0.1
+    weight_decay: float = 0.01
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    optimizer: str = "adamw"  # adamw | sgdm (paper's theory optimizer)
+    momentum: float = 0.9
+    grad_clip: float = 1.0
+    seed: int = 0
+    microbatch: int = 0  # 0 -> no grad accumulation
+    checkpoint_every: int = 0  # 0 -> disabled
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    parallel: ParallelConfig = field(default_factory=ParallelConfig)
+    mecefo: MeCeFOConfig = field(default_factory=MeCeFOConfig)
+    train: TrainConfig = field(default_factory=TrainConfig)
+
+
+def reduced(model: ModelConfig, **overrides) -> ModelConfig:
+    """A smoke-test-sized config of the same family (same code path)."""
+    small = dict(
+        n_layers=min(model.n_layers, model.block_period * 2),
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=max(1, min(model.n_kv_heads, 4) if model.n_kv_heads else 4),
+        head_dim=32 if model.head_dim else 0,
+        d_ff=256,
+        vocab_size=512,
+        n_patches=8,
+    )
+    if model.moe is not None:
+        small["moe"] = dataclasses.replace(
+            model.moe, n_experts=8, top_k=2, d_ff_expert=64
+        )
+    if model.ssm is not None:
+        small["ssm"] = dataclasses.replace(
+            model.ssm, d_state=16, head_dim=16, chunk=32
+        )
+    small.update(overrides)
+    return dataclasses.replace(model, **small)
+
+
+# Registry ------------------------------------------------------------------
+
+_REGISTRY = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if not _REGISTRY:
+        _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> Sequence[str]:
+    if not _REGISTRY:
+        _load_all()
+    return sorted(_REGISTRY)
+
+
+def _load_all() -> None:
+    # Import every config module for registration side effects.
+    from repro.configs import (  # noqa: F401
+        glm4_9b,
+        qwen3_0_6b,
+        granite_34b,
+        nemotron_4_340b,
+        musicgen_medium,
+        mamba2_2_7b,
+        jamba_1_5_large,
+        qwen3_moe_30b_a3b,
+        qwen3_moe_235b_a22b,
+        phi_3_vision_4_2b,
+        llama_paper,
+    )

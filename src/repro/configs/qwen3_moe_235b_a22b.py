@@ -1,0 +1,11 @@
+"""Qwen3-235B-A22B [hf:Qwen/Qwen3-30B-A3B family]: 94L d=4096 64H GQA(kv=4),
+128 experts top-8, d_ff_expert=1536, V=151936, qk_norm, head_dim=128."""
+from repro.configs.base import ModelConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen3-moe-235b-a22b", family="moe",
+    n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4, head_dim=128,
+    d_ff=0, vocab_size=151936, ffn_act="swiglu", qk_norm=True,
+    rope_theta=1_000_000.0, dtype="bfloat16",
+    moe=MoEConfig(n_experts=128, top_k=8, d_ff_expert=1536),
+))

@@ -1,0 +1,31 @@
+# MeCeFO — the paper's contribution: neighbor-do-both fault tolerance with
+# (I) MHA backward skip-connections, (II) selective FFN recomputation, and
+# (III) low-rank FFN weight-gradient approximation.
+from repro.core.skipconn import grad_gate
+from repro.core.lowrank import (
+    lowrank_linear,
+    lowrank_linear_grouped,
+    svd_projection,
+    refresh_projections,
+    init_projections,
+    projection_structs,
+)
+from repro.core.ndb import NDBPlan, NDBContext, plan_to_masks
+from repro.core.recompute import remat_policy
+from repro.core.grad_sync import rescale_skipped_grads, compress_psum
+
+__all__ = [
+    "grad_gate",
+    "lowrank_linear",
+    "lowrank_linear_grouped",
+    "svd_projection",
+    "refresh_projections",
+    "init_projections",
+    "projection_structs",
+    "NDBPlan",
+    "NDBContext",
+    "plan_to_masks",
+    "remat_policy",
+    "rescale_skipped_grads",
+    "compress_psum",
+]

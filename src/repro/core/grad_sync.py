@@ -1,0 +1,86 @@
+"""Gradient synchronization pieces.
+
+1. ``rescale_skipped_grads`` — eq. (1): MHA weight gradients of layer l are
+   averaged over the *active* ranks only.  Our grad_gate zeroes the degraded
+   examples' contributions inside the global batch-mean, so the mean must be
+   rescaled by n / |N_l| per layer (computed from the keep mask).
+
+2. ``compress_psum`` — optional int8-quantized gradient all-reduce for the
+   explicit shard_map synchronization path (distributed-optimization trick;
+   composes with the beyond-paper low-rank factored sync in lowrank.py).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import block_layout
+
+Tree = Any
+
+
+def rescale_skipped_grads(grads: Tree, keep: jnp.ndarray, cfg: ModelConfig) -> Tree:
+    """Apply eq. (1)'s n/|N_l| correction to attention-mixer gradients.
+
+    grads: param-tree gradients (batch-mean semantics).
+    keep:  (n_layers, B) float mask — 1 where the example contributed MHA
+           gradients.
+    """
+    period = cfg.block_period
+    n_periods = cfg.n_layers // period
+    # (n_layers,) -> per-layer rescale n/|N_l|; guard fully-skipped layers.
+    active_frac = jnp.mean(keep, axis=1)  # (L,)
+    factor = jnp.where(active_frac > 0, 1.0 / jnp.maximum(active_frac, 1e-8), 0.0)
+    factor = factor.reshape(n_periods, period)  # scan layout
+
+    layers = list(grads["layers"])
+    for pos, (kind, _is_moe) in enumerate(block_layout(cfg)):
+        if kind != "attn":
+            continue  # technique I applies to MHA only (DESIGN §Arch-applicability)
+        f = factor[:, pos]  # (n_periods,)
+        mixer = {
+            name: g * f.reshape((-1,) + (1,) * (g.ndim - 1)).astype(g.dtype)
+            for name, g in layers[pos]["mixer"].items()
+        }
+        layers[pos] = dict(layers[pos], mixer=mixer)
+    return dict(grads, layers=tuple(layers))
+
+
+def loss_weight_correction(weight: jnp.ndarray) -> jnp.ndarray:
+    """Mean-loss rescale when whole DP ranks are dropped (elastic)."""
+    return jnp.where(jnp.mean(weight) > 0, 1.0 / jnp.maximum(jnp.mean(weight), 1e-8), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Quantized collective (shard_map path)
+# ---------------------------------------------------------------------------
+
+
+def compress_psum(tree: Tree, axis_name: str, method: str = "int8") -> Tree:
+    """psum a gradient pytree with optional int8 compression.
+
+    Must be called inside shard_map with `axis_name` bound.  int8 scheme:
+    a shared scale (psum-max) then int8 quantize → int32 accumulate psum →
+    dequantize.  Falls back to plain psum for small tensors (< 4096 elems).
+    """
+    if method == "none":
+        return jax.tree.map(lambda g: jax.lax.psum(g, axis_name), tree)
+    if method != "int8":
+        raise ValueError(method)
+
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g):
+        if g.size < 4096:
+            return jax.lax.psum(g, axis_name)
+        amax = jax.lax.pmax(jnp.max(jnp.abs(g)).astype(jnp.float32), axis_name)
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127)
+        acc = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        return (acc.astype(jnp.float32) * scale).astype(g.dtype)
+
+    del n
+    return jax.tree.map(one, tree)

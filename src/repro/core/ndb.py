@@ -1,0 +1,165 @@
+"""Neighbor-do-both (NDB) failure plans → per-(rank, layer) masks.
+
+The paper's placement: each DP rank is a pipeline of ``n_stages`` virtual
+stages (contiguous layer groups).  When the device at (rank i, stage s)
+fails, its neighbor stage in the same rank takes both workloads and applies
+MeCeFO's techniques to *all* layers it now hosts (Alg. 2/3: "node taking
+doubled workload").  Eq. (1) then averages MHA gradients over the unaffected
+ranks only.
+
+``NDBPlan`` is the pure bookkeeping object (hashable → compile-cache key for
+static mode); ``plan_to_masks`` lowers it to the arrays the jitted step
+consumes; ``NDBContext`` is what the model forward actually sees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import FrozenSet, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs.base import MeCeFOConfig, ModelConfig
+
+
+@dataclass(frozen=True)
+class NDBPlan:
+    """Which (dp_rank, stage) devices are failed right now."""
+
+    n_dp: int
+    n_stages: int
+    failed: FrozenSet[Tuple[int, int]] = frozenset()
+
+    # ---- derived ----------------------------------------------------------
+    def neighbor_of(self, rank: int, stage: int) -> Optional[int]:
+        """Stage that adopts (rank, stage)'s workload, or None if rank dies."""
+        for delta in range(1, self.n_stages):
+            cand = (stage - delta) % self.n_stages
+            if (rank, cand) not in self.failed:
+                return cand
+        return None
+
+    def degraded_stages(self, rank: int) -> FrozenSet[int]:
+        """Stages of `rank` whose layers run in degraded (MeCeFO) mode."""
+        out = set()
+        for (r, s) in self.failed:
+            if r != rank:
+                continue
+            nb = self.neighbor_of(r, s)
+            if nb is None:
+                continue  # whole rank dropped (elastic) — handled separately
+            out.add(s)   # failed stage's layers (run by neighbor, degraded)
+            out.add(nb)  # neighbor's own layers (doubled workload)
+        return frozenset(out)
+
+    def dropped_ranks(self) -> FrozenSet[int]:
+        """Ranks with every stage failed → excluded entirely (elastic DP)."""
+        out = set()
+        for r in range(self.n_dp):
+            if all((r, s) in self.failed for s in range(self.n_stages)):
+                out.add(r)
+        return frozenset(out)
+
+    def is_healthy(self) -> bool:
+        return not self.failed
+
+    def signature(self) -> Tuple:
+        """Compile-cache key for static mode."""
+        return (self.n_dp, self.n_stages, tuple(sorted(self.failed)))
+
+
+def stage_of_layer(layer: int, n_layers: int, n_stages: int) -> int:
+    per = -(-n_layers // n_stages)  # ceil
+    return min(layer // per, n_stages - 1)
+
+
+def plan_to_masks(plan: NDBPlan, cfg: ModelConfig, global_batch: int):
+    """Lower a plan to per-(layer, example) arrays.
+
+    Returns (keep, example_weight):
+      keep:           (n_layers, B) float32 — 1 = healthy backward,
+                      0 = degraded (skip MHA backward, low-rank Wgrad).
+      example_weight: (B,) float32 — 0 for examples of dropped DP ranks.
+    Examples map to DP ranks contiguously (how ('pod','data') shards dim 0).
+    """
+    L, B, n = cfg.n_layers, global_batch, plan.n_dp
+    if B % n != 0:
+        raise ValueError(f"global_batch {B} not divisible by n_dp {n}")
+    per = B // n
+    keep = np.ones((L, B), np.float32)
+    weight = np.ones((B,), np.float32)
+    dropped = plan.dropped_ranks()
+    for r in range(n):
+        sl = slice(r * per, (r + 1) * per)
+        if r in dropped:
+            weight[sl] = 0.0
+            keep[:, sl] = 0.0
+            continue
+        deg = plan.degraded_stages(r)
+        for layer in range(L):
+            if stage_of_layer(layer, L, plan.n_stages) in deg:
+                keep[layer, sl] = 0.0
+    return keep, weight
+
+
+@dataclass(frozen=True)
+class NDBContext:
+    """What the model forward consumes.
+
+    mode:
+      "off"      — healthy step: exact everywhere (keep/weight unused).
+      "dynamic"  — keep/weight are traced inputs; zero-recompile failover.
+      "static"   — keep/weight are baked constants (plan-specialized compile).
+      "degraded" — every example degraded (the neighbor-node / Table-6
+                   program): structurally-zero MHA cotangents (DCE-able),
+                   pure low-rank Wgrad, FFN recompute forced.
+    """
+
+    mode: str = "off"
+    keep: Optional[jnp.ndarray] = None          # (L, B)
+    example_weight: Optional[jnp.ndarray] = None  # (B,)
+    mecefo: MeCeFOConfig = field(default_factory=MeCeFOConfig)
+
+    @property
+    def active(self) -> bool:
+        return self.mode != "off"
+
+    def keep_for_layer(self, layer: int):
+        if self.mode == "off":
+            return 1.0
+        if self.mode == "degraded":
+            return 0.0
+        assert self.keep is not None
+        return self.keep[layer]
+
+    def lowrank_mode(self) -> str:
+        if self.mode == "off" or not self.mecefo.lowrank_wgrad:
+            return "exact"
+        if self.mode == "degraded":
+            return "degraded_sync" if self.mecefo.lowrank_sync else "degraded"
+        return "mixed"
+
+    def recompute_ffn(self) -> bool:
+        return self.mode == "degraded" and self.mecefo.recompute_ffn
+
+
+def context_for(
+    mecefo: MeCeFOConfig,
+    plan: Optional[NDBPlan],
+    cfg: ModelConfig,
+    global_batch: int,
+) -> NDBContext:
+    """Build the NDBContext a trainer passes into the step."""
+    if mecefo.mode == "off" or plan is None or plan.is_healthy():
+        return NDBContext(mode="off", mecefo=mecefo)
+    keep, weight = plan_to_masks(plan, cfg, global_batch)
+    if mecefo.mode == "static":
+        return NDBContext(
+            mode="static", keep=jnp.asarray(keep), example_weight=jnp.asarray(weight),
+            mecefo=mecefo,
+        )
+    return NDBContext(
+        mode="dynamic", keep=jnp.asarray(keep), example_weight=jnp.asarray(weight),
+        mecefo=mecefo,
+    )

@@ -1,0 +1,78 @@
+"""Technique I — skip-connection: drop the MHA module in *backward* only.
+
+The paper (Alg. 3, Fig. 2) keeps the MHA forward intact but, on degraded
+(rank, layer) pairs, propagates activation gradients through the residual
+branch only and contributes **no** MHA weight gradients from those ranks
+(eq. (1) then re-averages over the unaffected ranks — see grad_sync.py).
+
+We express this as a *gradient gate*: an identity-in-forward op whose
+backward multiplies the cotangent by a per-example keep mask.  Wrapping the
+MHA sublayer output in ``grad_gate(h, keep)`` makes reverse-mode AD deliver
+``dy * keep`` into the attention vjp — zeroing (a) dX through the MHA branch
+and (b) every MHA weight-gradient contribution from masked examples, which is
+exactly the paper's semantics.  In ``static`` NDB mode with an all-degraded
+segment, the cotangent is structurally zero and XLA's dead-code elimination
+removes the entire MHA backward (Wgrad + Dgrad) and its saved residuals —
+realizing the paper's memory/compute savings in the compiled program.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.custom_vjp
+def grad_gate(x, keep):
+    """Identity in forward; backward scales the cotangent by ``keep``.
+
+    Args:
+      x:    (..., B, S, D)-like activation, batch on dim 0.
+      keep: scalar, (B,) or broadcastable mask. 1.0 = keep gradients,
+            0.0 = skip (degraded example). May be a traced value
+            (``dynamic`` NDB) or a Python/weak constant (``static`` NDB,
+            enabling DCE of the gated branch).
+    """
+    return x
+
+
+def _gate_fwd(x, keep):
+    return x, keep
+
+
+def _gate_bwd(keep, dy):
+    k = jnp.asarray(keep, dy.dtype)
+    if k.ndim == 1:  # per-example (B,) -> broadcast over trailing dims
+        k = k.reshape(k.shape + (1,) * (dy.ndim - 1))
+    return (dy * k, None)
+
+
+grad_gate.defvjp(_gate_fwd, _gate_bwd)
+
+
+def skip_stats(keep) -> jnp.ndarray:
+    """Fraction of examples whose gradient survives (|N_l| / n in eq. (1))."""
+    return jnp.mean(jnp.asarray(keep, jnp.float32))
+
+
+@jax.custom_vjp
+def cast_grad(x):
+    """Identity whose backward casts the cotangent to the primal dtype.
+
+    Placed at block boundaries so the reverse pass's residual-stream
+    cotangent is bf16 (standard TPU mixed precision) — otherwise f32
+    intermediates from norm/softmax vjps leak across layer boundaries and
+    double both HBM traffic and the TP all-reduce payloads.
+    """
+    return x
+
+
+def _cg_fwd(x):
+    # residuals must be JAX types: carry the dtype via a zero-size array
+    return x, jnp.zeros((0,), x.dtype)
+
+
+def _cg_bwd(proto, dy):
+    return (dy.astype(proto.dtype),)
+
+
+cast_grad.defvjp(_cg_fwd, _cg_bwd)

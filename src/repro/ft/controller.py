@@ -1,0 +1,134 @@
+"""Failover controller: turns failure events into NDB execution plans.
+
+Responsibilities (Alg. 1 lines 3–11, adapted to SPMD — DESIGN.md §3):
+  * track the current :class:`NDBPlan`, rebuild contexts when it changes;
+  * account recovery traffic — on failure the neighbor fetches the failed
+    node's weights + optimizer state from a peer DP rank (replicated mode)
+    or from the last checkpoint (FSDP mode);
+  * elastic DP-drop when a failure domain has no healthy neighbor;
+  * straggler mitigation: a straggling device is treated exactly like a
+    failed one (Appendix B) — same NDB machinery, different detector;
+  * compile-cache keying for static mode (one specialized step per plan
+    signature).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.configs.base import MeCeFOConfig, ModelConfig
+from repro.core.ndb import NDBContext, NDBPlan, context_for, stage_of_layer
+
+
+@dataclass
+class RecoveryAccounting:
+    """Bytes moved + stall estimates for the throughput model."""
+
+    peer_fetch_bytes: int = 0
+    ckpt_restore_bytes: int = 0
+    n_failovers: int = 0
+    n_recoveries: int = 0
+    n_rank_drops: int = 0
+
+
+@dataclass
+class FTController:
+    cfg: ModelConfig
+    mecefo: MeCeFOConfig
+    n_dp: int
+    n_stages: int
+    global_batch: int
+    params_replicated: bool = True  # False under FSDP -> checkpoint recovery
+    plan: NDBPlan = None  # type: ignore[assignment]
+    accounting: RecoveryAccounting = field(default_factory=RecoveryAccounting)
+    straggler_threshold: float = 3.0  # x median step time
+    _step_times: list = field(default_factory=list)
+
+    def __post_init__(self):
+        if self.plan is None:
+            self.plan = NDBPlan(self.n_dp, self.n_stages, frozenset())
+
+    # ------------------------------------------------------------------
+    def stage_param_bytes(self) -> int:
+        """Approx bytes of one stage's params + optimizer state."""
+        from repro.models.params import count_params
+
+        total = count_params(self.cfg)
+        per_stage = total // self.n_stages
+        bytes_per_param = 2 + 4 + 4  # bf16 param + fp32 m + fp32 v
+        return per_stage * bytes_per_param
+
+    def update_plan(self, new_plan: NDBPlan) -> bool:
+        """Apply a new plan; account recovery traffic. True if changed."""
+        if new_plan.failed == self.plan.failed:
+            self.plan = new_plan
+            return False
+        newly_failed = new_plan.failed - self.plan.failed
+        recovered = self.plan.failed - new_plan.failed
+        for _dev in newly_failed:
+            self.accounting.n_failovers += 1
+            if self.params_replicated:
+                self.accounting.peer_fetch_bytes += self.stage_param_bytes()
+            else:
+                self.accounting.ckpt_restore_bytes += self.stage_param_bytes()
+        for _dev in recovered:
+            # original node refetches its stage from the neighbor (Alg. 1 l.10)
+            self.accounting.n_recoveries += 1
+            self.accounting.peer_fetch_bytes += self.stage_param_bytes()
+        drops = new_plan.dropped_ranks()
+        self.accounting.n_rank_drops += len(
+            drops - self.plan.dropped_ranks()
+        )
+        self.plan = new_plan
+        return True
+
+    def context(self) -> NDBContext:
+        return context_for(self.mecefo, self.plan, self.cfg, self.global_batch)
+
+    def compile_key(self) -> Tuple:
+        """Cache key for the specialized (static-mode) step executable."""
+        if self.mecefo.mode != "static" or self.plan.is_healthy():
+            return ("healthy",)
+        return self.plan.signature()
+
+    # ------------------------------------------------------------------
+    # Straggler mitigation (Appendix B): reuse NDB for slow devices.
+    # ------------------------------------------------------------------
+    def observe_step_time(self, seconds: float) -> None:
+        self._step_times.append(seconds)
+        if len(self._step_times) > 100:
+            self._step_times.pop(0)
+
+    def detect_straggler(self, per_device_times: Dict[Tuple[int, int], float]):
+        """Mark devices slower than threshold x median as 'failed' (NDB)."""
+        if not per_device_times:
+            return None
+        times = np.array(list(per_device_times.values()))
+        med = float(np.median(times))
+        slow = {
+            dev
+            for dev, t in per_device_times.items()
+            if t > self.straggler_threshold * med
+        }
+        if not slow:
+            return None
+        return NDBPlan(
+            self.n_dp, self.n_stages, frozenset(self.plan.failed | slow)
+        )
+
+    # ------------------------------------------------------------------
+    def degraded_layer_fraction(self) -> float:
+        """Fraction of (rank, layer) cells in degraded mode (cost model)."""
+        if self.plan.is_healthy():
+            return 0.0
+        L = self.cfg.n_layers
+        cells = 0
+        for r in range(self.n_dp):
+            deg = self.plan.degraded_stages(r)
+            for layer in range(L):
+                if stage_of_layer(layer, L, self.n_stages) in deg:
+                    cells += 1
+        return cells / (self.n_dp * L)

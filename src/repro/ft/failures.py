@@ -1,0 +1,107 @@
+"""Failure simulation — Table 1 scenarios as memoryless (Poisson) processes.
+
+Per Appendix D ("Failure Modeling"), node crashes are modeled as memoryless:
+each healthy (dp_rank, stage) device fails with a constant per-step
+probability derived from the scenario's failure interval and the step time;
+failed devices recover after the scenario's recovery time.  Appendix C.3's
+observation — that the *ratio* of rates matters, not absolute values — is
+what lets the CPU-scale benchmarks use small step counts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core.ndb import NDBPlan
+
+
+@dataclass(frozen=True)
+class FailureScenario:
+    name: str
+    fail_interval_s: float     # expected time between failures (whole cluster)
+    recover_time_s: float      # time for a failed node to come back
+
+    def per_step_fail_prob(self, step_time_s: float, n_devices: int) -> float:
+        # cluster-level Poisson rate spread uniformly over devices
+        lam = step_time_s / self.fail_interval_s
+        return min(lam / max(n_devices, 1), 1.0)
+
+    def recovery_steps(self, step_time_s: float) -> int:
+        return max(int(round(self.recover_time_s / step_time_s)), 1)
+
+
+# Table 1 (paper) — plus Appendix C.3's "Higher Frequency" scenario.
+SCENARIOS: Dict[str, FailureScenario] = {
+    "none": FailureScenario("none", float("inf"), 0.0),
+    "low": FailureScenario("low", 2 * 3600.0, 4 * 3600.0),
+    "mid": FailureScenario("mid", 1 * 3600.0, 3 * 3600.0),
+    "high": FailureScenario("high", 0.5 * 3600.0, 2 * 3600.0),
+    "higher": FailureScenario("higher", 600.0, 2400.0),
+}
+
+
+@dataclass
+class FailureEvent:
+    step: int
+    kind: str  # "fail" | "recover"
+    device: Tuple[int, int]  # (dp_rank, stage)
+
+
+class FailureProcess:
+    """Stateful per-step simulator over an (n_dp × n_stages) device grid."""
+
+    def __init__(
+        self,
+        scenario: FailureScenario,
+        n_dp: int,
+        n_stages: int,
+        step_time_s: float,
+        seed: int = 0,
+        persistent_subset: Optional[Set[Tuple[int, int]]] = None,
+    ):
+        self.scenario = scenario
+        self.n_dp = n_dp
+        self.n_stages = n_stages
+        self.step_time_s = step_time_s
+        self.rng = np.random.default_rng(seed)
+        self.failed_until: Dict[Tuple[int, int], int] = {}
+        self.events: List[FailureEvent] = []
+        # Appendix C.2: asymmetric failures restricted to a fixed subset.
+        self.persistent_subset = persistent_subset
+
+    def step(self, step: int) -> NDBPlan:
+        n_dev = self.n_dp * self.n_stages
+        p = self.scenario.per_step_fail_prob(self.step_time_s, n_dev)
+        rec = self.scenario.recovery_steps(self.step_time_s)
+        # recoveries
+        for dev, until in list(self.failed_until.items()):
+            if step >= until:
+                del self.failed_until[dev]
+                self.events.append(FailureEvent(step, "recover", dev))
+        # new failures
+        if p > 0:
+            for r in range(self.n_dp):
+                for s in range(self.n_stages):
+                    dev = (r, s)
+                    if dev in self.failed_until:
+                        continue
+                    if (
+                        self.persistent_subset is not None
+                        and dev not in self.persistent_subset
+                    ):
+                        continue
+                    if self.rng.random() < p:
+                        self.failed_until[dev] = step + rec
+                        self.events.append(FailureEvent(step, "fail", dev))
+        return NDBPlan(
+            n_dp=self.n_dp,
+            n_stages=self.n_stages,
+            failed=frozenset(self.failed_until),
+        )
+
+    def inject(self, step: int, device: Tuple[int, int], down_steps: int) -> None:
+        """Deterministic injection (tests / examples)."""
+        self.failed_until[device] = step + down_steps
+        self.events.append(FailureEvent(step, "fail", device))

@@ -1,0 +1,100 @@
+"""Flash decode — single-token GQA attention against a long KV cache.
+
+The decode_32k / long_500k serving hot spot: one query row per sequence
+attends to a (Smax, KV, hd) cache.  Online softmax over KV blocks with the
+(1 × hd) accumulator in VMEM; the cache is streamed block-by-block, the
+length mask handles cur_len < Smax.
+
+Grid: (batch, q_heads, Smax/Bk) — KV-block axis innermost (sequential on
+TPU), scratch carries (m, l, acc) across blocks.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            bk, scale):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    cur_len = len_ref[0]
+    k_start = ki * bk
+
+    def _compute():
+        q = q_ref[0, 0, 0, :].astype(jnp.float32)          # (hd,)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # (bk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jnp.sum(k * q[None, :], axis=1) * scale        # (bk,)
+        pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bk,), 0)
+        s = jnp.where(pos < cur_len, s, NEG_INF)
+        m_prev = m_ref[0, 0]
+        m_cur = jnp.maximum(m_prev, jnp.max(s))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        l_ref[0, 0] = l_ref[0, 0] * alpha + jnp.sum(p)
+        m_ref[0, 0] = m_cur
+        acc_ref[0, :] = acc_ref[0, :] * alpha + jnp.sum(
+            p[:, None] * v, axis=0
+        )
+
+    # skip cache blocks entirely past the valid length
+    pl.when(k_start < cur_len)(_compute)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[0, 0], 1e-30)
+        o_ref[0, 0, 0, :] = (acc_ref[0, :] / denom).astype(o_ref.dtype)
+
+
+def flash_decode(
+    q: jnp.ndarray,        # (B, 1, H, hd)
+    k_cache: jnp.ndarray,  # (B, Smax, KV, hd)
+    v_cache: jnp.ndarray,
+    cur_len,               # scalar int32 — valid cache positions
+    *,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, _, H, hd = q.shape
+    _, Smax, KV, _ = k_cache.shape
+    assert H % KV == 0
+    g = H // KV
+    bk = min(block_k, Smax)
+    assert Smax % bk == 0, (Smax, bk)
+    scale = 1.0 / math.sqrt(hd)
+    lens = jnp.full((1,), cur_len, jnp.int32)
+
+    kernel = functools.partial(_kernel, bk=bk, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, Smax // bk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, hd), lambda b, h, ki: (b, 0, h, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, ki: (b, ki, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, ki: (b, ki, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd), lambda b, h, ki: (b, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, q, k_cache, v_cache)

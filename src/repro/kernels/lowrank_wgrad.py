@@ -1,0 +1,73 @@
+"""Low-rank Wgrad projection — Pallas TPU kernel (MeCeFO technique III).
+
+Computes ``A = (x @ V1)^T @ dy`` streamed over token blocks: the (Bt × r)
+projected activations never leave VMEM, so HBM traffic is x + dy read once
+plus the tiny (r × m) result — the paper's eq. (2) contraction order fused
+into one pass.  ``dW = V1 @ A`` is a small follow-up matmul (ops.py).
+
+Grid: (m/Bm, T/Bt) with the token axis innermost; the (r × Bm) accumulator
+lives in VMEM scratch across token blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, v1_ref, dy_ref, a_ref, acc_ref):
+    ti = pl.program_id(1)
+    nt = pl.num_programs(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)      # (bt, n)
+    v1 = v1_ref[...].astype(jnp.float32)    # (n, r)
+    dy = dy_ref[...].astype(jnp.float32)    # (bt, bm)
+    p = jax.lax.dot_general(                 # (bt, r) — stays in VMEM
+        x, v1, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] += jax.lax.dot_general(     # (r, bm)
+        p, dy, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ti == nt - 1)
+    def _finish():
+        a_ref[...] = acc_ref[...].astype(a_ref.dtype)
+
+
+def lowrank_wgrad_project(
+    x: jnp.ndarray,   # (T, n) activations
+    dy: jnp.ndarray,  # (T, m) output cotangent
+    v1: jnp.ndarray,  # (n, r) projection
+    *,
+    block_t: int = 256,
+    block_m: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns A = (x @ v1)^T @ dy of shape (r, m)."""
+    T, n = x.shape
+    _, m = dy.shape
+    r = v1.shape[1]
+    bt = min(block_t, T)
+    bm = min(block_m, m)
+    assert T % bt == 0 and m % bm == 0, (T, bt, m, bm)
+    grid = (m // bm, T // bt)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, n), lambda mi, ti: (ti, 0)),
+            pl.BlockSpec((n, r), lambda mi, ti: (0, 0)),
+            pl.BlockSpec((bt, bm), lambda mi, ti: (ti, mi)),
+        ],
+        out_specs=pl.BlockSpec((r, bm), lambda mi, ti: (0, mi)),
+        out_shape=jax.ShapeDtypeStruct((r, m), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((r, bm), jnp.float32)],
+        interpret=interpret,
+    )(x, v1, dy)

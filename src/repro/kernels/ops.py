@@ -1,0 +1,58 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``use_pallas`` policy: on CPU (this container) the wrappers run the kernels
+in interpret mode when asked, but models default to the pure-jnp reference
+path so the dry-run lowers natively; on TPU pass ``interpret=False``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import flash_decode as _fd
+from repro.kernels import lowrank_wgrad as _lw
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import swiglu as _sg
+from repro.kernels import ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128, interpret=True):
+    return _fa.flash_attention(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode(q, k_cache, v_cache, cur_len, *, block_k=512, interpret=True):
+    return _fd.flash_decode(
+        q, k_cache, v_cache, cur_len, block_k=block_k, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_m", "interpret"))
+def lowrank_wgrad(x, dy, v1, *, block_t=256, block_m=512, interpret=True):
+    """Full technique-III Wgrad: dW = v1 @ ((x v1)^T dy)."""
+    a = _lw.lowrank_wgrad_project(
+        x, dy, v1, block_t=block_t, block_m=block_m, interpret=interpret
+    )
+    return (v1.astype(jnp.float32) @ a).astype(v1.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
+def swiglu(g, u, *, block_rows=256, block_cols=512, interpret=True):
+    return _sg.swiglu(
+        g, u, block_rows=block_rows, block_cols=block_cols, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, scale, eps=1e-5, *, block_rows=256, interpret=True):
+    return _rn.rmsnorm(x, scale, eps, block_rows=block_rows, interpret=interpret)
+
+
+__all__ = ["flash_attention", "flash_decode", "lowrank_wgrad", "swiglu", "rmsnorm", "ref"]

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, Sq, KV, g, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kf) / jnp.sqrt(hd)
+    if causal:
+        Sk = k.shape[1]
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, vf)
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def lowrank_wgrad_project_ref(x, dy, v1):
+    """A = (x @ v1)^T @ dy in fp32."""
+    p = x.astype(jnp.float32) @ v1.astype(jnp.float32)
+    return p.T @ dy.astype(jnp.float32)
+
+
+def lowrank_wgrad_ref(x, dy, v1):
+    """Full eq. (2): dW = v1 @ (x v1)^T dy."""
+    return v1.astype(jnp.float32) @ lowrank_wgrad_project_ref(x, dy, v1)
+
+
+def swiglu_ref(g, u):
+    return (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(
+        g.dtype
+    )
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+def flash_decode_ref(q, k_cache, v_cache, cur_len):
+    """q: (B, 1, H, hd); caches: (B, Smax, KV, hd); mask pos >= cur_len."""
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    g = H // KV
+    qg = q.reshape(B, KV, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache.astype(jnp.float32))
+    s = s / jnp.sqrt(hd)
+    valid = jnp.arange(k_cache.shape[1]) < cur_len
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)

@@ -1,0 +1,48 @@
+"""RMSNorm — Pallas TPU kernel (memory-bound, 2×/sublayer).
+
+One row-block pass: fp32 mean-of-squares, rsqrt, scale — read x once,
+write once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)  # (br, d)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm(
+    x: jnp.ndarray,
+    scale: jnp.ndarray,
+    eps: float = 1e-5,
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    shape = x.shape
+    d = shape[-1]
+    x2 = x.reshape(-1, d)
+    R = x2.shape[0]
+    br = min(block_rows, R)
+    while R % br:
+        br //= 2
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(R // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, d), x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    return out.reshape(shape)

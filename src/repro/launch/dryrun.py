@@ -1,0 +1,262 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede any jax import/initialization: jax locks the device count on
+# first init.  The dry-run (and ONLY the dry-run) builds the production mesh
+# out of 512 placeholder host devices.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this AOT-compiles the real train/prefill/decode step with full
+production shardings (no allocation — all inputs are ShapeDtypeStructs),
+then records:
+  * compiled.memory_analysis()  — proves the cell fits per-device HBM,
+  * compiled.cost_analysis()    — per-device FLOPs / bytes for §Roofline,
+  * the collective schedule parsed from the compiled HLO.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--mesh single|multi|both] [--ndb off|degraded|dynamic]
+      [--out experiments/dryrun] [--force] [--list]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import (
+    MeCeFOConfig,
+    ParallelConfig,
+    SHAPES,
+    TrainConfig,
+    get_config,
+    list_configs,
+    shape_applicable,
+)
+
+ASSIGNED = [
+    "glm4-9b",
+    "qwen3-0.6b",
+    "granite-34b",
+    "nemotron-4-340b",
+    "musicgen-medium",
+    "mamba2-2.7b",
+    "jamba-1.5-large-398b",
+    "qwen3-moe-30b-a3b",
+    "qwen3-moe-235b-a22b",
+    "phi-3-vision-4.2b",
+]
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    ndb: str = "off",
+    parallel: ParallelConfig = None,
+    out_dir: str = "experiments/dryrun",
+    force: bool = False,
+    verbose: bool = True,
+    variant: str = "",
+    causal_slice: bool = False,
+    pallas: bool = False,
+    sharding_mode: str = "tp_fsdp",
+    accum: int = 0,
+    remat: str = "",
+    sequence_parallel: bool = False,
+    bf16_grad_reduce: bool = False,
+    lowrank_sync: bool = False,
+):
+    """Lower+compile one cell; returns the roofline report dict (or skip)."""
+    import dataclasses
+
+    from repro.launch.hlo_cost import analyze_detailed
+    from repro.launch.mesh import make_production_mesh, mesh_shape_dict
+    from repro.launch.roofline import (
+        RooflineReport,
+        model_flops,
+        summarize,
+    )
+    from repro.launch.specs import input_specs, ndb_specs, batch_axes_for
+    from repro.launch.state import state_structs
+    from repro.launch.steps import (
+        build_rules,
+        make_decode_step,
+        make_prefill_step,
+        make_train_step,
+    )
+    from repro.models.params import param_structs
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    tag = f"{arch}__{shape_name}__{mesh_name}" + (f"__{ndb}" if ndb != "off" else "")
+    if variant:
+        tag += f"__{variant}"
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            cached = json.load(f)
+        if verbose:
+            print(f"[cached] {tag}")
+        return cached
+
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "skipped": reason}
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=2)
+        if verbose:
+            print(f"[skip]   {tag}: {reason}")
+        return rec
+
+    parallel = parallel or ParallelConfig()
+    if sharding_mode != "tp_fsdp":
+        parallel = dataclasses.replace(parallel, sharding_mode=sharding_mode)
+    if remat:
+        parallel = dataclasses.replace(parallel, remat=remat)
+    if sequence_parallel:
+        parallel = dataclasses.replace(parallel, sequence_parallel=True)
+    if bf16_grad_reduce:
+        parallel = dataclasses.replace(parallel, grad_compression="bf16")
+    if accum:
+        parallel = dataclasses.replace(parallel, accum=accum)
+    train = TrainConfig()
+    mecefo = MeCeFOConfig(
+        mode="off" if ndb == "off" else ("static" if ndb == "degraded" else "dynamic"),
+        lowrank_sync=lowrank_sync,
+    )
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    msd = mesh_shape_dict(mesh)
+    n_dev = mesh.devices.size
+    rules = build_rules(cfg, mesh, parallel)
+    if shape.kind == "train" and parallel.accum == 1:
+        from repro.launch.steps import default_accum
+
+        parallel = dataclasses.replace(
+            parallel, accum=default_accum(cfg, shape, mesh, parallel)
+        )
+
+    from repro.launch.steps import build_flags
+
+    flags = build_flags(cfg, parallel, mesh, shape)
+    if causal_slice:
+        flags = dataclasses.replace(flags, causal_slice=True)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            jitted, _, _, _ = make_train_step(
+                cfg, train, parallel, mecefo, mesh, shape,
+                ndb_mode=("off" if ndb == "off" else ndb), flags=flags,
+            )
+            sstructs = state_structs(cfg, train, mecefo)
+            bstructs, _ = input_specs(cfg, shape, rules, msd)
+            if ndb == "dynamic":
+                bax = batch_axes_for(shape.global_batch, rules, msd)
+                nstructs, _ = ndb_specs(cfg, shape.global_batch, bax)
+                lowered = jitted.lower(sstructs, bstructs, nstructs)
+            else:
+                lowered = jitted.lower(sstructs, bstructs)
+        elif shape.kind == "prefill":
+            jitted, _, _ = make_prefill_step(cfg, parallel, mesh, shape,
+                                             flags=flags)
+            bstructs, _ = input_specs(cfg, shape, rules, msd)
+            lowered = jitted.lower(param_structs(cfg), bstructs)
+        else:  # decode
+            jitted, _, _ = make_decode_step(cfg, parallel, mesh, shape)
+            dstructs, _ = input_specs(cfg, shape, rules, msd)
+            lowered = jitted.lower(
+                param_structs(cfg), dstructs["caches"], dstructs["token"],
+                dstructs["cur_len"],
+            )
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    subst = ("flashsubst", "bqkgh", "bkgqs") if pallas else ()
+    cost, hc = analyze_detailed(hlo, subst)  # loop-aware walker (hlo_cost.py)
+
+    report = RooflineReport(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_name,
+        n_devices=n_dev,
+        hlo_flops_per_dev=float(cost.flops),
+        hlo_bytes_per_dev=float(cost.bytes),
+        collective_bytes_per_dev=float(cost.collective_bytes),
+        collectives={k: float(v) for k, v in cost.collectives.items()},
+        model_flops_global=model_flops(cfg, shape),
+        bytes_per_dev_peak=float(
+            ma.temp_size_in_bytes + ma.argument_size_in_bytes + ma.output_size_in_bytes
+            - ma.alias_size_in_bytes
+        ),
+        compile_seconds=compile_s,
+        extras={
+            "ndb": ndb,
+            "variant": variant or "baseline",
+            "causal_slice": causal_slice,
+            "pallas_subst": pallas,
+            "sharding_mode": parallel.sharding_mode,
+            "accum": parallel.accum,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "xla_cost_flops_per_dev": float(ca.get("flops", 0.0)),
+            "xla_cost_bytes_per_dev": float(ca.get("bytes accessed", 0.0)),
+            "hlo_warnings": hc.warnings[:5],
+        },
+    )
+    rec = report.to_dict()
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=2)
+    if verbose:
+        print(f"[ok {compile_s:6.1f}s] {summarize(report)}", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all assigned)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--ndb", default="off", choices=["off", "degraded", "dynamic"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ASSIGNED
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    if args.list:
+        for a in archs:
+            for s in shapes:
+                print(a, s)
+        return
+    failures = []
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(a, s, mp, ndb=args.ndb, out_dir=args.out, force=args.force)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    failures.append((a, s, mp, repr(e)))
+                    print(f"[FAIL] {a} {s} {'multi' if mp else 'single'}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        raise SystemExit(1)
+    print("\nall cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,644 @@
+"""Loop-aware cost analysis over optimized HLO text.
+
+``compiled.cost_analysis()`` visits each instruction once — a scan-over-layers
+program under-counts by the trip count, and its byte model charges unfused
+intermediate traffic.  This walker fixes both:
+
+  * while loops: body/condition costs are multiplied by the trip count
+    (extracted from the condition's `compare(iter, constant), direction=LT`);
+  * fusions: charged operand+result bytes only (fusion-internal traffic is
+    free, as on a real TPU), while dots inside fused computations still count
+    their FLOPs;
+  * data-movement ops get HloCostAnalysis-style models (gather/DUS charge the
+    slice, not the full table);
+  * collectives: operand bytes, summed with loop multiplicity, per kind.
+
+Everything is *per device* (the module is post-SPMD).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e5m2": 1, "f8e4m3fn": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<rest>.*)$"
+)
+_OPCODE_RE = re.compile(r"^(?P<op>[a-z][a-z0-9\-]*)\(")
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+FREE_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "add-dependency", "partition-id", "replica-id", "iota",
+    "while", "conditional", "call", "fusion-marker", "opt-barrier",
+    "optimization-barrier", "reshape", "get-dimension-size",
+    # async -done re-lists the -start's payload: count the start only
+    "all-gather-done", "all-reduce-done", "collective-permute-done",
+    "async-done", "copy-done",
+}
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_shapes: List[Tuple[str, Tuple[int, ...]]]
+    operands: List[str]
+    attrs: str
+    is_root: bool = False
+    args_text: str = ""
+
+    @property
+    def result_bytes(self) -> int:
+        return sum(_bytes(dt, dims) for dt, dims in self.result_shapes)
+
+
+def _bytes(dtype: str, dims: Tuple[int, ...]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, List[Tuple[str, Tuple[int, ...]]]] = field(default_factory=dict)
+
+
+def parse_module(txt: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for line in txt.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if not line.startswith(" ") and stripped.endswith("{"):
+            # computation header: `%name (params) -> type {` or `ENTRY %name ...`
+            m = re.match(r"(ENTRY\s+)?%?([\w.\-]+)\s*\(", stripped)
+            if m:
+                cur = Computation(m.group(2), [])
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        is_root = line.lstrip().startswith("ROOT ")
+        rest = m.group("rest")
+        # result type: tuple `(...)` or single `dtype[dims]{layout}`
+        if rest.startswith("("):
+            depth, i = 0, 0
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            rtype, rest2 = rest[: i + 1], rest[i + 1:].lstrip()
+        else:
+            sp = rest.find(" ")
+            if sp < 0:
+                continue
+            rtype, rest2 = rest[:sp], rest[sp + 1:]
+        om = _OPCODE_RE.match(rest2)
+        if not om:
+            continue
+        opcode = om.group("op")
+        argstr = rest2[om.end():]
+        depth, end = 1, len(argstr)
+        for i, ch in enumerate(argstr):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = re.findall(r"%([\w.\-]+)", argstr[:end])
+        attrs = argstr[end + 1:]
+        shapes = [(dt, tuple(int(x) for x in dims.split(",") if x))
+                  for dt, dims in _SHAPE_RE.findall(rtype)]
+        instr = Instr(m.group("name"), opcode, shapes, operands, attrs,
+                      is_root, argstr[:end])
+        cur.instrs.append(instr)
+        cur.shapes[instr.name] = shapes
+    return comps, entry
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: Dict[str, float] = field(default_factory=dict)
+    transcendentals: float = 0.0
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.collective_bytes += other.collective_bytes
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + v
+        self.transcendentals += other.transcendentals
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(
+            self.flops * k,
+            self.bytes * k,
+            self.collective_bytes * k,
+            {n: v * k for n, v in self.collectives.items()},
+            self.transcendentals * k,
+        )
+
+
+class HloCost:
+    def __init__(self, txt: str, subst_scopes: Tuple[str, ...] = ()):
+        self.comps, self.entry = parse_module(txt)
+        self._memo: Dict[str, Cost] = {}
+        self.warnings: List[str] = []
+        # instructions whose op_name metadata matches a subst scope are
+        # treated as fused into a Pallas kernel: FLOPs kept, HBM bytes
+        # dropped (the kernel keeps the region in VMEM), collectives kept.
+        self.subst_scopes = subst_scopes
+
+    def _substituted(self, ins: Instr) -> bool:
+        if not self.subst_scopes:
+            return False
+        if any(m in ins.attrs for m in self.subst_scopes):
+            return True
+        # transposed (backward) ops can lose the scope from their own
+        # metadata; a fusion counts as substituted if any inner instruction
+        # carries the marker
+        if ins.opcode == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+            comp = self.comps.get(m.group(1)) if m else None
+            if comp is not None:
+                key = "_subst_" + comp.name
+                if key in self._memo:
+                    return bool(self._memo[key])
+                hit = any(
+                    any(s in i.attrs for s in self.subst_scopes)
+                    for i in comp.instrs
+                )
+                self._memo[key] = hit  # type: ignore[assignment]
+                return hit
+        return False
+
+    def _substituted_or_consumes(self, comp: Computation, ins: Instr) -> bool:
+        """One-hop operand propagation: a dot whose operand is produced by a
+        substituted instruction (e.g. the score tile) is kernel-internal."""
+        if self._substituted(ins):
+            return True
+        if ins.opcode not in ("dot", "fusion"):
+            return False
+        defs = {i.name: i for i in comp.instrs}
+        for o in ins.operands:
+            d = defs.get(o)
+            if d is not None and self._substituted(d):
+                return True
+        return False
+
+    # -- shape lookup across computations ---------------------------------
+    def _shape_of(self, comp: Computation, name: str):
+        if name in comp.shapes:
+            return comp.shapes[name]
+        for c in self.comps.values():
+            if name in c.shapes:
+                return c.shapes[name]
+        return []
+
+    def _operand_bytes(self, comp: Computation, instr: Instr, idx=None) -> float:
+        ops = instr.operands if idx is None else [instr.operands[i] for i in idx]
+        tot = 0.0
+        for o in ops:
+            for dt, dims in self._shape_of(comp, o):
+                tot += _bytes(dt, dims)
+        return tot
+
+    def _collective_payload_bytes(self, comp: Computation, ins: Instr) -> float:
+        """Collective payload at its *true* dtype.
+
+        XLA-CPU float-normalization promotes bf16 collectives to f32 by
+        wrapping them in convert fusions; a TPU compile keeps them bf16.
+        If an operand is produced by a pure convert chain/fusion from a
+        narrower dtype, charge the narrower width.
+        """
+        total = 0.0
+        defs = {i.name: i for i in comp.instrs}
+        conv_ops = {"parameter", "convert", "bitcast", "copy", "tuple",
+                    "get-tuple-element", "reshape"}
+        for o in ins.operands:
+            shapes = self._shape_of(comp, o)
+            nbytes = sum(_bytes(dt, dims) for dt, dims in shapes)
+            d = defs.get(o)
+            src_width = None
+            if d is not None and d.opcode == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", d.attrs)
+                fc = self.comps.get(m.group(1)) if m else None
+                if fc is not None and all(i.opcode in conv_ops for i in fc.instrs):
+                    # any bf16 link in the pure-convert chain proves the
+                    # payload is bf16-representable (TPU would ship bf16)
+                    widths = [
+                        _DTYPE_BYTES.get(dt, 4)
+                        for i in fc.instrs
+                        for dt, _ in i.result_shapes
+                        if _DTYPE_BYTES.get(dt, 4) > 0
+                    ]
+                    if widths:
+                        src_width = min(widths)
+            elif d is not None and d.opcode == "convert":
+                src = self._shape_of(comp, d.operands[0]) if d.operands else []
+                if src:
+                    src_width = min(_DTYPE_BYTES.get(dt, 4) for dt, _ in src)
+            if src_width is not None and shapes:
+                cur_width = max(_DTYPE_BYTES.get(dt, 4) for dt, _ in shapes)
+                if src_width < cur_width:
+                    nbytes = nbytes * src_width / cur_width
+            total += nbytes
+        return total
+
+    def _ar_is_rs(self, comp: Computation, ins: Instr) -> bool:
+        """True if every use of this all-reduce is a (static/dynamic) slice
+        or a get-tuple-element feeding only slices."""
+        slicers = {"dynamic-slice", "slice"}
+        passthrough = {"get-tuple-element", "convert", "bitcast", "reshape",
+                       "copy"}
+
+        def uses_ok(name, depth=0) -> bool:
+            consumers = [i for i in comp.instrs if name in i.operands]
+            if not consumers:
+                return False
+            for cns in consumers:
+                if cns.opcode in slicers:
+                    continue
+                if cns.opcode == "fusion" and depth < 2:
+                    m = re.search(r"calls=%?([\w.\-]+)", cns.attrs)
+                    fc = self.comps.get(m.group(1)) if m else None
+                    if fc is not None and self._fused_param_sliced(
+                        fc, cns.operands.index(name)
+                    ):
+                        continue
+                    return False
+                if cns.opcode in passthrough and depth < 3:
+                    if uses_ok(cns.name, depth + 1):
+                        continue
+                    return False
+                return False
+            return True
+
+        return uses_ok(ins.name)
+
+    def _fused_param_sliced(self, fc: Computation, idx: int) -> bool:
+        """Inside a fused computation, is parameter #idx consumed only via
+        (dynamic-)slices (possibly through converts)?"""
+        target = None
+        for i in fc.instrs:
+            if i.opcode == "parameter" and i.args_text.strip() == str(idx):
+                target = i
+                break
+        if target is None:
+            return False
+        passthrough = {"convert", "bitcast", "reshape", "copy"}
+        slicers = {"dynamic-slice", "slice"}
+
+        def ok(name, depth=0):
+            consumers = [i for i in fc.instrs if name in i.operands]
+            if not consumers:
+                return False
+            for cns in consumers:
+                if cns.opcode in slicers:
+                    continue
+                if cns.opcode in passthrough and depth < 3 and ok(cns.name, depth + 1):
+                    continue
+                return False
+            return True
+
+        return ok(target.name)
+
+    # -- trip count --------------------------------------------------------
+    def _trip_count(self, cond_name: str) -> int:
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1
+        vals = getattr(comp, "_const_vals", {})
+        # prefer the constant operand of a compare if visible at top level...
+        for ins in comp.instrs:
+            if ins.opcode == "compare":
+                for o in ins.operands:
+                    if o in vals:
+                        return max(int(vals[o]), 1)
+        # ... else the loop bound is the (usually unique) scalar int constant
+        # in the condition computation (the compare sits inside a fusion).
+        if vals:
+            return max(max(int(v) for v in vals.values()), 1)
+        self.warnings.append(f"no trip count for {cond_name}")
+        return 1
+
+    # -- per-instruction cost ----------------------------------------------
+    def _dot_flops(self, comp: Computation, instr: Instr) -> float:
+        out_elems = 1
+        for _dt, dims in instr.result_shapes:
+            for d in dims:
+                out_elems *= d
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.attrs)
+        lhs_shapes = self._shape_of(comp, instr.operands[0])
+        if not m or not lhs_shapes:
+            return 2.0 * out_elems  # degenerate
+        cdims = [int(x) for x in m.group(1).split(",") if x]
+        _dt, ldims = lhs_shapes[0]
+        k = 1
+        for c in cdims:
+            if c < len(ldims):
+                k *= ldims[c]
+        return 2.0 * out_elems * k
+
+    def _fusion_param_bytes(self, fused_name: str) -> float:
+        """HBM reads of a fusion: slice-aware parameter traffic.
+
+        A fusion operand consumed only through dynamic-slice/gather reads just
+        the slice (e.g. per-iteration slices of scan-stacked parameter
+        buffers); anything else reads the whole operand once.  Fusion-internal
+        intermediates never touch HBM.
+        """
+        key = "_fpb_" + fused_name
+        if key in self._memo:
+            return self._memo[key]  # type: ignore[return-value]
+        comp = self.comps.get(fused_name)
+        if comp is None:
+            return 0.0
+        total = 0.0
+        slicers = {"dynamic-slice", "gather", "slice"}
+        passthrough = {"convert", "bitcast", "reshape", "copy", "transpose"}
+
+        def consumer_cost(name, ins, depth=0):
+            # cost of one use of value `name` by instruction `ins`
+            if ins.opcode in slicers:
+                return float(min(ins.result_bytes, _named_bytes(comp, name)))
+            if ins.opcode == "dynamic-update-slice" and ins.operands:
+                if ins.operands[0] == name:
+                    return 0.0  # in-place buffer write: slice-only traffic
+            if ins.opcode in passthrough and depth < 4:
+                # XLA-CPU artifact: convert/bitcast chains around in-place
+                # updates; a TPU compile fuses these away. Look through.
+                subs = [i for i in comp.instrs if ins.name in i.operands]
+                costs = [consumer_cost(ins.name, i, depth + 1) for i in subs]
+                if subs and all(c is not None for c in costs):
+                    return sum(costs)
+            return None
+
+        def _named_bytes(comp, name):
+            sh = comp.shapes.get(name, [])
+            return sum(_bytes(dt, d) for dt, d in sh)
+
+        for p in comp.instrs:
+            if p.opcode != "parameter":
+                continue
+            consumers = [i for i in comp.instrs if p.name in i.operands]
+            costs = [consumer_cost(p.name, i) for i in consumers]
+            if consumers and all(c is not None for c in costs):
+                total += sum(costs)
+            else:
+                total += p.result_bytes
+        self._memo[key] = total  # type: ignore[assignment]
+        return total
+
+    def _fusion_result_bytes(self, fused_name: str, default: float) -> float:
+        """HBM writes of a fusion: DUS roots write the update, not the buffer."""
+        comp = self.comps.get(fused_name)
+        if comp is None:
+            return default
+        root = next((i for i in comp.instrs if i.is_root), None)
+        if root is None:
+            return default
+        by_name = {i.name: i for i in comp.instrs}
+        passthrough = {"convert", "bitcast", "reshape", "copy"}
+
+        def one(ins, depth=0) -> float:
+            if ins.opcode in passthrough and depth < 4 and ins.operands:
+                src = by_name.get(ins.operands[0])
+                if src is not None:
+                    return one(src, depth + 1)
+            if ins.opcode == "dynamic-update-slice" and len(ins.operands) >= 2:
+                upd = by_name.get(ins.operands[1])
+                if upd is not None:
+                    return float(upd.result_bytes)
+                sh = comp.shapes.get(ins.operands[1])
+                if sh:
+                    return float(sum(_bytes(dt, d) for dt, d in sh))
+            return float(ins.result_bytes)
+
+        if root.opcode == "tuple":
+            tot = 0.0
+            for o in root.operands:
+                ins = by_name.get(o)
+                tot += one(ins) if ins is not None else 0.0
+            return tot
+        return one(root)
+
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps[name]
+        total = Cost()
+        for ins in comp.instrs:
+            total += self._instr_cost(comp, ins)
+        self._memo[name] = total
+        return total
+
+    def _instr_cost(self, comp: Computation, ins: Instr) -> Cost:
+        op = ins.opcode
+        c = Cost()
+        if op not in ("while", "call", "conditional") and \
+                self._substituted_or_consumes(comp, ins):
+            if op == "dot":
+                c.flops += self._dot_flops(comp, ins)
+            elif op == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+                if m:
+                    inner = self.comp_cost(m.group(1))
+                    c.flops += inner.flops
+            return c
+        if op == "while":
+            m = re.search(r"condition=%?([\w.\-]+)", ins.attrs)
+            b = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+            trip = self._trip_count(m.group(1)) if m else 1
+            if b:
+                c += self.comp_cost(b.group(1)).scaled(trip)
+            if m:
+                c += self.comp_cost(m.group(1)).scaled(trip)
+            return c
+        if op in ("call", "conditional"):
+            for target in re.findall(r"(?:to_apply|calls|branch_computations=\{)[=%]*%?([\w.\-]+)", ins.attrs):
+                c += self.comp_cost(target)
+            return c
+        if op == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+            if m:
+                inner = self.comp_cost(m.group(1))
+                c.flops += inner.flops  # dots inside fusions still count
+                c.transcendentals += inner.transcendentals
+                c.collective_bytes += inner.collective_bytes
+                for k, v in inner.collectives.items():
+                    c.collectives[k] = c.collectives.get(k, 0.0) + v
+                c.bytes += (
+                    self._fusion_param_bytes(m.group(1))
+                    + self._fusion_result_bytes(m.group(1), ins.result_bytes)
+                )
+            else:
+                c.bytes += self._operand_bytes(comp, ins) + ins.result_bytes
+            return c
+        if op in FREE_OPS:
+            return c
+        if any(op == k or op == k + "-start" for k in COLLECTIVES):
+            kind = op[:-6] if op.endswith("-start") else op
+            nbytes = self._collective_payload_bytes(comp, ins)
+            wire = 2.0 * nbytes if kind == "all-reduce" else nbytes
+            # ring model: AR moves 2x(n-1)/n of the payload, AG/RS/A2A 1x.
+            # An AR consumed only through slices is a reduce-scatter on TPU
+            # (the CPU SPMD pipeline lacks the AR+slice -> RS rewrite): 1x.
+            if kind == "all-reduce" and self._ar_is_rs(comp, ins):
+                wire = nbytes
+                kind = "all-reduce(rs)"
+            c.collective_bytes += wire
+            c.collectives[kind] = c.collectives.get(kind, 0.0) + wire
+            c.bytes += nbytes + ins.result_bytes
+            return c
+        if op == "dot":
+            c.flops += self._dot_flops(comp, ins)
+            c.bytes += self._operand_bytes(comp, ins) + ins.result_bytes
+            return c
+        if op == "convolution":
+            c.flops += 2.0 * ins.result_bytes  # rough; unused by our models
+            c.bytes += self._operand_bytes(comp, ins) + ins.result_bytes
+            return c
+        if op == "dynamic-update-slice":
+            if len(ins.operands) >= 2:
+                c.bytes += 2.0 * self._operand_bytes(comp, ins, [1])
+            return c
+        if op in ("dynamic-slice", "gather", "transpose", "copy", "copy-start",
+                  "slice", "concatenate", "pad", "broadcast", "reverse"):
+            c.bytes += 2.0 * ins.result_bytes
+            return c
+        if op == "scatter":
+            if len(ins.operands) >= 3:
+                c.bytes += 2.0 * self._operand_bytes(comp, ins, [2])
+            return c
+        if op in ("exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                  "logistic", "sine", "cosine", "erf"):
+            c.transcendentals += ins.result_bytes
+            c.bytes += self._operand_bytes(comp, ins) + ins.result_bytes
+            return c
+        # default: elementwise / reduce / select / compare / convert ...
+        c.bytes += self._operand_bytes(comp, ins) + ins.result_bytes
+        return c
+
+    def total(self) -> Cost:
+        return self.comp_cost(self.entry)
+
+
+def _parse_const_vals(comps: Dict[str, Computation], txt: str) -> None:
+    """Attach scalar integer constant values (needed for trip counts)."""
+    pat = re.compile(
+        r"%?([\w.\-]+)\s*=\s*[su]\d+\[\]\s+constant\((-?\d+)\)"
+    )
+    per_comp: Dict[str, Dict[str, int]] = {}
+    cur = None
+    for line in txt.splitlines():
+        stripped = line.strip()
+        if not line.startswith(" ") and stripped.endswith("{"):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", stripped)
+            cur = m.group(1) if m else None
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = pat.search(line)
+        if m:
+            per_comp.setdefault(cur, {})[m.group(1)] = int(m.group(2))
+    for name, vals in per_comp.items():
+        if name in comps:
+            comps[name]._const_vals = vals  # type: ignore[attr-defined]
+
+
+def analyze(txt: str, subst_scopes: Tuple[str, ...] = ()) -> Cost:
+    hc = HloCost(txt, subst_scopes)
+    _parse_const_vals(hc.comps, txt)
+    return hc.total()
+
+
+def analyze_detailed(
+    txt: str, subst_scopes: Tuple[str, ...] = ()
+) -> Tuple[Cost, HloCost]:
+    hc = HloCost(txt, subst_scopes)
+    _parse_const_vals(hc.comps, txt)
+    return hc.total(), hc
+
+
+def breakdown(txt: str, top: int = 20):
+    """Top contributors by bytes and collective bytes (with multiplicity)."""
+    hc = HloCost(txt)
+    _parse_const_vals(hc.comps, txt)
+    items = []
+
+    def walk(comp_name, mult):
+        comp = hc.comps[comp_name]
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                m = re.search(r"condition=%?([\w.\-]+)", ins.attrs)
+                b = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+                trip = hc._trip_count(m.group(1)) if m else 1
+                if b:
+                    walk(b.group(1), mult * trip)
+            elif ins.opcode in ("call", "conditional"):
+                for t in re.findall(r"(?:to_apply|calls)=%?([\w.\-]+)", ins.attrs):
+                    walk(t, mult)
+            else:
+                c = hc._instr_cost(comp, ins)
+                items.append(
+                    (c.bytes * mult, c.collective_bytes * mult, c.flops * mult,
+                     mult, ins, comp_name)
+                )
+
+    walk(hc.entry, 1)
+    return items
+
+
+def print_breakdown(txt: str, top: int = 15) -> None:
+    items = breakdown(txt)
+    meta = lambda ins: (re.search(r'op_name="([^"]*)"', ins.attrs) or [None, ""])[1]
+    print("== TOP BYTES ==")
+    for b, cb, f, mult, ins, cn in sorted(items, reverse=True, key=lambda x: x[0])[:top]:
+        print(f"  {b/1e9:9.1f} GB x{mult:4d} {ins.opcode:22s} {ins.result_shapes[:1]} {meta(ins)[-70:]}")
+    print("== TOP COLLECTIVES ==")
+    for b, cb, f, mult, ins, cn in sorted(items, reverse=True, key=lambda x: x[1])[:top]:
+        if cb:
+            print(f"  {cb/1e9:9.2f} GB x{mult:4d} {ins.opcode:22s} {ins.result_shapes[:1]} {meta(ins)[-70:]}")

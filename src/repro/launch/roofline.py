@@ -1,0 +1,212 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all **seconds per step, per device**
+(cost_analysis and the post-SPMD HLO are already per-device):
+
+  compute    = HLO_FLOPs / PEAK_FLOPS
+  memory     = HLO_bytes_accessed / HBM_BW
+  collective = sum(operand bytes of collective ops in HLO) / ICI_BW
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM. ICI: ~50 GB/s/link; we
+budget ONE effective link per chip (conservative: a single collective
+usually bottlenecks on one torus dimension).
+
+MODEL_FLOPS is the analytic useful-work estimate (6·N·D style, MoE counts
+active params only, plus explicit attention/SSD terms); the ratio
+MODEL_FLOPS / (HLO_FLOPs × chips) exposes remat/padding/dispatch waste.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9       # bytes/s / chip
+ICI_BW = 50e9        # bytes/s effective (1 link)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e5m2": 1, "f8e4m3fn": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind operand bytes (per device) from HLO text."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if (kind + "-done(") in line or re.search(rf"\b{kind}-done\(", line):
+            continue  # async -done re-lists the -start's shapes
+        # operand shapes are the dtype[...] tokens after the opcode's '('
+        args = line[m.end():]
+        depth = 1
+        end = 0
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        args = args[: end or len(args)]
+        total = sum(
+            _shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(args)
+        )
+        out[kind] = out.get(kind, 0) + total
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    hlo_flops_per_dev: float
+    hlo_bytes_per_dev: float
+    collective_bytes_per_dev: float
+    collectives: Dict[str, int]
+    model_flops_global: float
+    bytes_per_dev_peak: float  # memory_analysis temp+arg peak
+    compile_seconds: float = 0.0
+    extras: Dict = field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops_per_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes_per_dev / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_dev / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        tot = self.hlo_flops_per_dev * self.n_devices
+        return self.model_flops_global / tot if tot else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPS-based MFU bound implied by the dominant term."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t <= 0:
+            return 0.0
+        return self.model_flops_global / (t * self.n_devices * PEAK_FLOPS)
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "n_devices": self.n_devices,
+            "hlo_flops_per_dev": self.hlo_flops_per_dev,
+            "hlo_bytes_per_dev": self.hlo_bytes_per_dev,
+            "collective_bytes_per_dev": self.collective_bytes_per_dev,
+            "collectives": self.collectives,
+            "model_flops_global": self.model_flops_global,
+            "bytes_per_dev_peak": self.bytes_per_dev_peak,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "compile_seconds": self.compile_seconds,
+            **self.extras,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS
+# ---------------------------------------------------------------------------
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Useful FLOPs per step (global), 6·N·D convention + mixer terms."""
+    from repro.models.params import count_params, param_shapes
+    import numpy as np
+    import jax
+
+    n_active = count_params(cfg, active_only=True)
+    embed = cfg.padded_vocab * cfg.d_model
+    n_matmul = n_active - embed  # embed lookup is a gather, not a matmul
+    if cfg.tie_embeddings:
+        n_matmul += embed  # the tied unembed matmul is real compute
+
+    B, S = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+
+    def attn_fwd_tokens(tokens_q, kv_len):
+        # 2 matmuls (qk, pv): 4 * heads * hd * kv_len per q token; causal ~ /2
+        n_attn_layers = sum(
+            1 for l in range(cfg.n_layers) if cfg.layer_kind(l) == "attn"
+        )
+        causal = 0.5 if shape.kind != "decode" else 1.0
+        return 4.0 * n_attn_layers * cfg.n_heads * hd * kv_len * tokens_q * causal
+
+    def ssd_fwd_tokens(tokens):
+        if cfg.ssm is None:
+            return 0.0
+        n_ssm = sum(1 for l in range(cfg.n_layers) if cfg.layer_kind(l) == "ssm")
+        d_inner = cfg.ssm.expand * cfg.d_model
+        nh = d_inner // cfg.ssm.head_dim
+        Q = cfg.ssm.chunk
+        N = cfg.ssm.d_state
+        # intra-chunk (cb + y_intra, causal ~/2) + chunk states + inter
+        per_tok = (2 * Q * N + 2 * Q * nh * cfg.ssm.head_dim) * 0.5
+        per_tok += 4 * N * d_inner  # state outer products + readout
+        return n_ssm * per_tok * tokens
+
+    if shape.kind == "train":
+        D = B * S
+        return 6.0 * n_matmul * D + 3.0 * (attn_fwd_tokens(D, S) / 1.0) + 3.0 * ssd_fwd_tokens(D)
+    if shape.kind == "prefill":
+        D = B * S
+        return 2.0 * n_matmul * D + attn_fwd_tokens(D, S) + ssd_fwd_tokens(D)
+    # decode: one token per sequence against a seq_len cache
+    D = B
+    return 2.0 * n_matmul * D + attn_fwd_tokens(D, S) + ssd_fwd_tokens(D)
+
+
+def summarize(report: RooflineReport) -> str:
+    r = report
+    return (
+        f"{r.arch:22s} {r.shape:12s} {r.mesh:6s} "
+        f"compute={r.t_compute*1e3:9.3f}ms memory={r.t_memory*1e3:9.3f}ms "
+        f"coll={r.t_collective*1e3:9.3f}ms -> {r.bottleneck:10s} "
+        f"useful={r.useful_flops_ratio:6.1%} roofline={r.roofline_fraction:6.1%}"
+    )

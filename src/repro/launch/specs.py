@@ -1,0 +1,122 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + PartitionSpecs for every model
+input, per (arch × shape) cell — the dry-run's only source of input shapes.
+
+Returns (structs, specs) dicts keyed by input name.  Decode cells include the
+KV/SSM cache tree and a cur_len scalar.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.kvcache import cache_annotations, cache_structs
+from repro.parallel.sharding import ShardingRules
+
+Tree = Any
+
+
+def batch_axes_for(B: int, rules: ShardingRules, mesh_shape: Dict[str, int]):
+    """Largest prefix of the batch axes whose product divides B (uneven
+    batch sharding is legal but wasteful — long_500k has B=1)."""
+    axes = []
+    prod = 1
+    for ax in rules.batch:
+        n = mesh_shape.get(ax, 1)
+        if B % (prod * n) == 0:
+            axes.append(ax)
+            prod *= n
+    if not axes:
+        return None
+    return tuple(axes)
+
+
+def input_specs(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    rules: ShardingRules,
+    mesh_shape: Dict[str, int],
+    dtype=None,
+) -> Tuple[Tree, Tree]:
+    dt = dtype or jnp.dtype(cfg.dtype)
+    B, S = shape.global_batch, shape.seq_len
+    bax = batch_axes_for(B, rules, mesh_shape)
+
+    if shape.kind == "train":
+        return _train_specs(cfg, B, S, bax, dt)
+    if shape.kind == "prefill":
+        structs, specs = _train_specs(cfg, B, S, bax, dt)
+        structs.pop("labels")
+        specs.pop("labels")
+        return structs, specs
+    if shape.kind == "decode":
+        cstructs = cache_structs(cfg, B, S, dt)
+        canns = cache_annotations(cfg)
+        cspecs = jax.tree.map(
+            lambda ann: _cache_spec(ann, bax, rules),
+            canns,
+            is_leaf=lambda a: isinstance(a, tuple) and all(
+                isinstance(x, (str, type(None))) for x in a
+            ),
+        )
+        structs = {
+            "token": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "cur_len": jax.ShapeDtypeStruct((), jnp.int32),
+            "caches": cstructs,
+        }
+        specs = {
+            "token": P(bax),
+            "cur_len": P(),
+            "caches": cspecs,
+        }
+        return structs, specs
+    raise ValueError(shape.kind)
+
+
+def _cache_spec(ann, bax, rules: ShardingRules) -> P:
+    out = []
+    for name in ann:
+        if name == "batch":
+            out.append(bax)
+        elif name is None or name == "stacked":
+            out.append(None)
+        else:
+            out.append(getattr(rules, name))
+    return P(*out)
+
+
+def _train_specs(cfg: ModelConfig, B: int, S: int, bax, dt):
+    structs: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    if cfg.frontend == "audio":
+        structs["embeddings"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+        specs["embeddings"] = P(bax, None, None)
+    elif cfg.frontend == "vision":
+        s_text = S - cfg.n_patches
+        structs["tokens"] = jax.ShapeDtypeStruct((B, s_text), jnp.int32)
+        specs["tokens"] = P(bax, None)
+        structs["patch_embeds"] = jax.ShapeDtypeStruct((B, cfg.n_patches, cfg.d_model), dt)
+        specs["patch_embeds"] = P(bax, None, None)
+    else:
+        structs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        specs["tokens"] = P(bax, None)
+    if cfg.frontend == "vision":
+        structs["labels"] = jax.ShapeDtypeStruct((B, S - cfg.n_patches), jnp.int32)
+        specs["labels"] = P(bax, None)
+    else:
+        structs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        specs["labels"] = P(bax, None)
+    return structs, specs
+
+
+def ndb_specs(cfg: ModelConfig, B: int, bax) -> Tuple[Tree, Tree]:
+    """Structs/specs for dynamic-NDB mask inputs."""
+    structs = {
+        "keep": jax.ShapeDtypeStruct((cfg.n_layers, B), jnp.float32),
+        "example_weight": jax.ShapeDtypeStruct((B,), jnp.float32),
+    }
+    specs = {"keep": P(None, bax), "example_weight": P(bax)}
+    return structs, specs

@@ -1,0 +1,83 @@
+"""TrainState + sharding-spec builders (concrete, struct, and spec trees)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import MeCeFOConfig, ModelConfig, TrainConfig
+from repro.core.lowrank import (
+    init_projections,
+    projection_annotations,
+    projection_structs,
+)
+from repro.models.params import param_annotations, param_structs, init_params
+from repro.optim.optimizers import init_opt_state, opt_state_structs
+from repro.parallel.sharding import ShardingRules, spec_tree
+
+Tree = Any
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray  # int32 scalar
+    params: Tree
+    opt: Any
+    proj: Tree  # MeCeFO V1 tree ({} when mecefo off)
+
+
+def init_state(
+    cfg: ModelConfig, train: TrainConfig, mecefo: MeCeFOConfig, key, dtype=None
+) -> TrainState:
+    params = init_params(cfg, key, dtype)
+    proj = (
+        init_projections(params, cfg, mecefo.rank) if mecefo.mode != "off" else {}
+    )
+    return TrainState(
+        step=jnp.int32(0),
+        params=params,
+        opt=init_opt_state(params, train),
+        proj=proj,
+    )
+
+
+def state_structs(
+    cfg: ModelConfig, train: TrainConfig, mecefo: MeCeFOConfig, dtype=None
+) -> TrainState:
+    params = param_structs(cfg, dtype)
+    proj = projection_structs(cfg, mecefo.rank, dtype) if mecefo.mode != "off" else {}
+    return TrainState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        params=params,
+        opt=opt_state_structs(params, train),
+        proj=proj,
+    )
+
+
+def state_specs(
+    cfg: ModelConfig, train: TrainConfig, mecefo: MeCeFOConfig, rules: ShardingRules
+) -> TrainState:
+    pspec = spec_tree(rules, param_annotations(cfg))
+    if mecefo.mode != "off":
+        prspec = spec_tree(rules, projection_annotations(cfg))
+    else:
+        prspec = {}
+    ospec = jax.tree.map(lambda s: s, opt_specs_like(pspec, train))
+    return TrainState(step=P(), params=pspec, opt=ospec, proj=prspec)
+
+
+def opt_specs_like(pspec: Tree, train: TrainConfig):
+    from repro.optim.optimizers import AdamWState, SGDMState
+
+    if train.optimizer == "adamw":
+        return AdamWState(m=pspec, v=pspec)
+    return SGDMState(m=pspec)
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )

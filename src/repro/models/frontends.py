@@ -1,0 +1,46 @@
+"""Modality frontend stubs (per assignment: precomputed embeddings).
+
+``[audio]`` (musicgen): the EnCodec tokenizer/frame-embedder is a stub —
+batches carry precomputed frame embeddings (B, S, d) directly.
+
+``[vlm]`` (phi-3-vision): the CLIP patch encoder is a stub — batches carry
+precomputed patch embeddings (B, n_patches, d) that are prepended to the
+embedded text tokens; the loss masks the patch positions.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def embed_inputs(params, batch, cfg: ModelConfig):
+    """Returns (h0 (B, S, d), token_weight (B, S)) for any frontend."""
+    if cfg.frontend == "audio":
+        h = batch["embeddings"]
+        return h, jnp.ones(h.shape[:2], jnp.float32)
+    if cfg.frontend == "vision":
+        patches = batch["patch_embeds"]
+        tok = params["embed"][batch["tokens"]]
+        h = jnp.concatenate([patches, tok.astype(patches.dtype)], axis=1)
+        w = jnp.concatenate(
+            [
+                jnp.zeros(patches.shape[:2], jnp.float32),
+                jnp.ones(batch["tokens"].shape, jnp.float32),
+            ],
+            axis=1,
+        )
+        return h, w
+    h = params["embed"][batch["tokens"]]
+    return h, jnp.ones(h.shape[:2], jnp.float32)
+
+
+def full_labels(batch, cfg: ModelConfig):
+    """(B, S_total) labels aligned with the trunk sequence (patches padded)."""
+    labels = batch["labels"]
+    if cfg.frontend == "vision":
+        pads = jnp.zeros(
+            (labels.shape[0], batch["patch_embeds"].shape[1]), labels.dtype
+        )
+        labels = jnp.concatenate([pads, labels], axis=1)
+    return labels

@@ -1,0 +1,69 @@
+"""KV / SSM-state caches (scan-stacked layout, matching params)."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import block_layout
+
+Tree = Any
+
+
+def _entries(cfg: ModelConfig, batch: int, max_len: int):
+    """Per period-position cache (shape, annotation) dicts."""
+    n_periods = cfg.n_layers // cfg.block_period
+    hd = cfg.resolved_head_dim
+    out = []
+    for kind, _is_moe in block_layout(cfg):
+        if kind == "attn":
+            shape = (n_periods, batch, max_len, cfg.n_kv_heads, hd)
+            ann = ("stacked", "batch", "cache_seq", "kv_cache", "cache_hd")
+            out.append({"k": (shape, ann), "v": (shape, ann)})
+        else:
+            ssm = cfg.ssm
+            d_inner = ssm.expand * cfg.d_model
+            nh = d_inner // ssm.head_dim
+            conv_ch = d_inner + 2 * ssm.d_state
+            out.append(
+                {
+                    "conv": (
+                        (n_periods, batch, ssm.d_conv, conv_ch),
+                        ("stacked", "batch", None, "ssm_inner"),
+                    ),
+                    "ssd": (
+                        (n_periods, batch, nh, ssm.d_state, ssm.head_dim),
+                        ("stacked", "batch", "heads", None, None),
+                    ),
+                }
+            )
+    return out
+
+
+def _is_entry(x):
+    return isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple)
+
+
+def cache_structs(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> Tree:
+    dt = dtype or jnp.dtype(cfg.dtype)
+    return tuple(
+        jax.tree.map(lambda e: jax.ShapeDtypeStruct(e[0], dt), d, is_leaf=_is_entry)
+        for d in _entries(cfg, batch, max_len)
+    )
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> Tree:
+    dt = dtype or jnp.dtype(cfg.dtype)
+    return tuple(
+        jax.tree.map(lambda e: jnp.zeros(e[0], dt), d, is_leaf=_is_entry)
+        for d in _entries(cfg, batch, max_len)
+    )
+
+
+def cache_annotations(cfg: ModelConfig) -> Tree:
+    return tuple(
+        jax.tree.map(lambda e: e[1], d, is_leaf=_is_entry)
+        for d in _entries(cfg, 1, 1)
+    )

@@ -1,0 +1,280 @@
+"""Top-level model: trunk executor (scan-over-layers) + train/serve heads.
+
+Pure functions; every parallelism/fault-tolerance policy arrives as explicit
+arguments (rules, ExecFlags, NDBContext) so the same code path serves smoke
+tests (1 CPU device), the 512-device dry-run, and a real TPU deployment.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.ndb import NDBContext
+from repro.models import frontends
+from repro.models.layers import (
+    attention_block,
+    chunked_cross_entropy,
+    ffn_block,
+    logits_for_position,
+    rmsnorm,
+)
+from repro.models.moe import moe_block
+from repro.models.params import block_layout
+from repro.models.ssm import ssm_block
+from repro.parallel.sharding import ShardingRules, constrain
+
+Tree = Any
+
+
+@dataclass(frozen=True)
+class ExecFlags:
+    """Execution policy knobs (hillclimb levers)."""
+
+    scan_layers: bool = True
+    remat: str = "ffn"  # "none" | "ffn" | "full"
+    attn_chunk: int = 1024
+    causal_slice: bool = False  # triangular-sliced attention (halves FLOPs)
+    ce_chunk: int = 512
+    n_dp_shards: int = 1
+
+
+# ---------------------------------------------------------------------------
+# Trunk
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(
+    pos_kind,
+    bp,
+    pj,
+    h,
+    keep_l,
+    cache_l,
+    cfg,
+    rules,
+    ctx: NDBContext,
+    flags: ExecFlags,
+    positions,
+    cur_len,
+):
+    kind, is_moe = pos_kind
+    lowrank_mode = ctx.lowrank_mode()
+    recompute = ctx.recompute_ffn() or flags.remat == "ffn"
+    aux = jnp.float32(0)
+    if kind == "attn":
+        keep_attn = keep_l if ctx.mecefo.skip_mha_backward else 1.0
+        h, new_cache = attention_block(
+            bp["mixer"], h, cfg, rules, keep_attn, positions,
+            cache=cache_l, cur_len=cur_len,
+            attn_chunk=flags.attn_chunk, causal_slice=flags.causal_slice,
+        )
+    else:
+        h, new_cache = ssm_block(
+            bp["mixer"], h, cfg, rules,
+            proj=None if pj is None else pj.get("mixer"),
+            keep=keep_l, lowrank_mode=lowrank_mode,
+            recompute=ctx.recompute_ffn(), cache=cache_l,
+        )
+    if is_moe:
+        h, aux = moe_block(
+            bp["ffn"], h, cfg, rules, n_dp_shards=flags.n_dp_shards,
+            proj=None if pj is None else pj.get("ffn"),
+            keep=keep_l, lowrank_mode=lowrank_mode, recompute=recompute,
+        )
+    else:
+        h = ffn_block(
+            bp["ffn"], h, cfg, rules,
+            proj=None if pj is None else pj.get("ffn"),
+            keep=keep_l, lowrank_mode=lowrank_mode, recompute=recompute,
+        )
+    return h, new_cache, aux
+
+
+def run_trunk(
+    params: Tree,
+    proj: Optional[Tree],
+    h: jnp.ndarray,
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    ctx: NDBContext,
+    flags: ExecFlags,
+    *,
+    positions,
+    caches: Optional[Tree] = None,
+    cur_len=None,
+):
+    """Runs all layers. Returns (h, new_caches, aux_loss_sum)."""
+    layout = block_layout(cfg)
+    period = cfg.block_period
+    n_periods = cfg.n_layers // period
+    B = h.shape[0]
+
+    keep = None
+    if ctx.mode in ("dynamic", "static"):
+        keep = ctx.keep.reshape(n_periods, period, B)
+
+    layer_params = params["layers"]
+    layer_proj = proj["layers"] if proj is not None else None
+
+    def super_block(h, xs):
+        bps, pjs, keeps, cls = xs
+        new_cls = [] if cls is not None else None
+        aux_tot = jnp.float32(0)
+        for p in range(period):
+            keep_l = (
+                keeps[p]
+                if keeps is not None
+                else (0.0 if ctx.mode == "degraded" else 1.0)
+            )
+            h, nc, aux = _apply_block(
+                layout[p],
+                bps[p],
+                None if pjs is None else pjs[p],
+                h,
+                keep_l,
+                None if cls is None else cls[p],
+                cfg, rules, ctx, flags, positions, cur_len,
+            )
+            aux_tot = aux_tot + aux
+            if new_cls is not None:
+                new_cls.append(nc)
+        return h, (tuple(new_cls) if new_cls is not None else None, aux_tot)
+
+    xs = (layer_params, layer_proj, keep, caches)
+
+    if flags.scan_layers and n_periods > 1:
+        body = super_block
+        if flags.remat == "full":
+            body = jax.checkpoint(
+                super_block, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        elif flags.remat == "dots":
+            # save matmul outputs: backward skips the forward recompute at
+            # the cost of keeping per-layer dot results (needs accum=1-scale
+            # per-device batches)
+            body = jax.checkpoint(
+                super_block,
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            )
+
+        def scan_body(carry, xs):
+            h = carry
+            h, (ncs, aux) = body(h, xs)
+            return h, (ncs, aux)
+
+        h, (new_caches, auxs) = jax.lax.scan(scan_body, h, xs)
+        aux_total = jnp.sum(auxs)
+    else:
+        new_caches = [] if caches is not None else None
+        aux_total = jnp.float32(0)
+        for i in range(n_periods):
+            xs_i = jax.tree.map(lambda a: a[i], xs)
+            body = super_block
+            if flags.remat == "full":
+                body = jax.checkpoint(
+                    super_block, policy=jax.checkpoint_policies.nothing_saveable
+                )
+            h, (ncs, aux) = body(h, xs_i)
+            aux_total = aux_total + aux
+            if new_caches is not None:
+                new_caches.append(ncs)
+        if new_caches is not None:
+            new_caches = jax.tree.map(lambda *a: jnp.stack(a), *new_caches)
+    return h, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Heads
+# ---------------------------------------------------------------------------
+
+
+def _unembed(params):
+    if "unembed" in params:
+        return params["unembed"]
+    return params["embed"].T
+
+
+def forward_loss(
+    params: Tree,
+    proj: Optional[Tree],
+    batch: Tree,
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    ctx: NDBContext,
+    flags: ExecFlags,
+):
+    """Training loss (+ metrics dict)."""
+    h, token_w = frontends.embed_inputs(params, batch, cfg)
+    h = constrain(h, rules, "batch", "seq", None)
+    labels = frontends.full_labels(batch, cfg)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+
+    if ctx.example_weight is not None:
+        token_w = token_w * ctx.example_weight[:, None]
+
+    h, _, aux = run_trunk(
+        params, proj, h, cfg, rules, ctx, flags, positions=positions
+    )
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    ce = chunked_cross_entropy(
+        h, _unembed(params), labels, token_w, rules, chunk=flags.ce_chunk,
+        vocab_size=cfg.vocab_size,
+    )
+    loss = ce + aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+def forward_prefill(
+    params: Tree,
+    batch: Tree,
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    flags: ExecFlags,
+    cache_structs_tree: Tree,
+):
+    """Prompt prefill: returns (filled caches, last-position logits)."""
+    ctx = NDBContext(mode="off")
+    h, _ = frontends.embed_inputs(params, batch, cfg)
+    h = constrain(h, rules, "batch", "seq", None)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_structs_tree)
+    h, new_caches, _ = run_trunk(
+        params, None, h, cfg, rules, ctx, flags,
+        positions=positions, caches=caches, cur_len=jnp.int32(0),
+    )
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_for_position(h[:, -1], _unembed(params), cfg.vocab_size)
+    return new_caches, logits
+
+
+def forward_decode(
+    params: Tree,
+    caches: Tree,
+    token: jnp.ndarray,  # (B,) int32
+    cur_len,  # scalar int32 — number of valid cache positions
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    flags: ExecFlags,
+):
+    """One decode step: returns (new caches, (B, V) logits)."""
+    ctx = NDBContext(mode="off")
+    if cfg.frontend == "audio":
+        # stub frontend: decode consumes a token id like any LM
+        h = params["embed"][token][:, None, :]
+    else:
+        h = params["embed"][token][:, None, :]
+    h = constrain(h, rules, "batch", None, None)
+    positions = cur_len[None] if jnp.ndim(cur_len) == 0 else cur_len
+    h, new_caches, _ = run_trunk(
+        params, None, h, cfg, rules, ctx, flags,
+        positions=jnp.asarray(positions), caches=caches, cur_len=cur_len,
+    )
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_for_position(h[:, -1], _unembed(params), cfg.vocab_size)
+    return new_caches, logits

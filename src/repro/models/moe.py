@@ -1,0 +1,170 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-bucketed gather dispatch.
+
+Dispatch strategy (EP-friendly under pjit/GSPMD, no shard_map needed):
+
+  1. Reshape tokens (B*S, d) → (n_dp_shards, T_local, d) so dim 0 aligns with
+     the ('pod','data') batch sharding — routing/sort/bucketing then happen
+     *per data shard* (vmapped), with no cross-data-shard traffic.
+  2. Sort slot assignments by expert id, bucket into a static-capacity buffer
+     (n_dp, E, C_local, d).  Buffer is built by **gather** (differentiable;
+     its transpose is a scatter-add of the same static shape); the only
+     scatter is of int32 slot indices (non-differentiated).
+  3. Constrain the buffer to P(dp, 'model', None, None): the E-dim
+     redistribution is the EP all-to-all, inserted by GSPMD exactly once.
+  4. Grouped expert matmuls via ``lowrank_linear_grouped`` (technique III
+     applies per expert).  Combine by gathering each slot's output back.
+
+Capacity overflow drops tokens (standard); ``capacity_factor`` controls slack.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.lowrank import lowrank_linear_grouped
+from repro.core.recompute import ffn_recompute
+from repro.parallel.sharding import ShardingRules, constrain
+
+
+def _dp_shards(rules: ShardingRules, mesh_shape) -> int:
+    n = 1
+    for ax in rules.batch:
+        n *= mesh_shape.get(ax, 1)
+    return n
+
+
+def moe_block(
+    p,
+    x,
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    *,
+    n_dp_shards: int = 1,
+    proj=None,
+    keep=1.0,
+    lowrank_mode: str = "exact",
+    recompute: bool = False,
+):
+    """Pre-norm MoE sublayer with residual. x: (B, S, d)."""
+    moe = cfg.moe
+    assert moe is not None
+
+    def body(p, x, proj, keep_tok):
+        B, S, d = x.shape
+        xn = rmsnorm_local(x, p["ln"], cfg.norm_eps)
+        T = B * S
+        nds = n_dp_shards if T % n_dp_shards == 0 else 1
+        tl = T // nds  # tokens per data shard
+        xt = xn.reshape(nds, tl, d)
+        kt = jnp.broadcast_to(keep_tok[:, None], (B, S)).reshape(nds, tl)
+
+        # --- routing (per shard, fp32) ---------------------------------
+        router = p["router"].astype(jnp.float32)
+        logits = jnp.einsum("ntd,de->nte", xt.astype(jnp.float32), router)
+        gates, eidx = jax.lax.top_k(logits, moe.top_k)  # (n, t, k)
+        gates = jax.nn.softmax(gates, axis=-1)
+
+        # --- capacity bucketing (per shard, vmapped) --------------------
+        cap = int(max(moe.top_k, -(-tl * moe.top_k * moe.capacity_factor // moe.n_experts)))
+
+        def bucketize(e_flat):
+            # e_flat: (t*k,) expert id per slot -> (buf_src, slot_dst, kept)
+            order = jnp.argsort(e_flat, stable=True)
+            sorted_e = e_flat[order]
+            # position within its expert group
+            group_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+            pos = jnp.arange(e_flat.shape[0]) - group_start
+            kept = pos < cap
+            dst = sorted_e * cap + jnp.where(kept, pos, 0)
+            # buffer slot -> source slot index (scatter of int32 indices);
+            # dropped slots scatter out of range (mode="drop").
+            nbuf = moe.n_experts * cap
+            sentinel = e_flat.shape[0]  # == tl * top_k, maps to the pad row
+            buf_src = jnp.full((nbuf,), sentinel, jnp.int32)
+            buf_src = buf_src.at[jnp.where(kept, dst, nbuf)].set(
+                order.astype(jnp.int32), mode="drop"
+            )
+            # slot -> buffer position (for combine), capacity-dropped -> -1
+            slot_dst = jnp.full((e_flat.shape[0],), -1, jnp.int32)
+            slot_dst = slot_dst.at[order].set(
+                jnp.where(kept, dst, -1).astype(jnp.int32)
+            )
+            return buf_src, slot_dst
+
+        e_flat = eidx.reshape(nds, tl * moe.top_k)
+        buf_src, slot_dst = jax.vmap(bucketize)(e_flat)
+
+        # --- build buffer by gather -------------------------------------
+        # token row for each slot = slot // k; pad row T for dropped.
+        xt_pad = jnp.concatenate([xt, jnp.zeros((nds, 1, d), xt.dtype)], axis=1)
+        tok_of_slot = jnp.minimum(buf_src // moe.top_k, tl)  # (n, E*C)
+        xbuf = jnp.take_along_axis(xt_pad, tok_of_slot[..., None], axis=1)
+        xbuf = xbuf.reshape(nds, moe.n_experts, cap, d)
+        xbuf = constrain(xbuf, rules, "dispatch", "expert", None, None)
+        kbuf = jnp.take_along_axis(
+            jnp.concatenate([kt, jnp.ones((nds, 1), kt.dtype)], axis=1),
+            tok_of_slot, axis=1,
+        ).reshape(nds, moe.n_experts, cap)
+
+        # --- expert compute (grouped; technique III per expert) ---------
+        def experts(xb, kb):
+            if cfg.ffn_act == "swiglu":
+                g = _glin(xb, p["w_gate"], _pp(proj, "w_gate"), kb, lowrank_mode)
+                u = _glin(xb, p["w_up"], _pp(proj, "w_up"), kb, lowrank_mode)
+                h = jax.nn.silu(g.astype(jnp.float32)).astype(u.dtype) * u
+            else:
+                from repro.models.layers import nonlin
+                u = _glin(xb, p["w_up"], _pp(proj, "w_up"), kb, lowrank_mode)
+                h = nonlin(u, cfg.ffn_act)
+            return _glin(h, p["w_down"], _pp(proj, "w_down"), kb, lowrank_mode)
+
+        ybuf = jax.vmap(experts)(xbuf, kbuf)  # (n, E, C, d)
+        # return all-to-all: bring each dispatch group its experts' outputs
+        # BEFORE the combine gather — otherwise GSPMD implements the gather
+        # from the EP-sharded buffer as a (2x-wire, f32-promoted) all-reduce
+        # of the full token activations (see EXPERIMENTS.md §Perf).
+        ybuf = constrain(ybuf, rules, "dispatch", None, None, None)
+        ybuf = ybuf.reshape(nds, moe.n_experts * cap, d)
+        ybuf_pad = jnp.concatenate([ybuf, jnp.zeros((nds, 1, d), ybuf.dtype)], axis=1)
+
+        # --- combine ------------------------------------------------------
+        take = jnp.where(slot_dst >= 0, slot_dst, moe.n_experts * cap)
+        yslot = jnp.take_along_axis(ybuf_pad, take[..., None], axis=1)
+        yslot = yslot.reshape(nds, tl, moe.top_k, d)
+        y = jnp.einsum("ntk,ntkd->ntd", gates.astype(yslot.dtype), yslot)
+        y = y.reshape(B, S, d)
+
+        # --- load-balancing auxiliary loss (Switch-style) ----------------
+        me = jnp.mean(
+            jax.nn.one_hot(eidx, moe.n_experts, dtype=jnp.float32), axis=(1, 2)
+        ).mean(0)
+        ce = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=(0, 1))
+        aux = moe.n_experts * jnp.sum(me * ce) * moe.aux_loss_weight
+        return constrain(y, rules, "batch", "seq", None), aux
+
+    if recompute:  # technique II
+        body = ffn_recompute(body)
+    keep_tok = jnp.broadcast_to(jnp.asarray(keep, x.dtype), (x.shape[0],))
+    y, aux = body(p, x, proj, keep_tok)
+    return x + y, aux
+
+
+def rmsnorm_local(x, scale, eps):
+    from repro.models.layers import rmsnorm
+
+    return rmsnorm(x, scale, eps)
+
+
+def _pp(proj, name):
+    if proj is None:
+        return None
+    return proj.get(name)
+
+
+def _glin(x, w, v1, kb, mode):
+    if mode == "exact" or v1 is None:
+        return jnp.einsum("ecn,enm->ecm", x, w)
+    return lowrank_linear_grouped(x, w, v1, kb, mode)

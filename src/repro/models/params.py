@@ -1,0 +1,234 @@
+"""Parameter trees: shapes, logical sharding annotations, init, counting.
+
+Layout (scan-over-layers friendly):
+
+    params = {
+      "embed":      (V, d)
+      "unembed":    (d, V)                      (absent if tied)
+      "final_norm": (d,)
+      "layers":     tuple over period positions p (see ModelConfig.block_period)
+                    of {"mixer": {...}, "ffn": {...}} pytrees whose leaves are
+                    stacked over n_periods on dim 0.
+    }
+
+Every leaf has a parallel *annotation* — a tuple of logical axis names
+(see parallel/sharding.py) — produced by :func:`param_annotations`.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+Tree = Any
+
+
+# ---------------------------------------------------------------------------
+# Shape construction
+# ---------------------------------------------------------------------------
+
+
+def _mixer_shapes(cfg: ModelConfig, kind: str) -> Dict[str, Tuple[Tuple[int, ...], Tuple]]:
+    """{name: (shape, logical_annotation)} for one mixer block (unstacked)."""
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    if kind == "attn":
+        # fused head dims (Megatron layout): H*hd and KV*hd are divisible by
+        # the model axis for every assigned arch even when H itself is not
+        # (e.g. musicgen's 24 heads on a 16-way axis)
+        out = {
+            "ln": ((d,), (None,)),
+            "wq": ((d, cfg.n_heads * hd), ("embed", "heads")),
+            "wk": ((d, cfg.n_kv_heads * hd), ("embed", "kv_heads")),
+            "wv": ((d, cfg.n_kv_heads * hd), ("embed", "kv_heads")),
+            "wo": ((cfg.n_heads * hd, d), ("heads", "embed")),
+        }
+        if cfg.qk_norm:
+            out["q_norm"] = ((hd,), (None,))
+            out["k_norm"] = ((hd,), (None,))
+        return out
+    if kind == "ssm":
+        ssm = cfg.ssm
+        assert ssm is not None
+        d_inner = ssm.expand * d
+        nh = d_inner // ssm.head_dim
+        conv_ch = d_inner + 2 * ssm.d_state  # conv over [x, B, C]
+        d_in_proj = 2 * d_inner + 2 * ssm.d_state + nh  # z, x, B, C, dt
+        return {
+            "ln": ((d,), (None,)),
+            "in_proj": ((d, d_in_proj), ("embed", "ssm_inner")),
+            "conv_w": ((ssm.d_conv, conv_ch), (None, "ssm_inner")),
+            "conv_b": ((conv_ch,), ("ssm_inner",)),
+            "A_log": ((nh,), (None,)),
+            "D": ((nh,), (None,)),
+            "dt_bias": ((nh,), (None,)),
+            "gate_norm": ((d_inner,), ("ssm_inner",)),
+            "out_proj": ((d_inner, d), ("ssm_inner", "embed")),
+        }
+    raise ValueError(kind)
+
+
+def _ffn_shapes(cfg: ModelConfig, is_moe: bool) -> Dict[str, Tuple[Tuple[int, ...], Tuple]]:
+    d = cfg.d_model
+    if is_moe:
+        moe = cfg.moe
+        assert moe is not None
+        e, f = moe.n_experts, moe.d_ff_expert
+        out = {
+            "ln": ((d,), (None,)),
+            "router": ((d, e), ("embed", None)),
+            "w_up": ((e, d, f), ("expert", "expert_embed", None)),
+            "w_down": ((e, f, d), ("expert", None, "expert_embed")),
+        }
+        if cfg.ffn_act == "swiglu":
+            out["w_gate"] = ((e, d, f), ("expert", "expert_embed", None))
+        return out
+    f = cfg.d_ff
+    out = {
+        "ln": ((d,), (None,)),
+        "w_up": ((d, f), ("embed", "mlp")),
+        "w_down": ((f, d), ("mlp", "embed")),
+    }
+    if cfg.ffn_act == "swiglu":
+        out["w_gate"] = ((d, f), ("embed", "mlp"))
+    return out
+
+
+def block_layout(cfg: ModelConfig):
+    """Per period-position: (mixer_kind, is_moe)."""
+    period = cfg.block_period
+    return [
+        (cfg.layer_kind(p), cfg.layer_is_moe(p)) for p in range(period)
+    ]
+
+
+def param_shapes(cfg: ModelConfig) -> Tree:
+    """Pytree of (shape, annotation) tuples, stacked over periods."""
+    period = cfg.block_period
+    if cfg.n_layers % period != 0:
+        raise ValueError(
+            f"{cfg.name}: n_layers={cfg.n_layers} not divisible by "
+            f"block period {period}"
+        )
+    n_periods = cfg.n_layers // period
+
+    def stack(entry):
+        shape, ann = entry
+        return ((n_periods, *shape), ("stacked", *ann))
+
+    layers = []
+    for kind, is_moe in block_layout(cfg):
+        block = {
+            "mixer": _mixer_shapes(cfg, kind),
+            "ffn": _ffn_shapes(cfg, is_moe),
+        }
+        layers.append(jax.tree.map(stack, block, is_leaf=_is_entry))
+    tree = {
+        "embed": ((cfg.padded_vocab, cfg.d_model), ("vocab", "embed_tbl")),
+        "final_norm": ((cfg.d_model,), (None,)),
+        "layers": tuple(layers),
+    }
+    if not cfg.tie_embeddings:
+        tree["unembed"] = ((cfg.d_model, cfg.padded_vocab), ("embed_tbl", "vocab"))
+    return tree
+
+
+def _is_entry(x) -> bool:
+    return (
+        isinstance(x, tuple)
+        and len(x) == 2
+        and isinstance(x[0], tuple)
+        and all(isinstance(i, (int, np.integer)) for i in x[0])
+    )
+
+
+def param_annotations(cfg: ModelConfig) -> Tree:
+    return jax.tree.map(lambda e: e[1], param_shapes(cfg), is_leaf=_is_entry)
+
+
+def param_structs(cfg: ModelConfig, dtype=None) -> Tree:
+    """ShapeDtypeStructs (no allocation) — used by the dry-run."""
+    dt = dtype or jnp.dtype(cfg.dtype)
+    return jax.tree.map(
+        lambda e: jax.ShapeDtypeStruct(e[0], _leaf_dtype(e[0], dt)),
+        param_shapes(cfg),
+        is_leaf=_is_entry,
+    )
+
+
+def _leaf_dtype(shape, dt):
+    return dt
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    total = 0
+    shapes = param_shapes(cfg)
+    for path, entry in jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=_is_entry
+    )[0]:
+        shape = entry[0]
+        n = int(np.prod(shape))
+        if active_only and cfg.moe is not None:
+            keys = [getattr(k, "key", None) for k in path]
+            if any(k in ("w_up", "w_down", "w_gate") for k in keys) and len(shape) == 4:
+                # stacked MoE expert weight: count only top_k / n_experts
+                n = n * cfg.moe.top_k // cfg.moe.n_experts
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key, dtype=None) -> Tree:
+    dt = dtype or jnp.dtype(cfg.dtype)
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes, is_leaf=_is_entry)
+    keys = jax.random.split(key, len(flat))
+    leaves = []
+    for (path, entry), k in zip(flat, keys):
+        shape, _ann = entry
+        name = getattr(path[-1], "key", "")
+        leaves.append(_init_leaf(name, shape, k, dt, cfg))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(shapes, is_leaf=_is_entry), leaves
+    )
+
+
+def _init_leaf(name: str, shape, key, dt, cfg: ModelConfig):
+    if name == "embed":
+        return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dt)
+    if name in ("ln", "final_norm", "gate_norm", "q_norm", "k_norm"):
+        return jnp.ones(shape, dt)
+    if name in ("conv_b", "dt_bias", "D"):
+        return jnp.zeros(shape, dt) if name == "conv_b" else jnp.ones(shape, dt) * (
+            0.5 if name == "dt_bias" else 1.0
+        )
+    if name == "A_log":
+        # A in [1, 16) as in Mamba2
+        per = shape[-1]
+        a = jnp.broadcast_to(
+            jnp.log(jnp.linspace(1.0, 16.0, per, dtype=jnp.float32)), shape
+        )
+        return a.astype(dt)
+    # fan-in scaled normal for all matmul weights
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dt)
+
+
+__all__ = [
+    "param_shapes",
+    "param_annotations",
+    "param_structs",
+    "init_params",
+    "count_params",
+    "block_layout",
+]

@@ -1,0 +1,213 @@
+"""Mamba2 (state-space duality) mixer: chunked SSD scan + recurrent decode.
+
+Implements the SSD algorithm of arXiv:2405.21060 (ngroups=1):
+  h_t = exp(dt_t A) h_{t-1} + dt_t B_t ⊗ x_t ,   y_t = C_t · h_t + D x_t
+computed chunkwise — a quadratic intra-chunk term (attention-like, MXU
+friendly) plus an inter-chunk linear recurrence over chunk states — giving
+O(S·Q) work and O(1)-state decode (which is why long_500k runs on the
+ssm/hybrid archs only).
+
+MeCeFO note (DESIGN.md §Arch-applicability): technique I (MHA skip) does not
+apply here; techniques II (recompute) and III (low-rank Wgrad on
+in_proj/out_proj — plain linears, eq. (2) verbatim) do.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.lowrank import lowrank_linear
+from repro.core.recompute import ffn_recompute
+from repro.parallel.sharding import ShardingRules, constrain
+
+
+def _split_in_proj(zxbcdt, d_inner, d_state, nh):
+    z = zxbcdt[..., :d_inner]
+    xs = zxbcdt[..., d_inner : 2 * d_inner]
+    b = zxbcdt[..., 2 * d_inner : 2 * d_inner + d_state]
+    c = zxbcdt[..., 2 * d_inner + d_state : 2 * d_inner + 2 * d_state]
+    dt = zxbcdt[..., 2 * d_inner + 2 * d_state :]
+    assert dt.shape[-1] == nh
+    return z, xs, b, c, dt
+
+
+def _causal_conv(u, w, bias):
+    """Depthwise causal conv. u: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(k):
+        out = out + pad[:, i : i + u.shape[1], :] * w[i]
+    return jax.nn.silu((out + bias).astype(jnp.float32)).astype(u.dtype)
+
+
+def ssd_chunked(xh, dt, a_log, b, c, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    xh: (B, S, nh, hd); dt: (B, S, nh) (post-softplus); a_log: (nh,);
+    b, c: (B, S, N).  Returns (y: (B, S, nh, hd), h_final: (B, nh, N, hd)).
+    """
+    B, S, nh, hd = xh.shape
+    N = b.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:  # fall back to the largest divisor (correctness path)
+        Q -= 1
+    nc = S // Q
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (nh,) negative
+
+    dtf = dt.astype(jnp.float32)
+    lam = dtf * a  # (B, S, nh) <= 0
+    lam = lam.reshape(B, nc, Q, nh)
+    cum = jnp.cumsum(lam, axis=2)  # inclusive within chunk
+    bq = b.reshape(B, nc, Q, N).astype(jnp.float32)
+    cq = c.reshape(B, nc, Q, N).astype(jnp.float32)
+    xq = xh.reshape(B, nc, Q, nh, hd).astype(jnp.float32)
+    dtq = dtf.reshape(B, nc, Q, nh)
+
+    # ---- intra-chunk (quadratic, masked-causal) --------------------------
+    cb = jnp.einsum("bnqs,bnks->bnqk", cq, bq)  # (B, nc, Q, Q)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,nh)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask *before* exp: masked (k > q) entries have decay > 0 and would
+    # overflow, poisoning the backward with inf * 0 = nan.
+    g = jnp.exp(jnp.where(mask[None, None, :, :, None], decay, -jnp.inf))
+    m = cb[..., None] * g * dtq[:, :, None, :, :]  # (B,nc,Q,Q,nh)
+    y_intra = jnp.einsum("bnqkh,bnkhp->bnqhp", m, xq)
+
+    # ---- chunk states + inter-chunk recurrence ---------------------------
+    tail = cum[:, :, -1:, :] - cum  # decay from pos k to chunk end
+    s_chunk = jnp.einsum(
+        "bnks,bnkh,bnkhp->bnhsp", bq, jnp.exp(tail) * dtq, xq
+    )  # (B, nc, nh, N, hd)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B, nc, nh)
+
+    h_init = (
+        jnp.zeros((B, nh, N, hd), jnp.float32)
+        if h0 is None
+        else h0.astype(jnp.float32)
+    )
+
+    def body(h, xs):
+        s_n, dec = xs  # (B, nh, N, hd), (B, nh)
+        h_out = h  # state entering this chunk
+        h = dec[..., None, None] * h + s_n
+        return h, h_out
+
+    (h_final, h_states) = jax.lax.scan(
+        body,
+        h_init,
+        (s_chunk.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_states = h_states.transpose(1, 0, 2, 3, 4)  # (B, nc, nh, N, hd)
+
+    # ---- inter-chunk contribution ----------------------------------------
+    y_inter = jnp.einsum(
+        "bnqs,bnqh,bnhsp->bnqhp", cq, jnp.exp(cum), h_states
+    )
+    y = (y_intra + y_inter).reshape(B, S, nh, hd)
+    return y.astype(xh.dtype), h_final.astype(xh.dtype)
+
+
+def ssd_decode(xh, dt, a_log, b, c, h):
+    """Single-token SSD update. xh: (B, nh, hd); b, c: (B, N); h: (B, nh, N, hd)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dtf = dt.astype(jnp.float32)  # (B, nh)
+    dec = jnp.exp(dtf * a)  # (B, nh)
+    upd = jnp.einsum("bs,bhp->bhsp", b.astype(jnp.float32), xh.astype(jnp.float32))
+    h_new = dec[..., None, None] * h.astype(jnp.float32) + dtf[..., None, None] * upd
+    y = jnp.einsum("bs,bhsp->bhp", c.astype(jnp.float32), h_new)
+    return y.astype(xh.dtype), h_new.astype(h.dtype)
+
+
+def ssm_block(
+    p,
+    x,
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    *,
+    proj=None,
+    keep=1.0,
+    lowrank_mode: str = "exact",
+    recompute: bool = False,
+    cache: Optional[dict] = None,
+):
+    """Pre-norm Mamba2 sublayer with residual. Returns (y, new_cache)."""
+    ssm = cfg.ssm
+    assert ssm is not None
+    d = cfg.d_model
+    d_inner = ssm.expand * d
+    nh = d_inner // ssm.head_dim
+    N = ssm.d_state
+
+    from repro.models.layers import rmsnorm
+
+    def lin(xv, w, v1):
+        if lowrank_mode == "exact" or v1 is None:
+            return xv @ w
+        k = jnp.asarray(keep, xv.dtype)
+        k = jnp.broadcast_to(k, (xv.shape[0],))
+        return lowrank_linear(xv, w, v1, k, lowrank_mode)
+
+    def body(p, x, proj):
+        xn = rmsnorm(x, p["ln"], cfg.norm_eps)
+        zxbcdt = lin(xn, p["in_proj"], _pp(proj, "in_proj"))
+        z, xs, b, c, dt = _split_in_proj(zxbcdt, d_inner, N, nh)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+        u = jnp.concatenate([xs, b, c], axis=-1)
+        if cache is not None and x.shape[1] == 1:  # decode
+            buf = jnp.concatenate(
+                [cache["conv"][:, 1:], u[:, 0][:, None]], axis=1
+            )  # (B, K, C) rolling window, newest last
+            conv = jnp.einsum("bkc,kc->bc", buf, p["conv_w"]) + p["conv_b"]
+            conv = jax.nn.silu(conv.astype(jnp.float32)).astype(u.dtype)[:, None]
+            new_conv = buf
+        else:
+            conv = _causal_conv(u, p["conv_w"], p["conv_b"])
+            new_conv = None
+            if cache is not None:  # prefill: stash the conv tail
+                k = p["conv_w"].shape[0]
+                pad = jnp.pad(u, ((0, 0), (k, 0), (0, 0)))
+                new_conv = pad[:, -k:, :]
+        xs_c = conv[..., :d_inner]
+        b_c = conv[..., d_inner : d_inner + N]
+        c_c = conv[..., d_inner + N :]
+        xh = xs_c.reshape(xs_c.shape[0], xs_c.shape[1], nh, ssm.head_dim)
+
+        if cache is not None and x.shape[1] == 1:  # decode
+            y1, h_new = ssd_decode(
+                xh[:, 0], dt[:, 0], p["A_log"], b_c[:, 0], c_c[:, 0], cache["ssd"]
+            )
+            y = y1[:, None]
+        else:
+            h0 = cache["ssd"] if cache is not None else None
+            y, h_new = ssd_chunked(
+                xh, dt, p["A_log"], b_c, c_c, ssm.chunk,
+                h0=None if cache is None else None,
+            )
+        y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(*y.shape[:2], d_inner).astype(x.dtype)
+        y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                    p["gate_norm"], cfg.norm_eps)
+        y = constrain(y, rules, "batch", "seq", "ssm_inner")
+        out = lin(y, p["out_proj"], _pp(proj, "out_proj"))
+        new_cache = (
+            None
+            if cache is None
+            else {"conv": new_conv, "ssd": h_new.astype(cache["ssd"].dtype)}
+        )
+        return constrain(out, rules, "batch", "seq", None), new_cache
+
+    if recompute and cache is None:  # technique II (training only)
+        body = ffn_recompute(body)
+    y, new_cache = body(p, x, proj)
+    return x + y, new_cache
+
+
+def _pp(proj, name):
+    if proj is None:
+        return None
+    return proj.get(name)

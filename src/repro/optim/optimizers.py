@@ -1,0 +1,107 @@
+"""Optimizers from scratch (no optax): AdamW and momentum SGD.
+
+AdamW is the paper's experimental optimizer (Appendix D); momentum SGD is the
+one Theorem 1 analyses.  Moments are kept in fp32 and sharded like the
+params; bf16 params are updated in fp32 math and cast back.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+Tree = Any
+
+
+class AdamWState(NamedTuple):
+    m: Tree
+    v: Tree
+
+
+class SGDMState(NamedTuple):
+    m: Tree
+
+
+def init_opt_state(params: Tree, cfg: TrainConfig):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    if cfg.optimizer == "adamw":
+        return AdamWState(
+            m=jax.tree.map(zeros, params), v=jax.tree.map(zeros, params)
+        )
+    if cfg.optimizer == "sgdm":
+        return SGDMState(m=jax.tree.map(zeros, params))
+    raise ValueError(cfg.optimizer)
+
+
+def opt_state_structs(param_structs: Tree, cfg: TrainConfig):
+    s = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    if cfg.optimizer == "adamw":
+        return AdamWState(
+            m=jax.tree.map(s, param_structs), v=jax.tree.map(s, param_structs)
+        )
+    return SGDMState(m=jax.tree.map(s, param_structs))
+
+
+def global_norm(tree: Tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads: Tree, max_norm: float) -> Tuple[Tree, jnp.ndarray]:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def apply_update(
+    params: Tree,
+    grads: Tree,
+    opt_state,
+    lr,
+    step,
+    cfg: TrainConfig,
+):
+    """One optimizer step. grads must already be fp32 (post-clip)."""
+    if cfg.optimizer == "adamw":
+        b1, b2, eps, wd = cfg.b1, cfg.b2, cfg.eps, cfg.weight_decay
+        t = step.astype(jnp.float32) + 1.0
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, opt_state.m, grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, opt_state.v, grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, m, v):
+            mh = m / bc1
+            vh = v / bc2
+            step_ = mh / (jnp.sqrt(vh) + eps) + wd * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(m=m, v=v)
+
+    if cfg.optimizer == "sgdm":
+        # Paper's update: m_t = b m_{t-1} + (1-b) g_t ; w_{t+1} = w_t - eta m_t
+        b = cfg.momentum
+        m = jax.tree.map(lambda m, g: b * m + (1 - b) * g, opt_state.m, grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype), params, m
+        )
+        return new_params, SGDMState(m=m)
+    raise ValueError(cfg.optimizer)
+
+
+def lr_schedule(cfg: TrainConfig, total_steps: int):
+    warmup = max(int(total_steps * cfg.warmup_frac), 1)
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = cfg.learning_rate * step / warmup
+        prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0, 1)
+        cos = cfg.learning_rate * (0.1 + 0.45 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr

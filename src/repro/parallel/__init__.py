@@ -1,0 +1,17 @@
+from repro.parallel.sharding import (
+    ShardingRules,
+    batch_spec,
+    constrain,
+    logical_to_spec,
+    param_specs,
+    state_specs,
+)
+
+__all__ = [
+    "ShardingRules",
+    "batch_spec",
+    "constrain",
+    "logical_to_spec",
+    "param_specs",
+    "state_specs",
+]

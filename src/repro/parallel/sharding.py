@@ -1,0 +1,175 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP).
+
+Every parameter and activation in the model carries *logical* axis names;
+``ShardingRules`` maps them to physical mesh axes.  This is the one place the
+parallelism policy lives, so hillclimbing a sharding is a one-line change.
+
+Physical mesh axes (see launch/mesh.py):
+  pod    pure data parallelism across pods (multi-pod only)
+  data   data parallelism + FSDP weight sharding
+  model  tensor / expert / sequence parallelism
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Logical axis vocabulary ----------------------------------------------------
+#
+#   batch        global batch dim of activations
+#   seq          sequence dim of activations
+#   embed        model dim (d_model) of weights/activations
+#   heads        attention-head dim (q heads * head_dim fused or head axis)
+#   kv_heads     key/value head axis
+#   mlp          FFN hidden dim
+#   vocab        vocabulary dim
+#   expert       MoE expert axis
+#   cache_seq    KV-cache sequence axis
+#   ssm_inner    Mamba inner (expanded) dim
+#   norm         norm scale vectors (replicated)
+#   stacked      leading layer axis of scan-stacked params (never sharded)
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    batch: Tuple[str, ...] = ("pod", "data")
+    seq: Optional[str] = None          # set to "model" for sequence parallelism
+    # FSDP axis/axes for weight d_model dims (str, tuple of axes, or None)
+    embed: object = "data"
+    embed_tbl: Optional[str] = "data"  # d dim of embed/unembed tables (must
+                                       # not reuse the vocab dim's axis)
+    heads: Optional[str] = "model"
+    kv_heads: Optional[str] = "model"
+    kv_cache: Optional[str] = "model"  # KV-head dim of decode caches
+    cache_hd: Optional[str] = None     # head_dim of caches (kv fallback)
+    mlp: Optional[str] = "model"
+    vocab: Optional[str] = "model"
+    expert: Optional[str] = "model"
+    expert_embed: Optional[str] = "data"  # d dim of expert weights (EP owns
+                                          # 'model'; FSDP over 'data' only)
+    # MoE dispatch-buffer group dim: batch axes minus the EP axis
+    dispatch: Tuple[str, ...] = ("pod", "data")
+    cache_seq: Optional[str] = None    # decode: shard cache seq when kv_heads can't split
+    ssm_inner: Optional[str] = "model"
+    norm: Optional[str] = None
+    stacked: Optional[str] = None
+
+    def spec(self, *logical: Optional[str]) -> P:
+        """PartitionSpec for a tensor whose dims carry these logical names.
+
+        A mesh axis may shard only one dim: if two logical names resolve to
+        the same axis (e.g. seq->model under SP and mlp->model under TP),
+        the later dim is left unsharded.
+        """
+        out = []
+        used = set()
+        for name in logical:
+            if name is None:
+                out.append(None)
+                continue
+            ax = getattr(self, name)
+            members = (
+                set(ax) if isinstance(ax, tuple) else ({ax} if ax else set())
+            )
+            if members & used:
+                out.append(None)
+                continue
+            used |= members
+            out.append(ax)
+        return P(*out)
+
+
+def default_rules(
+    mesh: Mesh,
+    *,
+    fsdp: bool = True,
+    sequence_parallel: bool = False,
+    n_kv_heads: int = 0,
+) -> ShardingRules:
+    """Rules adapted to the mesh + model at hand."""
+    axes = mesh.axis_names
+    batch = tuple(a for a in ("pod", "data") if a in axes)
+    rules = ShardingRules(batch=batch, dispatch=batch)
+    if "model" not in axes:
+        rules = replace(
+            rules, heads=None, kv_heads=None, kv_cache=None, mlp=None,
+            vocab=None, expert=None, ssm_inner=None,
+        )
+    if not fsdp or "data" not in axes:
+        rules = replace(rules, embed=None, embed_tbl=None, expert_embed=None)
+    if sequence_parallel and "model" in axes:
+        rules = replace(rules, seq="model")
+    # GQA decode caches: when the kv-head count does not divide the model
+    # axis, shard the cache over head_dim instead (a seq-dim shard would make
+    # every cache update a GSPMD full-rematerialization; head_dim updates
+    # stay local and the decode QK partial-sum all-reduce is tiny).
+    if n_kv_heads and "model" in axes:
+        if n_kv_heads % mesh.shape["model"] != 0:
+            rules = replace(rules, kv_cache=None, cache_hd="model")
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+
+def logical_to_spec(rules: ShardingRules, logical: Tuple[Optional[str], ...]) -> P:
+    return rules.spec(*logical)
+
+
+def is_annotation(a) -> bool:
+    """A leaf annotation: tuple of logical-axis names (str or None)."""
+    return isinstance(a, tuple) and len(a) > 0 and all(
+        x is None or isinstance(x, str) for x in a
+    )
+
+
+def spec_tree(rules: ShardingRules, ann_tree):
+    """Map a pytree of logical annotations to PartitionSpecs."""
+    return jax.tree.map(
+        lambda ann: rules.spec(*ann), ann_tree, is_leaf=is_annotation
+    )
+
+
+def constrain(x, rules: ShardingRules, *logical: Optional[str]):
+    """with_sharding_constraint by logical names (no-op outside a mesh ctx)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, rules.spec(*logical))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def batch_spec(rules: ShardingRules) -> P:
+    return P(rules.batch if rules.batch else None)
+
+
+def param_specs(params, annotations):
+    """Map a pytree of logical annotations to PartitionSpecs.
+
+    `annotations` mirrors the params pytree with tuples of logical names.
+    """
+    return jax.tree.map(
+        lambda ann: ann, annotations, is_leaf=lambda a: isinstance(a, P)
+    )
+
+
+def state_specs(param_spec_tree):
+    """Optimizer states share the param sharding; scalars replicated."""
+    return param_spec_tree
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def tree_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )

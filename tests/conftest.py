@@ -1,0 +1,52 @@
+import os
+
+# Smoke tests and benches must see the real (1-device) CPU platform —
+# XLA_FLAGS device-count forcing belongs to the dry-run ONLY.
+os.environ.pop("XLA_FLAGS", None)
+
+import jax  # noqa: E402
+
+import pytest  # noqa: E402
+
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig  # noqa: E402
+from repro.parallel.sharding import ShardingRules  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def local_rules():
+    """No-mesh sharding rules (everything replicated) for 1-device tests."""
+    return ShardingRules(
+        batch=(), embed=None, heads=None, kv_heads=None, mlp=None,
+        vocab=None, expert=None, ssm_inner=None,
+    )
+
+
+TINY_DENSE = ModelConfig(
+    name="tiny-dense", n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab_size=256, dtype="float32",
+)
+TINY_MOE = ModelConfig(
+    name="tiny-moe", family="moe", n_layers=4, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=0, vocab_size=256, dtype="float32",
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=32, capacity_factor=4.0),
+)
+TINY_SSM = ModelConfig(
+    name="tiny-ssm", family="ssm", n_layers=4, d_model=64, n_heads=1,
+    n_kv_heads=1, d_ff=0, vocab_size=256, dtype="float32",
+    ssm=SSMConfig(d_state=16, head_dim=16, chunk=8),
+)
+TINY_HYBRID = ModelConfig(
+    name="tiny-hybrid", family="hybrid", n_layers=8, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=256, dtype="float32", attn_every=4,
+    moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=32, every=2, offset=1,
+                  capacity_factor=4.0),
+    ssm=SSMConfig(d_state=16, head_dim=16, chunk=8),
+)
+
+
+@pytest.fixture(params=["dense", "moe", "ssm", "hybrid"])
+def tiny_cfg(request):
+    return {
+        "dense": TINY_DENSE, "moe": TINY_MOE,
+        "ssm": TINY_SSM, "hybrid": TINY_HYBRID,
+    }[request.param]

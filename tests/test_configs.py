@@ -1,0 +1,72 @@
+"""Assigned-architecture configs: registration, counts, structure."""
+import pytest
+
+from repro.configs.base import SHAPES, get_config, list_configs, reduced, shape_applicable
+
+ASSIGNED = {
+    # arch -> (expected total B, expected active B, tolerance)
+    "glm4-9b": (9.4e9, 9.4e9, 0.05),
+    "qwen3-0.6b": (0.6e9, 0.6e9, 0.1),
+    "granite-34b": (34e9, 34e9, 0.05),
+    "nemotron-4-340b": (340e9, 340e9, 0.05),
+    "musicgen-medium": (1.4e9, 1.4e9, 0.15),
+    "mamba2-2.7b": (2.7e9, 2.7e9, 0.05),
+    "jamba-1.5-large-398b": (398e9, 94e9, 0.05),
+    "qwen3-moe-30b-a3b": (30.5e9, 3.3e9, 0.05),
+    "qwen3-moe-235b-a22b": (235e9, 22.2e9, 0.05),
+    "phi-3-vision-4.2b": (3.8e9, 3.8e9, 0.1),
+}
+
+
+def test_all_assigned_registered():
+    names = set(list_configs())
+    for arch in ASSIGNED:
+        assert arch in names
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_param_counts(arch):
+    total, active, tol = ASSIGNED[arch]
+    cfg = get_config(arch)
+    assert abs(cfg.param_count() - total) / total < tol
+    assert abs(cfg.active_param_count() - active) / active < tol
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_period_divides_layers(arch):
+    cfg = get_config(arch)
+    assert cfg.n_layers % cfg.block_period == 0
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_reduced_same_family(arch):
+    cfg = get_config(arch)
+    small = reduced(cfg)
+    assert small.family == cfg.family
+    assert small.frontend == cfg.frontend
+    assert (small.moe is None) == (cfg.moe is None)
+    assert (small.ssm is None) == (cfg.ssm is None)
+    assert small.param_count() < 20e6
+
+
+def test_shape_grid_is_assigned():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert SHAPES["train_4k"].seq_len == 4096 and SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768 and SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288 and SHAPES["long_500k"].global_batch == 1
+
+
+def test_long_context_applicability():
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        ok, why = shape_applicable(cfg, SHAPES["long_500k"])
+        if cfg.family in ("ssm", "hybrid"):
+            assert ok
+        else:
+            assert not ok and "sub-quadratic" in why
+
+
+def test_padded_vocab():
+    assert get_config("mamba2-2.7b").padded_vocab % 16 == 0
+    assert get_config("glm4-9b").padded_vocab == 151552

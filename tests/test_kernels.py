@@ -1,0 +1,203 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.ref import (
+    flash_attention_ref,
+    flash_decode_ref,
+    lowrank_wgrad_project_ref,
+    lowrank_wgrad_ref,
+    rmsnorm_ref,
+    swiglu_ref,
+)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (B, Sq, Sk, H, KV, hd, dtype, causal, bq, bk)
+    (1, 128, 128, 4, 4, 32, jnp.float32, True, 64, 64),
+    (2, 256, 256, 8, 2, 64, jnp.bfloat16, True, 128, 64),
+    (1, 64, 64, 4, 1, 16, jnp.float32, True, 64, 32),   # MQA
+    (2, 128, 128, 6, 6, 32, jnp.float32, False, 64, 64),  # non-causal MHA
+    (1, 512, 512, 2, 2, 128, jnp.bfloat16, True, 128, 128),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_sweep(case):
+    B, Sq, Sk, H, KV, hd, dt, causal, bq, bk = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), dt)
+    k = jax.random.normal(ks[1], (B, Sk, KV, hd), dt)
+    v = jax.random.normal(ks[2], (B, Sk, KV, hd), dt)
+    o = ops.flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    r = flash_attention_ref(q, k, v, causal=causal)
+    atol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        o.astype(jnp.float32), r.astype(jnp.float32), atol=atol
+    )
+
+
+# ---------------------------------------------------------------------------
+# lowrank wgrad
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    t=st.sampled_from([128, 256, 512]),
+    n=st.sampled_from([32, 64, 128]),
+    m=st.sampled_from([256, 512]),
+    r=st.sampled_from([8, 16, 64]),
+    dt=st.sampled_from(["float32", "bfloat16"]),
+)
+def test_lowrank_wgrad_property(t, n, m, r, dt):
+    dt = jnp.dtype(dt)
+    ks = jax.random.split(jax.random.PRNGKey(42), 3)
+    x = jax.random.normal(ks[0], (t, n), dt)
+    dy = jax.random.normal(ks[1], (t, m), dt)
+    v1 = jax.random.normal(ks[2], (n, r), dt)
+    a = ops.lowrank_wgrad(x, dy, v1, block_t=128, block_m=256)
+    ref = lowrank_wgrad_ref(x, dy, v1).astype(a.dtype)
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-6
+    tol = 0.05 if dt == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32) / scale, np.asarray(ref, np.float32) / scale,
+        atol=tol,
+    )
+
+
+def test_lowrank_project_matches_ref():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(ks[0], (512, 64))
+    dy = jax.random.normal(ks[1], (512, 512))
+    v1 = jax.random.normal(ks[2], (64, 16))
+    from repro.kernels.lowrank_wgrad import lowrank_wgrad_project
+
+    a = lowrank_wgrad_project(x, dy, v1, block_t=128, block_m=128, interpret=True)
+    np.testing.assert_allclose(
+        a, lowrank_wgrad_project_ref(x, dy, v1), rtol=1e-4, atol=2e-3
+    )
+
+
+# ---------------------------------------------------------------------------
+# swiglu / rmsnorm (property-based)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(1, 64),
+    cols=st.sampled_from([16, 128, 384]),
+    dt=st.sampled_from(["float32", "bfloat16"]),
+)
+def test_swiglu_property(rows, cols, dt):
+    dt = jnp.dtype(dt)
+    g = jax.random.normal(jax.random.PRNGKey(rows), (rows, cols), dt)
+    u = jax.random.normal(jax.random.PRNGKey(cols), (rows, cols), dt)
+    o = ops.swiglu(g, u, block_rows=32, block_cols=128)
+    r = swiglu_ref(g, u)
+    tol = 2e-2 if dt == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(
+        o.astype(jnp.float32), r.astype(jnp.float32), atol=tol
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(1, 64),
+    d=st.sampled_from([32, 256, 1024]),
+    eps=st.sampled_from([1e-5, 1e-6]),
+)
+def test_rmsnorm_property(rows, d, eps):
+    x = jax.random.normal(jax.random.PRNGKey(rows + d), (rows, d))
+    s = jax.random.normal(jax.random.PRNGKey(d), (d,))
+    o = ops.rmsnorm(x, s, eps, block_rows=32)
+    np.testing.assert_allclose(o, rmsnorm_ref(x, s, eps), atol=1e-5)
+
+
+def test_rmsnorm_batched_shape():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 64))
+    s = jnp.ones(64)
+    assert ops.rmsnorm(x, s).shape == (2, 8, 64)
+
+
+# ---------------------------------------------------------------------------
+# the kernels match the model's own reference paths
+# ---------------------------------------------------------------------------
+
+
+def test_flash_matches_model_attention():
+    from repro.models.layers import causal_attention
+
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 32))
+    k = jax.random.normal(ks[1], (2, 128, 2, 32))
+    v = jax.random.normal(ks[2], (2, 128, 2, 32))
+    o = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    np.testing.assert_allclose(
+        o, causal_attention(q, k, v, chunk=64), atol=2e-5
+    )
+
+
+def test_lowrank_kernel_matches_custom_vjp():
+    """Kernel result == the training path's lowrank_linear backward."""
+    from repro.core.lowrank import lowrank_linear, svd_projection
+
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    x = jax.random.normal(ks[0], (256, 64))
+    w = jax.random.normal(ks[1], (64, 256))
+    dy = jax.random.normal(ks[2], (256, 256))
+    v1 = svd_projection(w, 16)
+    dw_vjp = jax.grad(
+        lambda w: jnp.sum(lowrank_linear(x, w, v1, jnp.zeros(256), "degraded") * dy)
+    )(w)
+    dw_kernel = ops.lowrank_wgrad(x, dy, v1, block_t=128, block_m=128)
+    np.testing.assert_allclose(dw_kernel, dw_vjp, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "case",
+    [
+        # (B, Smax, H, KV, hd, cur_len, bk, dtype)
+        (2, 256, 4, 2, 32, 200, 64, jnp.float32),
+        (1, 512, 8, 1, 64, 512, 128, jnp.float32),   # MQA, full cache
+        (2, 256, 4, 4, 32, 1, 64, jnp.bfloat16),     # single valid position
+        (1, 1024, 2, 2, 128, 700, 256, jnp.bfloat16),
+    ],
+)
+def test_flash_decode_sweep(case):
+    B, Smax, H, KV, hd, cur_len, bk, dt = case
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd), dt)
+    k = jax.random.normal(ks[1], (B, Smax, KV, hd), dt)
+    v = jax.random.normal(ks[2], (B, Smax, KV, hd), dt)
+    o = ops.flash_decode(q, k, v, jnp.int32(cur_len), block_k=bk)
+    r = flash_decode_ref(q, k, v, cur_len)
+    atol = 3e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        o.astype(jnp.float32), r.astype(jnp.float32), atol=atol
+    )
+
+
+def test_flash_decode_matches_model_decode_attention():
+    from repro.models.layers import decode_attention
+
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (2, 1, 4, 32))
+    k = jax.random.normal(ks[1], (2, 128, 2, 32))
+    v = jax.random.normal(ks[2], (2, 128, 2, 32))
+    o = ops.flash_decode(q, k, v, jnp.int32(100), block_k=64)
+    np.testing.assert_allclose(o, decode_attention(q, k, v, 100), atol=2e-5)
