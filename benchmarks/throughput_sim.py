@@ -20,12 +20,14 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
 from repro.configs.base import ModelConfig, get_config
-from repro.ft.failures import SCENARIOS, FailureProcess
+from repro.ft.failures import SCENARIOS, ChaosEngine, engine_for_scenario
+from repro.ft.injectors import Injector, chaos_preset
+from repro.ft.trace import load_trace, replay_engine
 
 
 # ---------------------------------------------------------------------------
@@ -77,6 +79,9 @@ def simulate(
     reconfig_pause_s: float = 150.0,
     promote_pause_s: float = 10.0,
     seed: int = 0,
+    injectors: Optional[Sequence[Injector]] = None,
+    chaos: Optional[str] = None,
+    trace_path: Optional[str] = None,
 ) -> float:
     """Returns steady-state tokens/s for one (system, scenario).
 
@@ -89,17 +94,39 @@ def simulate(
     """
     costs = technique_cost_model(cfg)
     scenario = SCENARIOS[scenario_name]
-    proc = FailureProcess(scenario, n_dp, n_stages, healthy_step_s, seed=seed)
+    # chaos source: replayed trace > explicit injectors > preset > scenario —
+    # the same definitions that drive training and the CI smoke.
+    if trace_path is not None:
+        trace = load_trace(trace_path)
+        engine = replay_engine(trace)
+        n_dp, n_stages = trace.header.n_dp, trace.header.n_stages
+        sim_steps = trace.footer.total_steps if trace.footer else sim_steps
+    elif injectors is not None or chaos is not None:
+        injs = injectors if injectors is not None else chaos_preset(chaos, scenario)
+        engine = ChaosEngine(n_dp, n_stages, healthy_step_s, injs, seed=seed)
+    else:
+        engine = engine_for_scenario(
+            scenario, n_dp, n_stages, healthy_step_s, seed=seed
+        )
     t_comp = healthy_step_s
     t_comm = comm_frac * healthy_step_s
     t = 0.0
     toks = 0.0
     prev_failed = frozenset()
     for step in range(sim_steps):
-        plan = proc.step(step)
+        outcome = engine.step(step)
+        plan = outcome.plan
         new_fail = plan.failed - prev_failed
         recovered = prev_failed - plan.failed
         prev_failed = plan.failed
+        # straggler slowdown per DP rank (slowest surviving device) and the
+        # network-degradation multiplier on every state-transfer pause
+        rank_slow = [1.0] * n_dp
+        for (r, _s), t_dev in outcome.device_times.items():
+            # normalize by the engine's own step grid (a replayed trace may
+            # have been recorded at a different step_time_s than this sim)
+            rank_slow[r] = max(rank_slow[r], t_dev / engine.step_time_s)
+        net = outcome.net_inflation
 
         if system == "bamboo":
             # redundant fwd of the neighbor stage always (+fwd/3 compute);
@@ -109,9 +136,10 @@ def simulate(
             for r in range(n_dp):
                 if any(rr == r for (rr, s_) in plan.failed):
                     worst = max(worst, 2.0)
+            worst *= max(rank_slow)  # exact computation: stragglers gate lockstep
             step_s = max(t_comp * worst, t_comm)
             if new_fail:
-                t += promote_pause_s * len(new_fail)
+                t += promote_pause_s * len(new_fail) * net
             t += step_s
             toks += tokens_per_step
             continue
@@ -126,25 +154,28 @@ def simulate(
                     worst = max(
                         worst, n_stages / max(n_stages - n_failed, 1)
                     )
+            worst *= max(rank_slow)  # lockstep: slowest straggler gates all
             step_s = max(t_comp * worst, t_comm)
             if new_fail or recovered:
-                t += reconfig_pause_s * (len(new_fail) + len(recovered))
+                t += reconfig_pause_s * (len(new_fail) + len(recovered)) * net
             t += step_s
             toks += tokens_per_step
             continue
 
         # mecefo
         if new_fail or recovered:
-            t += fetch_pause_s * (len(new_fail) + len(recovered))
+            t += fetch_pause_s * (len(new_fail) + len(recovered)) * net
         # per-pipeline relative speed (bottleneck stage of each pipeline)
         speeds = []
         for r in range(n_dp):
             deg = plan.degraded_stages(r)
-            if not deg:
-                speeds.append(1.0)
-                continue
-            # the doubled node is the bottleneck stage of this pipeline
-            rel = 2.0 * costs["mecefo_degraded"] / costs["healthy"]
+            rel = 1.0
+            if deg:
+                # the doubled node is the bottleneck stage of this pipeline
+                rel = 2.0 * costs["mecefo_degraded"] / costs["healthy"]
+            # stragglers slow only their own pipeline (load rebalancing
+            # shifts tokens away instead of gating the whole cluster)
+            rel = max(rel, 1.0) * rank_slow[r]
             speeds.append(1.0 / max(rel, 1.0))
         dropped = plan.dropped_ranks()
         for r in dropped:
@@ -195,7 +226,43 @@ def run_table2(verbose: bool = True):
     return rows
 
 
+def run_chaos_table(chaos: str = None, trace_path: str = None, verbose=True):
+    """Same three systems under a chaos preset or a replayed trace."""
+    rows = []
+    for arch in ("llama-350m", "llama-1b", "llama-7b"):
+        cfg = get_config(arch)
+        base_step = {"llama-350m": 0.35, "llama-1b": 0.9, "llama-7b": 2.4}[arch]
+        for system in ("bamboo", "oobleck", "mecefo"):
+            base = simulate(system, cfg, "none", healthy_step_s=base_step)
+            tps = simulate(
+                system, cfg, "high", healthy_step_s=base_step,
+                chaos=chaos, trace_path=trace_path,
+            )
+            drop = 100.0 * (1 - tps / base)
+            rows.append(dict(arch=arch, system=system,
+                             chaos=chaos or trace_path,
+                             tokens_per_s=tps, drop_pct=drop))
+            if verbose:
+                print(
+                    f"{arch:12s} {system:8s} {chaos or 'trace':12s} "
+                    f"{tps/1e3:10.1f}k tok/s  drop {drop:6.2f}%"
+                )
+    return rows
+
+
 def main():
+    import argparse
+
+    from repro.ft.injectors import CHAOS_PRESETS
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--chaos", default=None, choices=list(CHAOS_PRESETS),
+                    help="run the comparison under a chaos preset")
+    ap.add_argument("--trace", default=None,
+                    help="replay a recorded chaos trace instead of sampling")
+    args = ap.parse_args()
+    if args.chaos or args.trace:
+        return run_chaos_table(chaos=args.chaos, trace_path=args.trace)
     rows = run_table2()
     # headline claim check (paper: MeCeFO high-freq drop ~4%, others 5-6.7x worse)
     by = {(r["arch"], r["system"], r["scenario"]): r for r in rows}

@@ -1,5 +1,8 @@
 """End-to-end driver: pretrain a ~100M-param LLaMA-350M-family model with
-MeCeFO fault tolerance — injected failures, NDB failover, recovery,
+MeCeFO fault tolerance under a composed chaos scenario — Poisson crashes,
+a correlated rack outage, a recurring straggler and a network brownout —
+recording every event to a JSONL trace, then replaying the trace bit-exactly
+and asserting the recovery accounting matches.  Also exercises NDB failover,
 async checkpointing and a restart.
 
 Full-size by default is CPU-hostile; we train the ~8M reduced config for a
@@ -11,6 +14,12 @@ import argparse
 
 from repro.configs.base import MeCeFOConfig, ShapeConfig, TrainConfig, get_config, reduced
 from repro.ft.failures import SCENARIOS
+from repro.ft.injectors import (
+    CorrelatedDomainInjector,
+    NetworkDegradationInjector,
+    PoissonCrashInjector,
+    StragglerInjector,
+)
 from repro.launch.train import Trainer
 
 
@@ -19,6 +28,7 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--ckpt-dir", default="/tmp/mecefo_example_ckpt")
+    ap.add_argument("--trace", default="/tmp/mecefo_example_trace.jsonl")
     args = ap.parse_args()
 
     cfg = get_config("llama-350m")
@@ -28,9 +38,20 @@ def main():
     tc = TrainConfig(steps=args.steps, learning_rate=3e-3,
                      checkpoint_every=50, checkpoint_dir=args.ckpt_dir)
     mecefo = MeCeFOConfig(mode="dynamic", rank=16, svd_period=20)
+    sc = SCENARIOS["high"]
+    injectors = [
+        PoissonCrashInjector(sc),
+        CorrelatedDomainInjector(8 * sc.fail_interval_s, sc.recover_time_s,
+                                 domain="stage"),
+        StragglerInjector(4 * sc.fail_interval_s, sc.fail_interval_s,
+                          slow_factor=8.0),
+        NetworkDegradationInjector(6 * sc.fail_interval_s, sc.fail_interval_s,
+                                   inflation=3.0),
+    ]
     trainer = Trainer(
-        cfg, shape, tc, mecefo=mecefo, scenario=SCENARIOS["high"],
+        cfg, shape, tc, mecefo=mecefo,
         n_dp=4, n_stages=4, step_time_s=3600.0,  # accelerated failures
+        injectors=injectors, trace_record=args.trace,
     )
     # also deterministically kill a device at step 20 for 30 steps
     trainer.process.inject(20, (1, 2), down_steps=30)
@@ -41,6 +62,17 @@ def main():
         f"rank_drops={acc.n_rank_drops} "
         f"peer_fetch={acc.peer_fetch_bytes/1e6:.1f}MB"
     )
+    print(f"trace recorded to {args.trace} ({len(trainer.process.events)} events)")
+
+    # replay the trace bit-exactly: same events, same accounting
+    replayed = Trainer(cfg, shape, TrainConfig(steps=args.steps,
+                                               learning_rate=3e-3),
+                       mecefo=mecefo, trace_replay=args.trace)
+    replayed.run(log_every=0)
+    problems = replayed.verify_replay()
+    assert not problems, problems
+    print(f"replay OK: {len(replayed.process.events)} events reproduced")
+
     # simulate a full restart from the async checkpoint
     trainer2 = Trainer(cfg, shape, tc, mecefo=mecefo)
     assert trainer2.resume_from_checkpoint(), "no checkpoint found"

@@ -33,6 +33,10 @@ class RecoveryAccounting:
     n_recoveries: int = 0
     n_rank_drops: int = 0
 
+    def as_dict(self) -> Dict[str, int]:
+        """Integer totals for the chaos-trace footer (replay verification)."""
+        return dataclasses.asdict(self)
+
 
 @dataclass
 class FTController:
@@ -61,29 +65,52 @@ class FTController:
         bytes_per_param = 2 + 4 + 4  # bf16 param + fp32 m + fp32 v
         return per_stage * bytes_per_param
 
-    def update_plan(self, new_plan: NDBPlan) -> bool:
-        """Apply a new plan; account recovery traffic. True if changed."""
+    def update_plan(self, new_plan: NDBPlan, traffic_multiplier: float = 1.0) -> bool:
+        """Apply a new plan; account recovery traffic. True if changed.
+
+        ``traffic_multiplier`` models transient network degradation: while the
+        interconnect is degraded, every state transfer costs proportionally
+        more bytes on the wire (retransmits / reduced effective bandwidth).
+        """
         if new_plan.failed == self.plan.failed:
             self.plan = new_plan
             return False
+        fetch_bytes = int(self.stage_param_bytes() * max(traffic_multiplier, 1.0))
         newly_failed = new_plan.failed - self.plan.failed
         recovered = self.plan.failed - new_plan.failed
         for _dev in newly_failed:
             self.accounting.n_failovers += 1
             if self.params_replicated:
-                self.accounting.peer_fetch_bytes += self.stage_param_bytes()
+                self.accounting.peer_fetch_bytes += fetch_bytes
             else:
-                self.accounting.ckpt_restore_bytes += self.stage_param_bytes()
+                self.accounting.ckpt_restore_bytes += fetch_bytes
         for _dev in recovered:
             # original node refetches its stage from the neighbor (Alg. 1 l.10)
             self.accounting.n_recoveries += 1
-            self.accounting.peer_fetch_bytes += self.stage_param_bytes()
+            self.accounting.peer_fetch_bytes += fetch_bytes
         drops = new_plan.dropped_ranks()
         self.accounting.n_rank_drops += len(
             drops - self.plan.dropped_ranks()
         )
         self.plan = new_plan
         return True
+
+    def apply_chaos(self, outcome) -> Tuple[bool, Set[Tuple[int, int]]]:
+        """Apply one ChaosStepOutcome: fold stragglers into the NDB plan
+        (Appendix B — one plan update per step, so a persistent straggler
+        doesn't churn failover accounting) and account recovery traffic under
+        the current network inflation.  Returns (plan_changed, slow_devices).
+        """
+        slow = self.straggler_devices(outcome.device_times)
+        plan = outcome.plan
+        if slow:
+            plan = NDBPlan(
+                plan.n_dp, plan.n_stages, frozenset(plan.failed | slow)
+            )
+        changed = self.update_plan(
+            plan, traffic_multiplier=outcome.net_inflation
+        )
+        return changed, slow
 
     def context(self) -> NDBContext:
         return context_for(self.mecefo, self.plan, self.cfg, self.global_batch)
@@ -102,17 +129,23 @@ class FTController:
         if len(self._step_times) > 100:
             self._step_times.pop(0)
 
-    def detect_straggler(self, per_device_times: Dict[Tuple[int, int], float]):
-        """Mark devices slower than threshold x median as 'failed' (NDB)."""
+    def straggler_devices(
+        self, per_device_times: Dict[Tuple[int, int], float]
+    ) -> Set[Tuple[int, int]]:
+        """Devices slower than threshold x median step time."""
         if not per_device_times:
-            return None
+            return set()
         times = np.array(list(per_device_times.values()))
         med = float(np.median(times))
-        slow = {
+        return {
             dev
             for dev, t in per_device_times.items()
             if t > self.straggler_threshold * med
         }
+
+    def detect_straggler(self, per_device_times: Dict[Tuple[int, int], float]):
+        """Mark devices slower than threshold x median as 'failed' (NDB)."""
+        slow = self.straggler_devices(per_device_times)
         if not slow:
             return None
         return NDBPlan(

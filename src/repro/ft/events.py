@@ -1,0 +1,77 @@
+"""Chaos event model shared by injectors, the engine, and the trace format.
+
+A :class:`FailureEvent` is the single unit of chaos: node crashes, recoveries,
+straggler episodes, and transient network degradation all flow through the
+same record.  Events are frozen (hashable, comparable) so a recorded trace
+can be replayed and asserted *bit-exactly* against a fresh run — the property
+the CI chaos-smoke job enforces.
+
+Kinds:
+  fail / recover           — a (dp_rank, stage) device goes down / comes back.
+  straggle / straggle_end  — a device runs ``magnitude``× slower than healthy
+                             (Appendix B: stragglers reuse the NDB machinery).
+  net_degrade / net_restore — cluster interconnect degradation; recovery
+                             traffic is inflated by ``magnitude`` while active.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+FAIL = "fail"
+RECOVER = "recover"
+STRAGGLE = "straggle"
+STRAGGLE_END = "straggle_end"
+NET_DEGRADE = "net_degrade"
+NET_RESTORE = "net_restore"
+
+EVENT_KINDS = (FAIL, RECOVER, STRAGGLE, STRAGGLE_END, NET_DEGRADE, NET_RESTORE)
+
+# Kinds that *cause* chaos (replayed from a trace); the rest are derived by
+# the engine's expiry bookkeeping and recomputed identically on replay.
+CAUSE_KINDS = frozenset({FAIL, STRAGGLE, NET_DEGRADE})
+
+
+@dataclass(frozen=True)
+class FailureEvent:
+    """One chaos event.  ``device`` is None for cluster-wide (network) kinds.
+
+    ``duration_steps`` on a cause event schedules its matching end event;
+    ``magnitude`` is the straggler slowdown factor or the network recovery
+    traffic inflation; ``source`` names the injector that emitted it.
+    """
+
+    step: int
+    kind: str
+    device: Optional[Tuple[int, int]] = None
+    duration_steps: int = 0
+    magnitude: float = 0.0
+    source: str = ""
+
+    def __post_init__(self):
+        if self.kind not in EVENT_KINDS:
+            raise ValueError(f"unknown event kind {self.kind!r}")
+
+    def to_json(self) -> dict:
+        d = {"type": "event", "step": self.step, "kind": self.kind}
+        if self.device is not None:
+            d["device"] = list(self.device)
+        if self.duration_steps:
+            d["duration_steps"] = self.duration_steps
+        if self.magnitude:
+            d["magnitude"] = self.magnitude
+        if self.source:
+            d["source"] = self.source
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "FailureEvent":
+        dev = d.get("device")
+        return cls(
+            step=int(d["step"]),
+            kind=str(d["kind"]),
+            device=tuple(dev) if dev is not None else None,
+            duration_steps=int(d.get("duration_steps", 0)),
+            magnitude=float(d.get("magnitude", 0.0)),
+            source=str(d.get("source", "")),
+        )

@@ -1,4 +1,4 @@
-"""Failure simulation — Table 1 scenarios as memoryless (Poisson) processes.
+"""Chaos scenario engine — composable failure injection over the device grid.
 
 Per Appendix D ("Failure Modeling"), node crashes are modeled as memoryless:
 each healthy (dp_rank, stage) device fails with a constant per-step
@@ -6,15 +6,42 @@ probability derived from the scenario's failure interval and the step time;
 failed devices recover after the scenario's recovery time.  Appendix C.3's
 observation — that the *ratio* of rates matters, not absolute values — is
 what lets the CPU-scale benchmarks use small step counts.
+
+The engine generalizes the original single-process simulator: any number of
+:class:`~repro.ft.injectors.Injector` plugins emit cause-events each step
+(crashes, correlated rack/pod outages, stragglers, network degradation); the
+engine applies them, handles expiry, and exposes a :class:`ChaosStepOutcome`
+(NDB plan + per-device step times + recovery-traffic inflation) that the
+trainer, the throughput simulator, and the CI smoke all consume.  Attach a
+``TraceRecorder`` and every emitted event lands in a JSONL trace that
+``replay_engine`` reproduces bit-exactly.
+
+``FailureProcess`` is kept as a thin compatibility shim over the engine.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from repro.core.ndb import NDBPlan
+from repro.ft.events import (
+    FAIL,
+    NET_DEGRADE,
+    NET_RESTORE,
+    RECOVER,
+    STRAGGLE,
+    STRAGGLE_END,
+    FailureEvent,
+)
+from repro.ft.injectors import (
+    Device,
+    GridState,
+    Injector,
+    PoissonCrashInjector,
+    ScheduledInjector,
+)
 
 
 @dataclass(frozen=True)
@@ -42,15 +69,154 @@ SCENARIOS: Dict[str, FailureScenario] = {
 }
 
 
-@dataclass
-class FailureEvent:
+@dataclass(frozen=True)
+class ChaosStepOutcome:
+    """Everything downstream consumers need from one engine step."""
+
     step: int
-    kind: str  # "fail" | "recover"
-    device: Tuple[int, int]  # (dp_rank, stage)
+    plan: NDBPlan
+    events: Tuple[FailureEvent, ...]      # events emitted at this step
+    device_times: Dict[Device, float]     # healthy devices only; stragglers slow
+    net_inflation: float = 1.0            # recovery-traffic multiplier (>= 1)
+
+
+class ChaosEngine:
+    """Stateful per-step chaos simulator over an (n_dp × n_stages) grid.
+
+    ``injectors`` emit cause-events; the engine applies them, emits derived
+    end-events (recover / straggle_end / net_restore) when durations expire,
+    and appends everything to ``self.events`` (and the optional recorder).
+    Injector RNG streams are children of ``seed`` (``default_rng([seed, i])``)
+    so the same (injectors, seed) pair always produces the same trace.
+    """
+
+    def __init__(
+        self,
+        n_dp: int,
+        n_stages: int,
+        step_time_s: float,
+        injectors: Sequence[Injector] = (),
+        seed: int = 0,
+        recorder=None,
+    ):
+        self.state = GridState(n_dp=n_dp, n_stages=n_stages,
+                               step_time_s=step_time_s)
+        self.injectors: List[Injector] = list(injectors)
+        self.seed = seed
+        for i, inj in enumerate(self.injectors):
+            inj.reset(np.random.default_rng([seed, i]))
+        self._scheduled = ScheduledInjector()
+        self.events: List[FailureEvent] = []
+        self.recorder = recorder
+        if recorder is not None:
+            recorder.write_header(self)
+
+    # -- convenience accessors -------------------------------------------
+    @property
+    def n_dp(self) -> int:
+        return self.state.n_dp
+
+    @property
+    def n_stages(self) -> int:
+        return self.state.n_stages
+
+    @property
+    def step_time_s(self) -> float:
+        return self.state.step_time_s
+
+    def plan(self) -> NDBPlan:
+        return NDBPlan(self.n_dp, self.n_stages,
+                       frozenset(self.state.failed_until))
+
+    # -- deterministic injection -----------------------------------------
+    def inject(self, step: int, device: Device, down_steps: int) -> None:
+        """Schedule a deterministic crash of ``device`` at ``step``."""
+        self._scheduled.add(
+            FailureEvent(step, FAIL, device, duration_steps=down_steps,
+                         source="scheduled")
+        )
+
+    def schedule(self, event: FailureEvent) -> None:
+        """Schedule an arbitrary cause-event (tests / examples)."""
+        self._scheduled.add(event)
+
+    # -- core step --------------------------------------------------------
+    def _apply(self, ev: FailureEvent) -> None:
+        st = self.state
+        if ev.kind == FAIL:
+            st.failed_until[ev.device] = ev.step + max(ev.duration_steps, 1)
+            st.straggling_until.pop(ev.device, None)  # a dead node can't straggle
+        elif ev.kind == STRAGGLE:
+            st.straggling_until[ev.device] = (
+                ev.step + max(ev.duration_steps, 1), max(ev.magnitude, 1.0)
+            )
+        elif ev.kind == NET_DEGRADE:
+            st.net_degraded_until = ev.step + max(ev.duration_steps, 1)
+            st.net_inflation = max(ev.magnitude, 1.0)
+
+    def _expire(self, step: int) -> List[FailureEvent]:
+        st = self.state
+        out: List[FailureEvent] = []
+        for dev in sorted(d for d, until in st.failed_until.items()
+                          if step >= until):
+            del st.failed_until[dev]
+            out.append(FailureEvent(step, RECOVER, dev, source="engine"))
+        for dev in sorted(d for d, (until, _) in st.straggling_until.items()
+                          if step >= until):
+            del st.straggling_until[dev]
+            out.append(FailureEvent(step, STRAGGLE_END, dev, source="engine"))
+        if 0 <= st.net_degraded_until <= step:
+            out.append(FailureEvent(step, NET_RESTORE, None, source="engine"))
+            st.net_degraded_until = -1
+            st.net_inflation = 1.0
+        return out
+
+    def step(self, step: int) -> ChaosStepOutcome:
+        emitted: List[FailureEvent] = list(self._expire(step))
+        for inj in (self._scheduled, *self.injectors):
+            for ev in inj.emit(step, self.state):
+                if ev.kind == FAIL and self.state.is_failed(ev.device):
+                    continue  # already down (overlapping injectors)
+                self._apply(ev)
+                emitted.append(ev)
+        self.events.extend(emitted)
+        st = self.state
+        device_times = {
+            dev: st.step_time_s * st.slowdown(dev)
+            for dev in st.healthy_devices()
+        }
+        inflation = st.net_inflation if st.net_active(step) else 1.0
+        outcome = ChaosStepOutcome(
+            step=step,
+            plan=self.plan(),
+            events=tuple(emitted),
+            device_times=device_times,
+            net_inflation=inflation,
+        )
+        if self.recorder is not None:
+            self.recorder.record(emitted)
+        return outcome
+
+
+def engine_for_scenario(
+    scenario: FailureScenario,
+    n_dp: int,
+    n_stages: int,
+    step_time_s: float,
+    seed: int = 0,
+    persistent_subset: Optional[Set[Device]] = None,
+    recorder=None,
+) -> ChaosEngine:
+    """The classic Table-1 setup: a single Poisson crash injector."""
+    return ChaosEngine(
+        n_dp, n_stages, step_time_s,
+        injectors=[PoissonCrashInjector(scenario, persistent_subset)],
+        seed=seed, recorder=recorder,
+    )
 
 
 class FailureProcess:
-    """Stateful per-step simulator over an (n_dp × n_stages) device grid."""
+    """Back-compat shim: the original single-injector simulator API."""
 
     def __init__(
         self,
@@ -59,49 +225,26 @@ class FailureProcess:
         n_stages: int,
         step_time_s: float,
         seed: int = 0,
-        persistent_subset: Optional[Set[Tuple[int, int]]] = None,
+        persistent_subset: Optional[Set[Device]] = None,
     ):
         self.scenario = scenario
-        self.n_dp = n_dp
-        self.n_stages = n_stages
-        self.step_time_s = step_time_s
-        self.rng = np.random.default_rng(seed)
-        self.failed_until: Dict[Tuple[int, int], int] = {}
-        self.events: List[FailureEvent] = []
-        # Appendix C.2: asymmetric failures restricted to a fixed subset.
-        self.persistent_subset = persistent_subset
+        self.engine = engine_for_scenario(
+            scenario, n_dp, n_stages, step_time_s, seed=seed,
+            persistent_subset=persistent_subset,
+        )
+        self.n_dp, self.n_stages, self.step_time_s = n_dp, n_stages, step_time_s
+
+    @property
+    def events(self) -> List[FailureEvent]:
+        return self.engine.events
+
+    @property
+    def failed_until(self) -> Dict[Device, int]:
+        return self.engine.state.failed_until
 
     def step(self, step: int) -> NDBPlan:
-        n_dev = self.n_dp * self.n_stages
-        p = self.scenario.per_step_fail_prob(self.step_time_s, n_dev)
-        rec = self.scenario.recovery_steps(self.step_time_s)
-        # recoveries
-        for dev, until in list(self.failed_until.items()):
-            if step >= until:
-                del self.failed_until[dev]
-                self.events.append(FailureEvent(step, "recover", dev))
-        # new failures
-        if p > 0:
-            for r in range(self.n_dp):
-                for s in range(self.n_stages):
-                    dev = (r, s)
-                    if dev in self.failed_until:
-                        continue
-                    if (
-                        self.persistent_subset is not None
-                        and dev not in self.persistent_subset
-                    ):
-                        continue
-                    if self.rng.random() < p:
-                        self.failed_until[dev] = step + rec
-                        self.events.append(FailureEvent(step, "fail", dev))
-        return NDBPlan(
-            n_dp=self.n_dp,
-            n_stages=self.n_stages,
-            failed=frozenset(self.failed_until),
-        )
+        return self.engine.step(step).plan
 
-    def inject(self, step: int, device: Tuple[int, int], down_steps: int) -> None:
+    def inject(self, step: int, device: Device, down_steps: int) -> None:
         """Deterministic injection (tests / examples)."""
-        self.failed_until[device] = step + down_steps
-        self.events.append(FailureEvent(step, "fail", device))
+        self.engine.inject(step, device, down_steps)

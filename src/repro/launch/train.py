@@ -32,7 +32,20 @@ from repro.core.lowrank import refresh_projections
 from repro.core.ndb import NDBPlan, plan_to_masks
 from repro.data.pipeline import SyntheticLM, make_batch
 from repro.ft.controller import FTController
-from repro.ft.failures import SCENARIOS, FailureProcess, FailureScenario
+from repro.ft.failures import (
+    SCENARIOS,
+    ChaosEngine,
+    FailureScenario,
+    engine_for_scenario,
+)
+from repro.ft.injectors import CHAOS_PRESETS, Injector, chaos_preset
+from repro.ft.trace import (
+    Trace,
+    TraceRecorder,
+    load_trace,
+    replay_engine,
+    verify_replay,
+)
 from repro.launch.mesh import make_host_mesh
 from repro.launch.state import init_state
 from repro.launch.steps import make_train_step
@@ -54,6 +67,9 @@ class Trainer:
         n_stages: int = 8,
         step_time_s: float = 1.0,
         seed: int = 0,
+        injectors: Optional[List[Injector]] = None,
+        trace_record: Optional[str] = None,
+        trace_replay: Optional[str] = None,
     ):
         self.cfg, self.shape, self.train_cfg = cfg, shape, train
         self.parallel = parallel or ParallelConfig(
@@ -68,14 +84,40 @@ class Trainer:
         with self.mesh:
             self.state = init_state(cfg, train, mecefo, key)
 
+        # -- chaos engine: replayed trace > explicit injectors > scenario ---
+        self.replay_trace = None
+        recorder = TraceRecorder(trace_record) if trace_record else None
+        if trace_replay is not None:
+            # accept a path or an already-loaded Trace (avoids re-parsing
+            # when the caller needed the header/footer anyway)
+            self.replay_trace = (
+                trace_replay if isinstance(trace_replay, Trace)
+                else load_trace(trace_replay)
+            )
+            h = self.replay_trace.header
+            n_dp, n_stages, step_time_s = h.n_dp, h.n_stages, h.step_time_s
         self.controller = FTController(
             cfg=cfg, mecefo=mecefo, n_dp=n_dp, n_stages=min(n_stages, cfg.n_layers),
             global_batch=shape.global_batch,
             params_replicated=not self.parallel.fsdp,
         )
-        self.process = FailureProcess(
-            scenario, n_dp, self.controller.n_stages, step_time_s, seed=seed + 1
-        )
+        if self.replay_trace is not None:
+            if self.replay_trace.header.n_stages != self.controller.n_stages:
+                raise ValueError(
+                    f"trace recorded for n_stages={self.replay_trace.header.n_stages}"
+                    f" but this model clamps to {self.controller.n_stages}"
+                )
+            self.process = replay_engine(self.replay_trace, recorder=recorder)
+        elif injectors is not None:
+            self.process = ChaosEngine(
+                n_dp, self.controller.n_stages, step_time_s,
+                injectors=injectors, seed=seed + 1, recorder=recorder,
+            )
+        else:
+            self.process = engine_for_scenario(
+                scenario, n_dp, self.controller.n_stages, step_time_s,
+                seed=seed + 1, recorder=recorder,
+            )
         self.ckpt = (
             CheckpointManager(train.checkpoint_dir)
             if train.checkpoint_every
@@ -117,8 +159,8 @@ class Trainer:
         for i in range(steps):
             t0 = time.time()
             step_idx = int(self.state.step)
-            plan = self.process.step(step_idx)
-            changed = self.controller.update_plan(plan)
+            outcome = self.process.step(step_idx)
+            changed, slow = self.controller.apply_chaos(outcome)
             if changed and self.mecefo.mode != "off":
                 pass  # static mode: next _get_step call compiles/caches
 
@@ -161,6 +203,8 @@ class Trainer:
                 "grad_norm": float(metrics["grad_norm"]),
                 "seconds": dt,
                 "failed": len(self.controller.plan.failed),
+                "stragglers": len(slow),
+                "net_inflation": outcome.net_inflation,
                 "degraded_frac": self.controller.degraded_layer_fraction(),
             }
             self.history.append(rec)
@@ -168,12 +212,26 @@ class Trainer:
                 print(
                     f"step {rec['step']:5d} loss {rec['loss']:.4f} "
                     f"gnorm {rec['grad_norm']:.3f} {dt*1e3:.0f}ms "
-                    f"failed={rec['failed']} deg={rec['degraded_frac']:.2f}",
+                    f"failed={rec['failed']} slow={rec['stragglers']} "
+                    f"deg={rec['degraded_frac']:.2f}",
                     flush=True,
                 )
         if self.ckpt:
             self.ckpt.wait()
+        if self.process.recorder is not None:
+            self.process.recorder.close(
+                total_steps=len(self.history),
+                accounting=self.controller.accounting.as_dict(),
+            )
         return self.history
+
+    def verify_replay(self) -> List[str]:
+        """After a replay run: mismatches vs the recorded trace (empty = OK)."""
+        assert self.replay_trace is not None, "trainer not in replay mode"
+        return verify_replay(
+            self.replay_trace, self.process,
+            accounting=self.controller.accounting.as_dict(),
+        )
 
     def resume_from_checkpoint(self) -> bool:
         if not self.ckpt:
@@ -185,7 +243,7 @@ class Trainer:
         return True
 
 
-def main() -> None:
+def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama-350m")
     ap.add_argument("--steps", type=int, default=100)
@@ -193,37 +251,83 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--mecefo", default="off", choices=["off", "static", "dynamic"])
     ap.add_argument("--scenario", default="none", choices=list(SCENARIOS))
+    ap.add_argument(
+        "--chaos", default=None, choices=list(CHAOS_PRESETS),
+        help="chaos preset (injector bundle) layered on --scenario's rates",
+    )
+    ap.add_argument(
+        "--trace", nargs=2, metavar=("MODE", "PATH"), default=None,
+        help="'record PATH' writes a chaos trace; 'replay PATH' reproduces "
+             "one bit-exactly and verifies events + accounting against it",
+    )
+    ap.add_argument("--n-dp", type=int, default=4)
+    ap.add_argument("--n-stages", type=int, default=8)
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgdm"])
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
+
+    trace_mode, trace_path = args.trace or (None, None)
+    if trace_mode not in (None, "record", "replay"):
+        ap.error(f"--trace mode must be 'record' or 'replay', got {trace_mode!r}")
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg, dtype="float32")
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    steps = args.steps
+    replay_trace = None
+    if trace_mode == "replay":
+        replay_trace = load_trace(trace_path)
+        if replay_trace.footer is not None:
+            # replay the exact recorded run length
+            steps = replay_trace.footer.total_steps
     train = TrainConfig(
-        steps=args.steps, optimizer=args.optimizer, learning_rate=args.lr,
+        steps=steps, optimizer=args.optimizer, learning_rate=args.lr,
         checkpoint_every=args.checkpoint_every, seed=args.seed,
     )
     mecefo = MeCeFOConfig(mode=args.mecefo, rank=16, svd_period=20)
+    scenario = SCENARIOS[args.scenario]
+    injectors = (
+        chaos_preset(args.chaos, scenario) if args.chaos is not None else None
+    )
     trainer = Trainer(
         cfg, shape, train, mecefo=mecefo,
-        scenario=SCENARIOS[args.scenario],
-        step_time_s=3600.0 if args.scenario != "none" else 1.0,
+        scenario=scenario,
+        n_dp=args.n_dp, n_stages=args.n_stages,
+        step_time_s=3600.0 if (args.scenario != "none" or args.chaos) else 1.0,
         seed=args.seed,
+        injectors=injectors,
+        trace_record=trace_path if trace_mode == "record" else None,
+        trace_replay=replay_trace,
     )
     hist = trainer.run()
+    acc = trainer.controller.accounting
     print(
         f"final loss {hist[-1]['loss']:.4f}  "
-        f"failovers={trainer.controller.accounting.n_failovers} "
-        f"recoveries={trainer.controller.accounting.n_recoveries} "
-        f"peer_fetch={trainer.controller.accounting.peer_fetch_bytes/1e6:.1f}MB"
+        f"failovers={acc.n_failovers} "
+        f"recoveries={acc.n_recoveries} "
+        f"peer_fetch={acc.peer_fetch_bytes/1e6:.1f}MB"
     )
+    if trace_mode == "record":
+        print(f"chaos trace recorded to {trace_path} "
+              f"({len(trainer.process.events)} events)")
+    if trace_mode == "replay":
+        problems = trainer.verify_replay()
+        if problems:
+            print(f"REPLAY MISMATCH vs {trace_path}:")
+            for p in problems:
+                print(f"  {p}")
+            return 1
+        print(
+            f"REPLAY OK: {len(trainer.process.events)} events and "
+            f"accounting totals match {trace_path}"
+        )
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -44,9 +44,24 @@ TINY_HYBRID = ModelConfig(
 )
 
 
-@pytest.fixture(params=["dense", "moe", "ssm", "hybrid"])
+@pytest.fixture(params=[
+    "dense", "moe", "ssm",
+    # the hybrid interleave is the slowest tiny config on CPU
+    pytest.param("hybrid", marks=pytest.mark.slow),
+])
 def tiny_cfg(request):
     return {
         "dense": TINY_DENSE, "moe": TINY_MOE,
         "ssm": TINY_SSM, "hybrid": TINY_HYBRID,
     }[request.param]
+
+
+def pytest_configure(config):
+    # Registered here as well as in pyproject.toml so `pytest path/to/test.py`
+    # from any cwd never warns about unknown marks.
+    config.addinivalue_line(
+        "markers", "slow: long-running (benchmarks-adjacent) tests"
+    )
+    config.addinivalue_line(
+        "markers", "chaos: chaos-engine scenario/replay tests (CI smoke job)"
+    )

@@ -1,0 +1,338 @@
+"""Chaos scenario engine: injectors, JSONL traces, deterministic replay."""
+import numpy as np
+import pytest
+
+from repro.configs.base import MeCeFOConfig
+from repro.ft.controller import FTController
+from repro.ft.events import (
+    FAIL,
+    NET_DEGRADE,
+    RECOVER,
+    STRAGGLE,
+    FailureEvent,
+)
+from repro.ft.failures import SCENARIOS, ChaosEngine, FailureScenario
+from repro.ft.injectors import (
+    CHAOS_PRESETS,
+    CorrelatedDomainInjector,
+    NetworkDegradationInjector,
+    PoissonCrashInjector,
+    ScheduledInjector,
+    StragglerInjector,
+    chaos_preset,
+)
+from repro.ft.trace import (
+    TraceRecorder,
+    load_trace,
+    replay_engine,
+    verify_replay,
+)
+from tests.conftest import TINY_DENSE
+
+FAST = FailureScenario("fast", fail_interval_s=10.0, recover_time_s=30.0)
+
+
+def _kitchen_sink_engine(seed=0, recorder=None):
+    injectors = [
+        PoissonCrashInjector(FAST),
+        CorrelatedDomainInjector(50.0, 30.0, domain="stage"),
+        StragglerInjector(20.0, 10.0, slow_factor=8.0),
+        NetworkDegradationInjector(30.0, 10.0, inflation=3.0),
+    ]
+    return ChaosEngine(4, 4, 1.0, injectors, seed=seed, recorder=recorder)
+
+
+def _drive(engine, steps, controller=None):
+    """Run the engine; optionally accumulate controller accounting."""
+    for step in range(steps):
+        outcome = engine.step(step)
+        if controller is not None:
+            controller.apply_chaos(outcome)
+    return engine
+
+
+def _controller():
+    return FTController(
+        cfg=TINY_DENSE, mecefo=MeCeFOConfig(mode="dynamic"),
+        n_dp=4, n_stages=4, global_batch=8,
+    )
+
+
+# ---------------------------------------------------------------------------
+# event / trace serialization
+# ---------------------------------------------------------------------------
+
+
+def test_event_json_roundtrip():
+    for ev in (
+        FailureEvent(3, FAIL, (1, 2), duration_steps=30, source="poisson"),
+        FailureEvent(5, STRAGGLE, (0, 0), duration_steps=10, magnitude=8.0),
+        FailureEvent(7, NET_DEGRADE, None, duration_steps=4, magnitude=3.0),
+        FailureEvent(9, RECOVER, (1, 2)),
+    ):
+        assert FailureEvent.from_json(ev.to_json()) == ev
+
+
+def test_unknown_event_kind_rejected():
+    with pytest.raises(ValueError):
+        FailureEvent(0, "meteor-strike", (0, 0))
+
+
+def test_trace_header_footer_roundtrip(tmp_path):
+    path = tmp_path / "t.jsonl"
+    eng = _kitchen_sink_engine(seed=3, recorder=TraceRecorder(path))
+    _drive(eng, 50)
+    eng.recorder.close(total_steps=50, accounting={"n_failovers": 12})
+    trace = load_trace(path)
+    assert trace.header.n_dp == 4 and trace.header.n_stages == 4
+    assert trace.header.seed == 3
+    assert len(trace.header.injectors) == 4
+    assert trace.footer.total_steps == 50
+    assert trace.footer.accounting["n_failovers"] == 12
+    assert trace.footer.n_events == len(trace.events)
+
+
+# ---------------------------------------------------------------------------
+# deterministic replay (the CI-enforced property)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.chaos
+def test_record_replay_bit_exact_twice(tmp_path):
+    """Record a trace; replay it twice; event streams and accounting match."""
+    path = tmp_path / "chaos.jsonl"
+    rec_ctl = _controller()
+    eng = _kitchen_sink_engine(seed=11, recorder=TraceRecorder(path))
+    _drive(eng, 200, rec_ctl)
+    eng.recorder.close(total_steps=200,
+                       accounting=rec_ctl.accounting.as_dict())
+    assert rec_ctl.accounting.n_failovers > 0  # scenario actually fired
+    trace = load_trace(path)
+
+    streams, accountings = [], []
+    for _ in range(2):
+        ctl = _controller()
+        replayed = _drive(replay_engine(trace), 200, ctl)
+        assert not verify_replay(trace, replayed,
+                                 accounting=ctl.accounting.as_dict())
+        streams.append(list(replayed.events))
+        accountings.append(ctl.accounting.as_dict())
+    assert streams[0] == streams[1] == trace.events
+    assert accountings[0] == accountings[1] == trace.footer.accounting
+
+
+def test_same_seed_same_trace():
+    """Engine determinism without a trace file: same seed, same events."""
+    a = _drive(_kitchen_sink_engine(seed=5), 150).events
+    b = _drive(_kitchen_sink_engine(seed=5), 150).events
+    assert a == b
+    c = _drive(_kitchen_sink_engine(seed=6), 150).events
+    assert a != c  # different seed actually changes the sample path
+
+
+def test_verify_replay_catches_divergence(tmp_path):
+    path = tmp_path / "t.jsonl"
+    eng = _kitchen_sink_engine(seed=2, recorder=TraceRecorder(path))
+    _drive(eng, 100)
+    eng.recorder.close(total_steps=100)
+    trace = load_trace(path)
+    diverged = _drive(replay_engine(trace), 99)  # one step short
+    if len(trace.events) != len(diverged.events):
+        assert verify_replay(trace, diverged)
+
+
+@pytest.mark.chaos
+def test_golden_trace_replays_bit_exactly():
+    """The committed golden trace reproduces its events AND accounting."""
+    from pathlib import Path
+
+    from repro.configs.base import get_config, reduced
+
+    golden = Path(__file__).parent / "data" / "golden_trace.jsonl"
+    trace = load_trace(golden)
+    assert trace.footer is not None, "golden trace missing footer"
+    cfg = reduced(get_config("llama-350m"), dtype="float32")
+    ctl = FTController(
+        cfg=cfg, mecefo=MeCeFOConfig(mode="dynamic"),
+        n_dp=trace.header.n_dp, n_stages=trace.header.n_stages,
+        global_batch=8,
+    )
+    engine = _drive(replay_engine(trace), trace.footer.total_steps, ctl)
+    problems = verify_replay(trace, engine,
+                             accounting=ctl.accounting.as_dict())
+    assert not problems, problems
+
+
+# ---------------------------------------------------------------------------
+# injectors
+# ---------------------------------------------------------------------------
+
+
+def test_correlated_stage_outage_kills_whole_column():
+    eng = ChaosEngine(
+        4, 4, 1.0,
+        [CorrelatedDomainInjector(2.0, 1000.0, domain="stage")], seed=0,
+    )
+    hit = False
+    for step in range(50):
+        plan = eng.step(step).plan
+        for s in range(4):
+            if all((r, s) in plan.failed for r in range(4)):
+                hit = True
+        if hit:
+            break
+    assert hit, "no full stage column ever failed"
+
+
+def test_correlated_dp_outage_drops_rank():
+    eng = ChaosEngine(
+        4, 4, 1.0, [CorrelatedDomainInjector(2.0, 1000.0, domain="dp")], seed=0,
+    )
+    dropped = set()
+    for step in range(50):
+        dropped |= eng.step(step).plan.dropped_ranks()
+    assert dropped, "dp-domain outage never dropped a whole rank"
+
+
+def test_straggler_feeds_controller_detection():
+    eng = ChaosEngine(
+        2, 2, 1.0, [StragglerInjector(1.0, 100.0, slow_factor=10.0)], seed=0,
+    )
+    ctl = FTController(
+        cfg=TINY_DENSE, mecefo=MeCeFOConfig(mode="dynamic"),
+        n_dp=2, n_stages=2, global_batch=4,
+    )
+    flagged = set()
+    for step in range(20):
+        outcome = eng.step(step)
+        _, slow = ctl.apply_chaos(outcome)
+        if slow:
+            # slow devices are folded into the active NDB plan immediately
+            assert slow <= set(ctl.plan.failed)
+        flagged |= slow
+    assert flagged, "straggler never flagged by the controller"
+
+
+def test_straggler_sticky_revictimizes_same_device():
+    # duration > interval so episodes overlap: a sticky straggler must not
+    # migrate to a new device while the victim is still straggling
+    inj = StragglerInjector(2.0, 5.0, slow_factor=8.0, sticky=True)
+    eng = ChaosEngine(4, 4, 1.0, [inj], seed=1)
+    victims = {
+        ev.device
+        for step in range(200)
+        for ev in eng.step(step).events
+        if ev.kind == STRAGGLE
+    }
+    assert len(victims) == 1, f"sticky straggler hit {victims}"
+
+
+def test_network_degradation_inflates_recovery_traffic():
+    sched = ScheduledInjector([
+        FailureEvent(0, NET_DEGRADE, None, duration_steps=100, magnitude=3.0),
+        FailureEvent(1, FAIL, (0, 1), duration_steps=5),
+    ])
+    eng = ChaosEngine(2, 2, 1.0, [sched], seed=0)
+    ctl = FTController(
+        cfg=TINY_DENSE, mecefo=MeCeFOConfig(mode="dynamic"),
+        n_dp=2, n_stages=2, global_batch=4,
+    )
+    eng.step(0)
+    outcome = eng.step(1)
+    assert outcome.net_inflation == 3.0
+    ctl.apply_chaos(outcome)
+    assert ctl.accounting.peer_fetch_bytes == 3 * ctl.stage_param_bytes()
+
+
+def test_network_restores_after_duration():
+    sched = ScheduledInjector([
+        FailureEvent(0, NET_DEGRADE, None, duration_steps=3, magnitude=2.0),
+    ])
+    eng = ChaosEngine(2, 2, 1.0, [sched], seed=0)
+    inflations = [eng.step(s).net_inflation for s in range(6)]
+    assert inflations[0] == 2.0 and inflations[2] == 2.0
+    assert inflations[3] == 1.0
+    kinds = [e.kind for e in eng.events]
+    assert "net_restore" in kinds
+
+
+def test_failed_device_cannot_straggle():
+    sched = ScheduledInjector([
+        FailureEvent(0, STRAGGLE, (0, 0), duration_steps=50, magnitude=8.0),
+        FailureEvent(2, FAIL, (0, 0), duration_steps=5),
+    ])
+    eng = ChaosEngine(2, 2, 1.0, [sched], seed=0)
+    eng.step(0)
+    assert eng.state.slowdown((0, 0)) == 8.0
+    out = eng.step(2)
+    assert (0, 0) in out.plan.failed
+    assert (0, 0) not in out.device_times  # down, not slow
+    assert eng.state.slowdown((0, 0)) == 1.0
+
+
+def test_scheduled_injector_applies_past_events_with_original_step():
+    eng = ChaosEngine(2, 2, 1.0, seed=0)
+    eng.inject(0, (0, 1), down_steps=5)
+    assert (0, 1) in eng.step(1).plan.failed
+    assert (0, 1) in eng.step(4).plan.failed
+    assert (0, 1) not in eng.step(5).plan.failed  # until = 0 + 5
+    assert [e.kind for e in eng.events] == ["fail", "recover"]
+
+
+def test_chaos_presets_build():
+    for name in CHAOS_PRESETS:
+        injs = chaos_preset(name, SCENARIOS["high"])
+        assert injs, name
+    with pytest.raises(KeyError):
+        chaos_preset("nope")
+
+
+def test_overlapping_injectors_never_double_fail():
+    """Two crash injectors racing on the same grid: one fail per device."""
+    eng = ChaosEngine(
+        2, 2, 1.0,
+        [PoissonCrashInjector(FAST), PoissonCrashInjector(FAST)],
+        seed=0,
+    )
+    for step in range(300):
+        eng.step(step)
+    # between a fail and its recover there is never another fail for the dev
+    open_failures = set()
+    for ev in eng.events:
+        if ev.kind == FAIL:
+            assert ev.device not in open_failures, ev
+            open_failures.add(ev.device)
+        elif ev.kind == RECOVER:
+            open_failures.discard(ev.device)
+
+
+# ---------------------------------------------------------------------------
+# trainer-level replay (slow: runs real jitted steps)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.chaos
+@pytest.mark.slow
+def test_trainer_record_then_replay_accounting(tmp_path):
+    from repro.configs.base import ShapeConfig, TrainConfig
+    from repro.launch.train import Trainer
+
+    path = tmp_path / "trainer.jsonl"
+    shape = ShapeConfig("t", 32, 4, "train")
+    tc = TrainConfig(steps=25, learning_rate=3e-3)
+    mecefo = MeCeFOConfig(mode="dynamic", rank=8, svd_period=10)
+    rec = Trainer(
+        TINY_DENSE, shape, tc, mecefo=mecefo,
+        injectors=chaos_preset("kitchen-sink", SCENARIOS["high"]),
+        n_dp=2, n_stages=2, step_time_s=3600.0, trace_record=str(path),
+    )
+    rec.run(log_every=0)
+    rep = Trainer(
+        TINY_DENSE, shape, tc, mecefo=mecefo, trace_replay=str(path),
+    )
+    rep.run(log_every=0)
+    assert not rep.verify_replay()
+    assert (
+        rep.controller.accounting.as_dict()
+        == rec.controller.accounting.as_dict()
+    )

@@ -118,7 +118,11 @@ def test_grad_compression_psum():
     import jax
     import jax.numpy as jnp
     from jax.sharding import Mesh, PartitionSpec as P
-    from jax import shard_map
+
+    try:
+        from jax import shard_map
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
 
     from repro.core.grad_sync import compress_psum
 
