@@ -25,6 +25,7 @@ from typing import Dict, Optional, Sequence
 import numpy as np
 
 from repro.configs.base import ModelConfig, get_config
+from repro.ft.events import RANK_REJOIN
 from repro.ft.failures import SCENARIOS, ChaosEngine, engine_for_scenario
 from repro.ft.injectors import Injector, chaos_preset
 from repro.ft.trace import load_trace, replay_engine
@@ -165,6 +166,11 @@ def simulate(
         # mecefo
         if new_fail or recovered:
             t += fetch_pause_s * (len(new_fail) + len(recovered)) * net
+        # elastic rejoin: the re-admitted rank streams a FULL pipeline's
+        # weights + optimizer state (n_stages peer fetches) before serving
+        n_rejoin = sum(1 for e in outcome.events if e.kind == RANK_REJOIN)
+        if n_rejoin:
+            t += fetch_pause_s * n_stages * n_rejoin * net
         # per-pipeline relative speed (bottleneck stage of each pipeline)
         speeds = []
         for r in range(n_dp):

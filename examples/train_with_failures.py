@@ -3,7 +3,10 @@ MeCeFO fault tolerance under a composed chaos scenario — Poisson crashes,
 a correlated rack outage, a recurring straggler and a network brownout —
 recording every event to a JSONL trace, then replaying the trace bit-exactly
 and asserting the recovery accounting matches.  Also exercises NDB failover,
-async checkpointing and a restart.
+async checkpointing, a restart, and an elastic DP resize: a whole pipeline
+(failure domain) is lost with no healthy neighbor, the DP group shrinks and
+rebalances the global batch over the survivors, then the healed node streams
+its state back in and rejoins, restoring the original DP size.
 
 Full-size by default is CPU-hostile; we train the ~8M reduced config for a
 few hundred steps (pass --full --steps N on real hardware).
@@ -13,6 +16,7 @@ few hundred steps (pass --full --steps N on real hardware).
 import argparse
 
 from repro.configs.base import MeCeFOConfig, ShapeConfig, TrainConfig, get_config, reduced
+from repro.ft.events import FAIL, NODE_HEAL, FailureEvent
 from repro.ft.failures import SCENARIOS
 from repro.ft.injectors import (
     CorrelatedDomainInjector,
@@ -21,6 +25,38 @@ from repro.ft.injectors import (
     StragglerInjector,
 )
 from repro.launch.train import Trainer
+
+
+def elastic_demo(cfg, steps: int = 60) -> None:
+    """Deterministic drop → heal → rejoin: DP 4 → 3 → 4, batch preserved."""
+    shape = ShapeConfig("elastic", 64, 8, "train")
+    tc = TrainConfig(steps=steps, learning_rate=3e-3)
+    trainer = Trainer(
+        cfg, shape, tc, mecefo=MeCeFOConfig(mode="dynamic", rank=16, svd_period=20),
+        n_dp=4, n_stages=4, step_time_s=3600.0, injectors=[], elastic=True,
+    )
+    victim = 2
+    for s in range(4):
+        # lose the whole pipeline of rank 2 at step 10 (no neighbor can adopt
+        # it — duration effectively infinite, only the heal brings it back)
+        trainer.process.schedule(
+            FailureEvent(10, FAIL, (victim, s), duration_steps=10**9)
+        )
+        # repaired hardware at step 30; 3 steps of state streaming, then rejoin
+        trainer.process.schedule(
+            FailureEvent(30, NODE_HEAL, (victim, s), duration_steps=3)
+        )
+    hist = trainer.run(log_every=10)
+    sizes = [h["dp_size"] for h in hist]
+    acc = trainer.controller.accounting
+    print(
+        f"elastic: dp sizes {sorted(set(sizes))}, final dp "
+        f"{trainer.controller.plan.dp_size()}/4, drops={acc.n_rank_drops} "
+        f"rejoins={acc.n_rejoins} shares={trainer.controller.batch_shares()}"
+    )
+    assert min(sizes) == 3 and sizes[-1] == 4, sizes
+    assert trainer.controller.plan.is_healthy()
+    assert sum(trainer.controller.batch_shares().values()) == shape.global_batch
 
 
 def main():
@@ -78,6 +114,9 @@ def main():
     assert trainer2.resume_from_checkpoint(), "no checkpoint found"
     print(f"restart OK from step {int(trainer2.state.step)}; continuing 10 steps")
     trainer2.run(steps=10, log_every=5)
+
+    # elastic DP: drop a whole failure domain, heal it, rejoin at full size
+    elastic_demo(cfg, steps=min(args.steps, 60))
 
 
 if __name__ == "__main__":

@@ -22,17 +22,30 @@ from repro.models.params import block_layout
 Tree = Any
 
 
-def rescale_skipped_grads(grads: Tree, keep: jnp.ndarray, cfg: ModelConfig) -> Tree:
+def rescale_skipped_grads(
+    grads: Tree,
+    keep: jnp.ndarray,
+    cfg: ModelConfig,
+    example_weight: jnp.ndarray = None,
+) -> Tree:
     """Apply eq. (1)'s n/|N_l| correction to attention-mixer gradients.
 
     grads: param-tree gradients (batch-mean semantics).
     keep:  (n_layers, B) float mask — 1 where the example contributed MHA
            gradients.
+    example_weight: optional (B,) mask — 0 for examples no surviving DP rank
+           owns (transient whole-rank loss).  eq. (1)'s n then counts live
+           examples only, so dead batch slices don't deflate |N_l|/n.
     """
     period = cfg.block_period
     n_periods = cfg.n_layers // period
     # (n_layers,) -> per-layer rescale n/|N_l|; guard fully-skipped layers.
-    active_frac = jnp.mean(keep, axis=1)  # (L,)
+    if example_weight is not None:
+        w = example_weight.astype(keep.dtype)
+        live = jnp.maximum(jnp.sum(w), 1e-8)
+        active_frac = jnp.sum(keep * w[None, :], axis=1) / live  # (L,)
+    else:
+        active_frac = jnp.mean(keep, axis=1)  # (L,)
     factor = jnp.where(active_frac > 0, 1.0 / jnp.maximum(active_frac, 1e-8), 0.0)
     factor = factor.reshape(n_periods, period)  # scan layout
 
@@ -47,11 +60,6 @@ def rescale_skipped_grads(grads: Tree, keep: jnp.ndarray, cfg: ModelConfig) -> T
         }
         layers[pos] = dict(layers[pos], mixer=mixer)
     return dict(grads, layers=tuple(layers))
-
-
-def loss_weight_correction(weight: jnp.ndarray) -> jnp.ndarray:
-    """Mean-loss rescale when whole DP ranks are dropped (elastic)."""
-    return jnp.where(jnp.mean(weight) > 0, 1.0 / jnp.maximum(jnp.mean(weight), 1e-8), 0.0)
 
 
 # ---------------------------------------------------------------------------

@@ -25,11 +25,21 @@ from repro.configs.base import MeCeFOConfig, ModelConfig
 
 @dataclass(frozen=True)
 class NDBPlan:
-    """Which (dp_rank, stage) devices are failed right now."""
+    """Which (dp_rank, stage) devices are failed right now, plus explicit
+    DP-group membership: ``detached`` ranks have been formally removed from
+    the data-parallel group by an elastic resize (whole failure domain lost
+    with no healthy neighbor to adopt its work) and stay out — even while
+    their hardware heals — until a rejoin transition re-admits them."""
 
     n_dp: int
     n_stages: int
     failed: FrozenSet[Tuple[int, int]] = frozenset()
+    detached: FrozenSet[int] = frozenset()
+
+    def __post_init__(self):
+        bad = [r for r in self.detached if r < 0 or r >= self.n_dp]
+        if bad:
+            raise ValueError(f"detached ranks {bad} outside range({self.n_dp})")
 
     # ---- derived ----------------------------------------------------------
     def neighbor_of(self, rank: int, stage: int) -> Optional[int]:
@@ -54,19 +64,48 @@ class NDBPlan:
         return frozenset(out)
 
     def dropped_ranks(self) -> FrozenSet[int]:
-        """Ranks with every stage failed → excluded entirely (elastic DP)."""
-        out = set()
+        """Ranks excluded from the DP group: formally detached (elastic) or
+        with every stage failed (no neighbor left to adopt any workload)."""
+        out = set(self.detached)
         for r in range(self.n_dp):
             if all((r, s) in self.failed for s in range(self.n_stages)):
                 out.add(r)
         return frozenset(out)
 
+    def active_ranks(self) -> Tuple[int, ...]:
+        """Ranks currently serving the global batch, ascending."""
+        dropped = self.dropped_ranks()
+        return tuple(r for r in range(self.n_dp) if r not in dropped)
+
+    def dp_size(self) -> int:
+        return len(self.active_ranks())
+
     def is_healthy(self) -> bool:
-        return not self.failed
+        return not self.failed and not self.detached
+
+    # ---- resize transitions ----------------------------------------------
+    def detach(self, *ranks: int) -> "NDBPlan":
+        """Formally remove ranks from the DP group (elastic shrink)."""
+        return dataclasses.replace(
+            self, detached=frozenset(self.detached | set(ranks))
+        )
+
+    def rejoin(self, *ranks: int) -> "NDBPlan":
+        """Re-admit healed ranks (elastic grow): membership is restored and
+        any stale failure marks on their devices are cleared."""
+        back = set(ranks)
+        return dataclasses.replace(
+            self,
+            detached=frozenset(self.detached - back),
+            failed=frozenset(d for d in self.failed if d[0] not in back),
+        )
 
     def signature(self) -> Tuple:
         """Compile-cache key for static mode."""
-        return (self.n_dp, self.n_stages, tuple(sorted(self.failed)))
+        return (
+            self.n_dp, self.n_stages, tuple(sorted(self.failed)),
+            tuple(sorted(self.detached)),
+        )
 
 
 def stage_of_layer(layer: int, n_layers: int, n_stages: int) -> int:
@@ -80,8 +119,16 @@ def plan_to_masks(plan: NDBPlan, cfg: ModelConfig, global_batch: int):
     Returns (keep, example_weight):
       keep:           (n_layers, B) float32 — 1 = healthy backward,
                       0 = degraded (skip MHA backward, low-rank Wgrad).
-      example_weight: (B,) float32 — 0 for examples of dropped DP ranks.
+      example_weight: (B,) float32 — 0 for examples no surviving rank owns.
     Examples map to DP ranks contiguously (how ('pod','data') shards dim 0).
+
+    Elastic plans (``detached`` non-empty) repartition the batch instead of
+    losing it: every example is reassigned to a surviving rank via the
+    deterministic rebalancing in ``data/pipeline.py``, so weights stay 1 and
+    the global batch is preserved across resizes.  Non-elastic plans keep the
+    transient-failure semantics: a fully-failed rank's examples are
+    zero-weighted (its gradient contribution is lost for the step and eq. (1)
+    reweights around it).
     """
     L, B, n = cfg.n_layers, global_batch, plan.n_dp
     if B % n != 0:
@@ -89,17 +136,26 @@ def plan_to_masks(plan: NDBPlan, cfg: ModelConfig, global_batch: int):
     per = B // n
     keep = np.ones((L, B), np.float32)
     weight = np.ones((B,), np.float32)
-    dropped = plan.dropped_ranks()
-    for r in range(n):
-        sl = slice(r * per, (r + 1) * per)
-        if r in dropped:
+    if plan.detached:
+        from repro.data.pipeline import rebalanced_owners
+
+        owners = rebalanced_owners(B, n, plan.active_ranks())
+    else:
+        owners = np.repeat(np.arange(n), per)
+    active = set(plan.active_ranks())
+    stage_by_layer = np.array(
+        [stage_of_layer(layer, L, plan.n_stages) for layer in range(L)]
+    )
+    for r in set(owners.tolist()):
+        sl = owners == r
+        if r not in active:
             weight[sl] = 0.0
             keep[:, sl] = 0.0
             continue
         deg = plan.degraded_stages(r)
-        for layer in range(L):
-            if stage_of_layer(layer, L, plan.n_stages) in deg:
-                keep[layer, sl] = 0.0
+        if deg:
+            deg_layers = np.isin(stage_by_layer, sorted(deg))
+            keep[np.ix_(deg_layers, sl)] = 0.0
     return keep, weight
 
 

@@ -10,7 +10,7 @@ produced once and sharded by the runtime's in_shardings).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator, Optional, Sequence
 
 import numpy as np
 
@@ -74,6 +74,64 @@ def make_batch(
             "labels": base["labels"],
         }
     return src.batch(step, B, S)
+
+
+# ---------------------------------------------------------------------------
+# Elastic DP: deterministic per-rank batch rebalancing
+# ---------------------------------------------------------------------------
+
+
+def rebalanced_owners(
+    global_batch: int, n_dp: int, active_ranks: Sequence[int]
+) -> np.ndarray:
+    """Owner DP rank of every global-batch example after an elastic resize.
+
+    Examples map to ranks contiguously at full strength (example j belongs to
+    rank ``j // (B // n_dp)`` — the layout ``('pod','data')`` shards dim 0
+    with).  When ranks leave the DP group, their *orphaned* examples are
+    redistributed over the surviving ranks: the orphan index list is split
+    into ``len(active_ranks)`` near-equal contiguous chunks, assigned to the
+    active ranks in ascending order.  Surviving ranks always keep their own
+    slice, so a drop → heal → rejoin round-trip restores the original
+    assignment exactly, and the map is a pure function of the membership set
+    (not of the event path that produced it).
+
+    Returns an ``(B,)`` int array; owner is ``-1`` when no ranks are active.
+    """
+    B, n = global_batch, n_dp
+    if B % n != 0:
+        raise ValueError(f"global_batch {B} not divisible by n_dp {n}")
+    active = sorted(set(active_ranks))
+    if any(r < 0 or r >= n for r in active):
+        raise ValueError(f"active_ranks {active} outside range({n})")
+    per = B // n
+    owners = np.repeat(np.arange(n), per)
+    if not active:
+        return np.full(B, -1, np.int64)
+    orphan_idx = np.flatnonzero(~np.isin(owners, active))
+    for rank, chunk in zip(active, np.array_split(orphan_idx, len(active))):
+        owners[chunk] = rank
+    return owners
+
+
+def rank_batch_shares(
+    global_batch: int, n_dp: int, active_ranks: Sequence[int]
+) -> Dict[int, int]:
+    """Examples per active rank after rebalancing; values sum to the global
+    batch whenever any rank is active (the partition invariant the plan
+    property suite asserts)."""
+    owners = rebalanced_owners(global_batch, n_dp, active_ranks)
+    return {
+        int(r): int(np.sum(owners == r)) for r in sorted(set(active_ranks))
+    }
+
+
+def shard_for_rank(
+    batch: Dict[str, np.ndarray], rank: int, owners: np.ndarray
+) -> Dict[str, np.ndarray]:
+    """The slice of a global batch one DP rank consumes under ``owners``."""
+    idx = np.flatnonzero(owners == rank)
+    return {k: v[idx] for k, v in batch.items()}
 
 
 def data_iterator(

@@ -32,10 +32,36 @@ class RecoveryAccounting:
     n_failovers: int = 0
     n_recoveries: int = 0
     n_rank_drops: int = 0
+    n_rejoins: int = 0
 
     def as_dict(self) -> Dict[str, int]:
         """Integer totals for the chaos-trace footer (replay verification)."""
         return dataclasses.asdict(self)
+
+
+@dataclass(frozen=True)
+class ReshardPlan:
+    """One elastic DP resize, ready for the runtime to execute.
+
+    ``shares`` is the new per-rank share of the global batch (values sum to
+    the full batch whenever any rank survives); ``transfer_bytes`` is the
+    weight + optimizer state each *rejoining* rank must stream in before it
+    serves traffic — a full model's worth, fetched from a peer DP rank when
+    params are replicated or from the last checkpoint under FSDP.
+    """
+
+    step_signature: Tuple
+    old_active: Tuple[int, ...]
+    new_active: Tuple[int, ...]
+    dropped: Tuple[int, ...]
+    rejoined: Tuple[int, ...]
+    shares: Dict[int, int]
+    transfer_bytes: int
+    source: str  # "peer" (replicated params) | "ckpt" (FSDP)
+
+    @property
+    def dp_size(self) -> int:
+        return len(self.new_active)
 
 
 @dataclass
@@ -49,6 +75,7 @@ class FTController:
     plan: NDBPlan = None  # type: ignore[assignment]
     accounting: RecoveryAccounting = field(default_factory=RecoveryAccounting)
     straggler_threshold: float = 3.0  # x median step time
+    last_reshard: Optional[ReshardPlan] = None
     _step_times: list = field(default_factory=list)
 
     def __post_init__(self):
@@ -71,29 +98,91 @@ class FTController:
         ``traffic_multiplier`` models transient network degradation: while the
         interconnect is degraded, every state transfer costs proportionally
         more bytes on the wire (retransmits / reduced effective bandwidth).
+
+        Elastic resizes (DP membership changes) additionally produce a
+        :class:`ReshardPlan` in ``last_reshard``: dropped ranks hand their
+        batch share to the survivors; rejoining ranks stream a full model's
+        weights + optimizer state (from a peer replica, or from the last
+        checkpoint under FSDP) before taking a share back.
         """
-        if new_plan.failed == self.plan.failed:
+        if (
+            new_plan.failed == self.plan.failed
+            and new_plan.detached == self.plan.detached
+        ):
             self.plan = new_plan
             return False
         fetch_bytes = int(self.stage_param_bytes() * max(traffic_multiplier, 1.0))
         newly_failed = new_plan.failed - self.plan.failed
         recovered = self.plan.failed - new_plan.failed
-        for _dev in newly_failed:
+        for dev in newly_failed:
+            if dev[0] in new_plan.detached:
+                # the whole domain is gone: no neighbor adopts this stage, the
+                # event is accounted as a rank drop (elastic resize) instead
+                continue
             self.accounting.n_failovers += 1
             if self.params_replicated:
                 self.accounting.peer_fetch_bytes += fetch_bytes
             else:
                 self.accounting.ckpt_restore_bytes += fetch_bytes
-        for _dev in recovered:
+        for dev in recovered:
+            if dev[0] in self.plan.detached:
+                # healed hardware of a detached rank: its state resync is the
+                # rejoin transfer (or pending rejoin), not a per-stage
+                # neighbor refetch
+                continue
             # original node refetches its stage from the neighbor (Alg. 1 l.10)
             self.accounting.n_recoveries += 1
             self.accounting.peer_fetch_bytes += fetch_bytes
-        drops = new_plan.dropped_ranks()
-        self.accounting.n_rank_drops += len(
-            drops - self.plan.dropped_ranks()
-        )
+        old_dropped = self.plan.dropped_ranks()
+        new_dropped = new_plan.dropped_ranks()
+        self.accounting.n_rank_drops += len(new_dropped - old_dropped)
+        rejoined = tuple(sorted(self.plan.detached - new_plan.detached))
+        if rejoined:
+            # a rejoining rank resyncs its FULL pipeline, not one stage
+            full_state = fetch_bytes * new_plan.n_stages
+            self.accounting.n_rejoins += len(rejoined)
+            if self.params_replicated:
+                self.accounting.peer_fetch_bytes += full_state * len(rejoined)
+            else:
+                self.accounting.ckpt_restore_bytes += full_state * len(rejoined)
+        if self.plan.detached != new_plan.detached:
+            # a formal membership change (elastic resize) — transient derived
+            # drops zero-weight their slice instead and emit no reshard
+            self.last_reshard = self._make_reshard(
+                self.plan, new_plan, rejoined, fetch_bytes
+            )
         self.plan = new_plan
         return True
+
+    def _make_reshard(
+        self,
+        old_plan: NDBPlan,
+        new_plan: NDBPlan,
+        rejoined: Tuple[int, ...],
+        fetch_bytes: int,
+    ) -> ReshardPlan:
+        from repro.data.pipeline import rank_batch_shares
+
+        new_active = new_plan.active_ranks()
+        return ReshardPlan(
+            step_signature=new_plan.signature(),
+            old_active=old_plan.active_ranks(),
+            new_active=new_active,
+            dropped=tuple(sorted(new_plan.dropped_ranks() - old_plan.dropped_ranks())),
+            rejoined=rejoined,
+            shares=rank_batch_shares(self.global_batch, self.n_dp, new_active),
+            transfer_bytes=fetch_bytes * new_plan.n_stages * len(rejoined),
+            source="peer" if self.params_replicated else "ckpt",
+        )
+
+    def batch_shares(self) -> Dict[int, int]:
+        """Current per-rank share of the global batch (sums to the global
+        batch whenever any rank is active)."""
+        from repro.data.pipeline import rank_batch_shares
+
+        return rank_batch_shares(
+            self.global_batch, self.n_dp, self.plan.active_ranks()
+        )
 
     def apply_chaos(self, outcome) -> Tuple[bool, Set[Tuple[int, int]]]:
         """Apply one ChaosStepOutcome: fold stragglers into the NDB plan
@@ -104,9 +193,7 @@ class FTController:
         slow = self.straggler_devices(outcome.device_times)
         plan = outcome.plan
         if slow:
-            plan = NDBPlan(
-                plan.n_dp, plan.n_stages, frozenset(plan.failed | slow)
-            )
+            plan = dataclasses.replace(plan, failed=frozenset(plan.failed | slow))
         changed = self.update_plan(
             plan, traffic_multiplier=outcome.net_inflation
         )
@@ -148,8 +235,8 @@ class FTController:
         slow = self.straggler_devices(per_device_times)
         if not slow:
             return None
-        return NDBPlan(
-            self.n_dp, self.n_stages, frozenset(self.plan.failed | slow)
+        return dataclasses.replace(
+            self.plan, failed=frozenset(self.plan.failed | slow)
         )
 
     # ------------------------------------------------------------------

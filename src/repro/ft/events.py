@@ -12,6 +12,13 @@ Kinds:
                              (Appendix B: stragglers reuse the NDB machinery).
   net_degrade / net_restore — cluster interconnect degradation; recovery
                              traffic is inflated by ``magnitude`` while active.
+  heal                     — a device lost to a *domain outage* is repaired or
+                             replaced; ``duration_steps`` is the state-transfer
+                             window before it can serve traffic again.
+  rejoin                   — derived: every device of a dropped DP rank has
+                             healed and finished its state transfer, so the
+                             rank re-enters the data-parallel group (elastic
+                             resize).  ``rank``-level, no ``device``.
 """
 from __future__ import annotations
 
@@ -24,21 +31,29 @@ STRAGGLE = "straggle"
 STRAGGLE_END = "straggle_end"
 NET_DEGRADE = "net_degrade"
 NET_RESTORE = "net_restore"
+NODE_HEAL = "heal"
+RANK_REJOIN = "rejoin"
 
-EVENT_KINDS = (FAIL, RECOVER, STRAGGLE, STRAGGLE_END, NET_DEGRADE, NET_RESTORE)
+EVENT_KINDS = (
+    FAIL, RECOVER, STRAGGLE, STRAGGLE_END, NET_DEGRADE, NET_RESTORE,
+    NODE_HEAL, RANK_REJOIN,
+)
 
 # Kinds that *cause* chaos (replayed from a trace); the rest are derived by
-# the engine's expiry bookkeeping and recomputed identically on replay.
-CAUSE_KINDS = frozenset({FAIL, STRAGGLE, NET_DEGRADE})
+# the engine's expiry/membership bookkeeping and recomputed identically on
+# replay.
+CAUSE_KINDS = frozenset({FAIL, STRAGGLE, NET_DEGRADE, NODE_HEAL})
 
 
 @dataclass(frozen=True)
 class FailureEvent:
     """One chaos event.  ``device`` is None for cluster-wide (network) kinds.
 
-    ``duration_steps`` on a cause event schedules its matching end event;
-    ``magnitude`` is the straggler slowdown factor or the network recovery
-    traffic inflation; ``source`` names the injector that emitted it.
+    ``duration_steps`` on a cause event schedules its matching end event (for
+    ``heal`` it is the state-transfer window before the device is rejoin-
+    ready); ``magnitude`` is the straggler slowdown factor or the network
+    recovery traffic inflation; ``rank`` is set on rank-level (``rejoin``)
+    events; ``source`` names the injector that emitted it.
     """
 
     step: int
@@ -47,6 +62,7 @@ class FailureEvent:
     duration_steps: int = 0
     magnitude: float = 0.0
     source: str = ""
+    rank: Optional[int] = None
 
     def __post_init__(self):
         if self.kind not in EVENT_KINDS:
@@ -62,11 +78,14 @@ class FailureEvent:
             d["magnitude"] = self.magnitude
         if self.source:
             d["source"] = self.source
+        if self.rank is not None:
+            d["rank"] = self.rank
         return d
 
     @classmethod
     def from_json(cls, d: dict) -> "FailureEvent":
         dev = d.get("device")
+        rank = d.get("rank")
         return cls(
             step=int(d["step"]),
             kind=str(d["kind"]),
@@ -74,4 +93,5 @@ class FailureEvent:
             duration_steps=int(d.get("duration_steps", 0)),
             magnitude=float(d.get("magnitude", 0.0)),
             source=str(d.get("source", "")),
+            rank=int(rank) if rank is not None else None,
         )

@@ -30,6 +30,8 @@ from repro.ft.events import (
     FAIL,
     NET_DEGRADE,
     NET_RESTORE,
+    NODE_HEAL,
+    RANK_REJOIN,
     RECOVER,
     STRAGGLE,
     STRAGGLE_END,
@@ -98,11 +100,20 @@ class ChaosEngine:
         injectors: Sequence[Injector] = (),
         seed: int = 0,
         recorder=None,
+        elastic: Optional[bool] = None,
     ):
         self.state = GridState(n_dp=n_dp, n_stages=n_stages,
                                step_time_s=step_time_s)
         self.injectors: List[Injector] = list(injectors)
         self.seed = seed
+        # elastic DP membership: a rank whose every stage is down is formally
+        # detached from the DP group and only re-admitted by a rejoin
+        # transition.  Auto-enabled when any injector declares it needs it
+        # (heal-based domain outages); recorded in the trace header so replay
+        # reconstructs the same membership bookkeeping.
+        if elastic is None:
+            elastic = any(getattr(inj, "elastic", False) for inj in injectors)
+        self.elastic = bool(elastic)
         for i, inj in enumerate(self.injectors):
             inj.reset(np.random.default_rng([seed, i]))
         self._scheduled = ScheduledInjector()
@@ -126,7 +137,8 @@ class ChaosEngine:
 
     def plan(self) -> NDBPlan:
         return NDBPlan(self.n_dp, self.n_stages,
-                       frozenset(self.state.failed_until))
+                       frozenset(self.state.failed_until),
+                       frozenset(self.state.detached))
 
     # -- deterministic injection -----------------------------------------
     def inject(self, step: int, device: Device, down_steps: int) -> None:
@@ -153,6 +165,13 @@ class ChaosEngine:
         elif ev.kind == NET_DEGRADE:
             st.net_degraded_until = ev.step + max(ev.duration_steps, 1)
             st.net_inflation = max(ev.magnitude, 1.0)
+        elif ev.kind == NODE_HEAL:
+            # repaired/replaced hardware: the device is no longer failed, but
+            # needs ``duration_steps`` of state transfer before its rank can
+            # rejoin the DP group
+            st.failed_until.pop(ev.device, None)
+            st.straggling_until.pop(ev.device, None)
+            st.heal_ready[ev.device] = ev.step + max(ev.duration_steps, 0)
 
     def _expire(self, step: int) -> List[FailureEvent]:
         st = self.state
@@ -171,14 +190,51 @@ class ChaosEngine:
             st.net_inflation = 1.0
         return out
 
+    def _membership_transitions(self, step: int) -> List[FailureEvent]:
+        """Elastic DP resizes: detach ranks whose whole pipeline is down
+        (no healthy neighbor left to adopt any stage), rejoin detached ranks
+        once every device is back and has finished its state transfer.
+
+        Pure bookkeeping over cause-event effects (deterministic on replay);
+        the ``rejoin`` events it emits are derived, like recover/expiry.
+        """
+        st = self.state
+        out: List[FailureEvent] = []
+        stages = range(st.n_stages)
+        for r in range(st.n_dp):
+            if r not in st.detached and all(
+                (r, s) in st.failed_until for s in stages
+            ):
+                st.detached.add(r)
+        for r in sorted(st.detached):
+            devs = [(r, s) for s in stages]
+            if any(d in st.failed_until for d in devs):
+                continue
+            if any(st.heal_ready.get(d, 0) > step for d in devs):
+                continue  # still streaming weights/optimizer state
+            st.detached.discard(r)
+            for d in devs:
+                st.heal_ready.pop(d, None)
+            out.append(FailureEvent(step, RANK_REJOIN, rank=r, source="engine"))
+        return out
+
     def step(self, step: int) -> ChaosStepOutcome:
         emitted: List[FailureEvent] = list(self._expire(step))
         for inj in (self._scheduled, *self.injectors):
             for ev in inj.emit(step, self.state):
                 if ev.kind == FAIL and self.state.is_failed(ev.device):
-                    continue  # already down (overlapping injectors)
+                    # already down (overlapping injectors): a refail is a
+                    # no-op unless it EXTENDS the outage (a heal-driven
+                    # domain outage swallowing a transient crash) — extension
+                    # events are applied and recorded so replay reproduces
+                    # the longer deadline
+                    new_until = ev.step + max(ev.duration_steps, 1)
+                    if new_until <= self.state.failed_until[ev.device]:
+                        continue
                 self._apply(ev)
                 emitted.append(ev)
+        if self.elastic:
+            emitted.extend(self._membership_transitions(step))
         self.events.extend(emitted)
         st = self.state
         device_times = {
@@ -206,12 +262,13 @@ def engine_for_scenario(
     seed: int = 0,
     persistent_subset: Optional[Set[Device]] = None,
     recorder=None,
+    elastic: Optional[bool] = None,
 ) -> ChaosEngine:
     """The classic Table-1 setup: a single Poisson crash injector."""
     return ChaosEngine(
         n_dp, n_stages, step_time_s,
         injectors=[PoissonCrashInjector(scenario, persistent_subset)],
-        seed=seed, recorder=recorder,
+        seed=seed, recorder=recorder, elastic=elastic,
     )
 
 

@@ -15,6 +15,9 @@ Built-ins:
     device, consumed by ``FTController.detect_straggler`` (Appendix B).
   * :class:`NetworkDegradationInjector` — transient interconnect degradation
     that inflates recovery traffic while active.
+  * :class:`DomainOutageWithHealInjector` — a whole failure domain lost until
+    repaired/replaced hardware *heals* it; drives the elastic DP
+    drop → heal → rejoin machinery.
   * :class:`ScheduledInjector` — deterministic pre-programmed events
     (tests / examples / trace replay).
 """
@@ -28,6 +31,7 @@ import numpy as np
 from repro.ft.events import (
     FAIL,
     NET_DEGRADE,
+    NODE_HEAL,
     STRAGGLE,
     FailureEvent,
 )
@@ -46,6 +50,9 @@ class GridState:
     straggling_until: Dict[Device, Tuple[int, float]] = field(default_factory=dict)
     net_degraded_until: int = -1
     net_inflation: float = 1.0
+    # elastic DP membership (engine-owned; only mutated when elastic mode on)
+    detached: Set[int] = field(default_factory=set)
+    heal_ready: Dict[Device, int] = field(default_factory=dict)
 
     @property
     def n_devices(self) -> int:
@@ -181,6 +188,109 @@ class CorrelatedDomainInjector(Injector):
         d = super().describe()
         d.update(domain=self.domain, fail_interval_s=self.fail_interval_s,
                  recover_time_s=self.recover_time_s)
+        return d
+
+
+# ---------------------------------------------------------------------------
+# Domain outage WITH heal — elastic DP drop → heal → rejoin
+# ---------------------------------------------------------------------------
+
+
+# an outage whose end is heal-driven, not expiry-driven: effectively forever
+PERMANENT_STEPS = 1_000_000_000
+
+
+class DomainOutageWithHealInjector(Injector):
+    """A whole failure domain is lost and later *healed* (repaired/replaced).
+
+    Unlike :class:`CorrelatedDomainInjector`, the outage has no automatic
+    expiry: devices stay down until this injector emits their ``heal``
+    events, ``heal_time_s`` after the outage.  With ``domain="dp"`` the lost
+    domain is a full pipeline — no stage has a healthy neighbor, so the
+    elastic engine detaches the rank from the DP group, and the healed
+    devices trigger a ``rejoin`` (DP resize back up) once their
+    ``transfer_steps`` of weight/optimizer-state streaming complete.
+    ``domain="stage"`` models a rack holding one stage across all replicas:
+    every rank degrades (NDB) until the heal, with no membership change.
+
+    Declares ``elastic = True`` so :class:`~repro.ft.failures.ChaosEngine`
+    auto-enables membership bookkeeping when this injector is present.
+    """
+
+    name = "domain-heal"
+    elastic = True
+
+    def __init__(self, fail_interval_s: float, heal_time_s: float,
+                 transfer_steps: int = 1, domain: str = "dp"):
+        super().__init__()
+        if domain not in ("stage", "dp"):
+            raise ValueError(f"domain must be 'stage' or 'dp', got {domain!r}")
+        self.fail_interval_s = fail_interval_s
+        self.heal_time_s = heal_time_s
+        self.transfer_steps = transfer_steps
+        self.domain = domain
+        self._pending_heals: List[Tuple[int, Device]] = []
+        self._in_flight: Set[Tuple[str, int]] = set()
+
+    def emit(self, step: int, state: GridState) -> List[FailureEvent]:
+        out: List[FailureEvent] = []
+        due = sorted(p for p in self._pending_heals if p[0] <= step)
+        self._pending_heals = [p for p in self._pending_heals if p[0] > step]
+        healed_domains = set()
+        for _due_step, dev in due:
+            out.append(
+                FailureEvent(step, NODE_HEAL, dev,
+                             duration_steps=self.transfer_steps,
+                             source=self.name)
+            )
+            healed_domains.add(dev[0] if self.domain == "dp" else dev[1])
+        for idx in healed_domains:
+            self._in_flight.discard((self.domain, idx))
+
+        lam = state.step_time_s / self.fail_interval_s
+        if self.rng.random() < min(lam, 1.0):
+            if self.domain == "dp":
+                candidates = [
+                    r for r in range(state.n_dp)
+                    if ("dp", r) not in self._in_flight
+                ]
+                col = None
+                if candidates:
+                    r = candidates[int(self.rng.integers(len(candidates)))]
+                    self._in_flight.add(("dp", r))
+                    col = [(r, s) for s in range(state.n_stages)]
+            else:
+                candidates = [
+                    s for s in range(state.n_stages)
+                    if ("stage", s) not in self._in_flight
+                ]
+                col = None
+                if candidates:
+                    s = candidates[int(self.rng.integers(len(candidates)))]
+                    self._in_flight.add(("stage", s))
+                    col = [(r, s) for r in range(state.n_dp)]
+            if col is not None:
+                heal_steps = max(
+                    int(round(self.heal_time_s / state.step_time_s)), 1
+                )
+                for dev in col:
+                    # emit for EVERY domain device: the engine extends the
+                    # deadline of devices other injectors had already taken
+                    # down transiently — this outage ends at the heal, never
+                    # at a shorter Poisson expiry
+                    out.append(
+                        FailureEvent(step, FAIL, dev,
+                                     duration_steps=PERMANENT_STEPS,
+                                     source=self.name)
+                    )
+                    self._pending_heals.append((step + heal_steps, dev))
+        return out
+
+    def describe(self) -> dict:
+        d = super().describe()
+        d.update(domain=self.domain, fail_interval_s=self.fail_interval_s,
+                 heal_time_s=self.heal_time_s,
+                 transfer_steps=self.transfer_steps)
         return d
 
 
@@ -361,6 +471,12 @@ def chaos_preset(name: str, scenario=None) -> List[Injector]:
             poisson,
             NetworkDegradationInjector(4 * base, base, inflation=3.0),
         ],
+        "elastic": lambda: [
+            poisson,
+            DomainOutageWithHealInjector(
+                6 * base, 3 * base, transfer_steps=2, domain="dp"
+            ),
+        ],
         "kitchen-sink": lambda: [
             poisson,
             CorrelatedDomainInjector(8 * base, scenario.recover_time_s or 4 * base,
@@ -376,4 +492,6 @@ def chaos_preset(name: str, scenario=None) -> List[Injector]:
     return presets[name]()
 
 
-CHAOS_PRESETS = ("poisson", "rack", "pod", "stragglers", "network", "kitchen-sink")
+CHAOS_PRESETS = (
+    "poisson", "rack", "pod", "stragglers", "network", "elastic", "kitchen-sink"
+)

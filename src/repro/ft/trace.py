@@ -40,13 +40,19 @@ class TraceHeader:
     seed: int
     version: int = TRACE_VERSION
     injectors: List[dict] = field(default_factory=list)
+    # elastic DP membership bookkeeping was active during recording; replay
+    # must re-enable it so the derived rejoin events are regenerated.
+    elastic: bool = False
 
     def to_json(self) -> dict:
-        return {
+        d = {
             "type": "header", "version": self.version, "seed": self.seed,
             "n_dp": self.n_dp, "n_stages": self.n_stages,
             "step_time_s": self.step_time_s, "injectors": self.injectors,
         }
+        if self.elastic:
+            d["elastic"] = True
+        return d
 
     @classmethod
     def from_json(cls, d: dict) -> "TraceHeader":
@@ -55,6 +61,7 @@ class TraceHeader:
             step_time_s=float(d["step_time_s"]), seed=int(d["seed"]),
             version=int(d.get("version", 1)),
             injectors=list(d.get("injectors", [])),
+            elastic=bool(d.get("elastic", False)),
         )
 
 
@@ -103,6 +110,7 @@ class TraceRecorder:
             n_dp=engine.n_dp, n_stages=engine.n_stages,
             step_time_s=engine.step_time_s, seed=engine.seed,
             injectors=[inj.describe() for inj in engine.injectors],
+            elastic=getattr(engine, "elastic", False),
         )
         self._fh.write(json.dumps(header.to_json()) + "\n")
 
@@ -162,7 +170,7 @@ def replay_engine(trace: Trace, recorder=None):
     engine = ChaosEngine(
         h.n_dp, h.n_stages, h.step_time_s,
         injectors=[ScheduledInjector(trace.cause_events())],
-        seed=h.seed, recorder=recorder,
+        seed=h.seed, recorder=recorder, elastic=h.elastic,
     )
     return engine
 

@@ -19,6 +19,18 @@ from repro.kernels import swiglu as _sg
 from repro.kernels import ref
 
 
+def _pad_to(x, axis: int, multiple: int):
+    """Zero-pad ``axis`` up to the next multiple (hardware-aligned blocks
+    stay intact; padding is handled here at the wrapper, not in-kernel)."""
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
 def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128, interpret=True):
     return _fa.flash_attention(
@@ -29,6 +41,12 @@ def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128, interpret
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def flash_decode(q, k_cache, v_cache, cur_len, *, block_k=512, interpret=True):
+    # ragged caches: pad Smax to a block multiple; padded positions sit past
+    # cur_len (<= the original Smax) so the kernel's length mask drops them
+    Smax = k_cache.shape[1]
+    bk = min(block_k, Smax)
+    k_cache = _pad_to(k_cache, 1, bk)
+    v_cache = _pad_to(v_cache, 1, bk)
     return _fd.flash_decode(
         q, k_cache, v_cache, cur_len, block_k=block_k, interpret=interpret
     )
@@ -36,10 +54,19 @@ def flash_decode(q, k_cache, v_cache, cur_len, *, block_k=512, interpret=True):
 
 @functools.partial(jax.jit, static_argnames=("block_t", "block_m", "interpret"))
 def lowrank_wgrad(x, dy, v1, *, block_t=256, block_m=512, interpret=True):
-    """Full technique-III Wgrad: dW = v1 @ ((x v1)^T dy)."""
+    """Full technique-III Wgrad: dW = v1 @ ((x v1)^T dy).
+
+    Odd (non-block-multiple) T and m are zero-padded up to the block grid:
+    zero token rows contribute nothing to the accumulator and the padded
+    output columns are sliced off, so the result is exact.
+    """
+    T, m = x.shape[0], dy.shape[1]
+    bt, bm = min(block_t, T), min(block_m, m)
+    x = _pad_to(x, 0, bt)
+    dy = _pad_to(_pad_to(dy, 0, bt), 1, bm)
     a = _lw.lowrank_wgrad_project(
         x, dy, v1, block_t=block_t, block_m=block_m, interpret=interpret
-    )
+    )[:, :m]
     return (v1.astype(jnp.float32) @ a).astype(v1.dtype)
 
 

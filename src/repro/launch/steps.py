@@ -18,7 +18,7 @@ from repro.configs.base import (
     ShapeConfig,
     TrainConfig,
 )
-from repro.core.grad_sync import loss_weight_correction, rescale_skipped_grads
+from repro.core.grad_sync import rescale_skipped_grads
 from repro.core.ndb import NDBContext
 from repro.models.model import ExecFlags, forward_decode, forward_loss, forward_prefill
 from repro.models.kvcache import cache_structs
@@ -230,8 +230,13 @@ def make_train_step(
             metrics["loss"] = loss
 
         if mecefo.skip_mha_backward and ndb_mode in ("dynamic", "static"):
+            # eq. (1), with |N_l|/n measured over live examples only: under an
+            # elastic resize the repartitioned batch keeps every weight at 1,
+            # while a transient whole-rank failure zero-weights its slice and
+            # must not deflate the per-layer active fraction.
             keep_full = ndb["keep"] if ndb_mode == "dynamic" else _static_keep
-            grads = rescale_skipped_grads(grads, keep_full, cfg)  # eq. (1)
+            w_full = ndb["example_weight"] if ndb_mode == "dynamic" else _static_w
+            grads = rescale_skipped_grads(grads, keep_full, cfg, w_full)
         grads, gnorm = clip_by_global_norm(grads, train.grad_clip)
         lr = schedule(state.step)
         new_params, new_opt = apply_update(

@@ -70,6 +70,7 @@ class Trainer:
         injectors: Optional[List[Injector]] = None,
         trace_record: Optional[str] = None,
         trace_replay: Optional[str] = None,
+        elastic: Optional[bool] = None,
     ):
         self.cfg, self.shape, self.train_cfg = cfg, shape, train
         self.parallel = parallel or ParallelConfig(
@@ -112,11 +113,12 @@ class Trainer:
             self.process = ChaosEngine(
                 n_dp, self.controller.n_stages, step_time_s,
                 injectors=injectors, seed=seed + 1, recorder=recorder,
+                elastic=elastic,
             )
         else:
             self.process = engine_for_scenario(
                 scenario, n_dp, self.controller.n_stages, step_time_s,
-                seed=seed + 1, recorder=recorder,
+                seed=seed + 1, recorder=recorder, elastic=elastic,
             )
         self.ckpt = (
             CheckpointManager(train.checkpoint_dir)
@@ -126,6 +128,7 @@ class Trainer:
         self._step_cache: Dict = {}
         self.history: List[Dict] = []
         self._refresh_proj = None
+        self._logged_reshard = None
 
     # ------------------------------------------------------------------
     def _get_step(self, key):
@@ -206,14 +209,25 @@ class Trainer:
                 "stragglers": len(slow),
                 "net_inflation": outcome.net_inflation,
                 "degraded_frac": self.controller.degraded_layer_fraction(),
+                "dp_size": self.controller.plan.dp_size(),
             }
             self.history.append(rec)
+            rp = self.controller.last_reshard
+            if log_every and rp is not None and rp is not self._logged_reshard:
+                self._logged_reshard = rp  # each resize produces a fresh plan
+                print(
+                    f"step {step_idx:5d} elastic resize: dp {len(rp.old_active)}"
+                    f"->{rp.dp_size} dropped={list(rp.dropped)} "
+                    f"rejoined={list(rp.rejoined)} "
+                    f"transfer={rp.transfer_bytes/1e6:.1f}MB ({rp.source})",
+                    flush=True,
+                )
             if log_every and i % log_every == 0:
                 print(
                     f"step {rec['step']:5d} loss {rec['loss']:.4f} "
                     f"gnorm {rec['grad_norm']:.3f} {dt*1e3:.0f}ms "
                     f"failed={rec['failed']} slow={rec['stragglers']} "
-                    f"deg={rec['degraded_frac']:.2f}",
+                    f"deg={rec['degraded_frac']:.2f} dp={rec['dp_size']}",
                     flush=True,
                 )
         if self.ckpt:
@@ -260,6 +274,11 @@ def main(argv: Optional[List[str]] = None) -> int:
         help="'record PATH' writes a chaos trace; 'replay PATH' reproduces "
              "one bit-exactly and verifies events + accounting against it",
     )
+    ap.add_argument(
+        "--replay-record", metavar="PATH", default=None,
+        help="while replaying, also record the replayed event stream to PATH "
+             "(CI uploads it as the divergence artifact when a replay fails)",
+    )
     ap.add_argument("--n-dp", type=int, default=4)
     ap.add_argument("--n-stages", type=int, default=8)
     ap.add_argument("--reduced", action="store_true", default=True)
@@ -273,6 +292,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     trace_mode, trace_path = args.trace or (None, None)
     if trace_mode not in (None, "record", "replay"):
         ap.error(f"--trace mode must be 'record' or 'replay', got {trace_mode!r}")
+    if args.replay_record and trace_mode != "replay":
+        ap.error("--replay-record requires --trace replay PATH")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -301,7 +322,9 @@ def main(argv: Optional[List[str]] = None) -> int:
         step_time_s=3600.0 if (args.scenario != "none" or args.chaos) else 1.0,
         seed=args.seed,
         injectors=injectors,
-        trace_record=trace_path if trace_mode == "record" else None,
+        trace_record=(
+            trace_path if trace_mode == "record" else args.replay_record
+        ),
         trace_replay=replay_trace,
     )
     hist = trainer.run()
@@ -310,6 +333,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         f"final loss {hist[-1]['loss']:.4f}  "
         f"failovers={acc.n_failovers} "
         f"recoveries={acc.n_recoveries} "
+        f"rank_drops={acc.n_rank_drops} rejoins={acc.n_rejoins} "
+        f"dp={trainer.controller.plan.dp_size()}/{trainer.controller.n_dp} "
         f"peer_fetch={acc.peer_fetch_bytes/1e6:.1f}MB"
     )
     if trace_mode == "record":

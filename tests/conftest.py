@@ -12,6 +12,18 @@ from repro.configs.base import ModelConfig, MoEConfig, SSMConfig  # noqa: E402
 from repro.parallel.sharding import ShardingRules  # noqa: E402
 
 
+def require_hypothesis():
+    """Shared guard for the optional ``hypothesis`` dependency.
+
+    Call at module top before ``from hypothesis import ...``: skips the whole
+    module when the [test] extra isn't installed, and returns the module so
+    callers can grab settings/strategies from the return value if preferred.
+    """
+    return pytest.importorskip(
+        "hypothesis", reason="property tests need the [test] extra"
+    )
+
+
 @pytest.fixture(scope="session")
 def local_rules():
     """No-mesh sharding rules (everything replicated) for 1-device tests."""

@@ -7,6 +7,8 @@ from repro.ft.controller import FTController
 from repro.ft.events import (
     FAIL,
     NET_DEGRADE,
+    NODE_HEAL,
+    RANK_REJOIN,
     RECOVER,
     STRAGGLE,
     FailureEvent,
@@ -15,6 +17,7 @@ from repro.ft.failures import SCENARIOS, ChaosEngine, FailureScenario
 from repro.ft.injectors import (
     CHAOS_PRESETS,
     CorrelatedDomainInjector,
+    DomainOutageWithHealInjector,
     NetworkDegradationInjector,
     PoissonCrashInjector,
     ScheduledInjector,
@@ -304,6 +307,154 @@ def test_overlapping_injectors_never_double_fail():
             open_failures.add(ev.device)
         elif ev.kind == RECOVER:
             open_failures.discard(ev.device)
+
+
+# ---------------------------------------------------------------------------
+# elastic DP: drop -> heal -> rejoin
+# ---------------------------------------------------------------------------
+
+
+def _schedule_domain_loss(eng, rank, fail_step, heal_step, transfer=2,
+                          n_stages=4):
+    for s in range(n_stages):
+        eng.schedule(
+            FailureEvent(fail_step, FAIL, (rank, s), duration_steps=10**9)
+        )
+        eng.schedule(
+            FailureEvent(heal_step, NODE_HEAL, (rank, s),
+                         duration_steps=transfer)
+        )
+
+
+def test_elastic_drop_heal_rejoin_restores_dp_size():
+    eng = ChaosEngine(4, 4, 1.0, seed=0, elastic=True)
+    _schedule_domain_loss(eng, rank=1, fail_step=2, heal_step=6, transfer=2)
+    ctl = _controller()
+    sizes = []
+    for step in range(12):
+        outcome = eng.step(step)
+        ctl.apply_chaos(outcome)
+        sizes.append(outcome.plan.dp_size())
+        keep, w = plan_to_masks_for(ctl.plan)
+        assert w.sum() == 8.0  # global batch preserved at every step
+    assert sizes[1] == 4 and min(sizes) == 3 and sizes[-1] == 4
+    assert ctl.plan.is_healthy()
+    acc = ctl.accounting
+    assert acc.n_rank_drops == 1 and acc.n_rejoins == 1
+    # rejoin streams a FULL pipeline's state, not one stage
+    assert acc.peer_fetch_bytes == 4 * ctl.stage_param_bytes()
+    assert acc.n_failovers == 0 and acc.n_recoveries == 0
+    kinds = [e.kind for e in eng.events]
+    assert kinds.count(RANK_REJOIN) == 1 and kinds.count(NODE_HEAL) == 4
+    rj = next(e for e in eng.events if e.kind == RANK_REJOIN)
+    assert rj.rank == 1 and rj.device is None
+
+
+def plan_to_masks_for(plan):
+    from repro.core.ndb import plan_to_masks
+
+    return plan_to_masks(plan, TINY_DENSE, 8)
+
+
+def test_elastic_resize_emits_reshard_plan():
+    eng = ChaosEngine(4, 4, 1.0, seed=0, elastic=True)
+    _schedule_domain_loss(eng, rank=2, fail_step=1, heal_step=5, transfer=1)
+    ctl = _controller()
+    ctl.apply_chaos(eng.step(0))
+    assert ctl.last_reshard is None
+    ctl.apply_chaos(eng.step(1))
+    rp = ctl.last_reshard
+    assert rp is not None and rp.dropped == (2,) and rp.rejoined == ()
+    assert rp.new_active == (0, 1, 3) and rp.dp_size == 3
+    assert sum(rp.shares.values()) == 8  # batch fully redistributed
+    assert rp.transfer_bytes == 0  # drops move no state; rejoins do
+    for step in range(2, 8):
+        ctl.apply_chaos(eng.step(step))
+    rp = ctl.last_reshard
+    assert rp.rejoined == (2,) and rp.dp_size == 4
+    assert rp.transfer_bytes == 4 * ctl.stage_param_bytes()
+    assert rp.source == "peer"
+
+
+def test_heal_injector_drops_and_rejoins():
+    eng = ChaosEngine(
+        4, 4, 1.0,
+        [DomainOutageWithHealInjector(3.0, 5.0, transfer_steps=1)],
+        seed=3,
+    )
+    assert eng.elastic  # auto-enabled by the injector
+    dropped, rejoined = set(), 0
+    for step in range(200):
+        out = eng.step(step)
+        dropped |= set(out.plan.detached)
+        rejoined += sum(1 for e in out.events if e.kind == RANK_REJOIN)
+    assert dropped and rejoined > 0
+    # every outage eventually healed: at most the in-flight domains remain
+    assert len(eng.state.failed_until) <= 4
+
+
+def test_non_elastic_engine_never_detaches():
+    """Without elastic mode, a full-rank outage stays a transient failure:
+    no membership change, no rejoin events (back-compat with old traces)."""
+    eng = ChaosEngine(2, 2, 1.0, seed=0)  # elastic off
+    for s in range(2):
+        eng.schedule(FailureEvent(1, FAIL, (0, s), duration_steps=3))
+    for step in range(8):
+        out = eng.step(step)
+        assert not out.plan.detached
+    kinds = {e.kind for e in eng.events}
+    assert RANK_REJOIN not in kinds
+    assert RECOVER in kinds
+
+
+@pytest.mark.chaos
+def test_elastic_record_replay_bit_exact(tmp_path):
+    """Elastic traces replay bit-exactly, including derived rejoin events
+    and the rejoin transfer accounting."""
+    path = tmp_path / "elastic.jsonl"
+    eng = ChaosEngine(
+        4, 4, 1.0,
+        chaos_preset("elastic", FAST),
+        seed=9, recorder=TraceRecorder(path),
+    )
+    ctl = _controller()
+    _drive(eng, 150, ctl)
+    eng.recorder.close(150, ctl.accounting.as_dict())
+    assert ctl.accounting.n_rank_drops > 0 and ctl.accounting.n_rejoins > 0
+    trace = load_trace(path)
+    assert trace.header.elastic
+    assert any(e.kind == RANK_REJOIN for e in trace.events)
+    ctl2 = _controller()
+    replayed = _drive(replay_engine(trace), 150, ctl2)
+    problems = verify_replay(trace, replayed,
+                             accounting=ctl2.accounting.as_dict())
+    assert not problems, problems
+
+
+@pytest.mark.chaos
+def test_golden_elastic_trace_replays_bit_exactly():
+    """The committed golden elastic trace reproduces events AND accounting
+    (drop/heal/rejoin semantics are CI-pinned alongside the original trace)."""
+    from pathlib import Path
+
+    from repro.configs.base import get_config, reduced
+
+    golden = Path(__file__).parent / "data" / "golden_trace_elastic.jsonl"
+    trace = load_trace(golden)
+    assert trace.footer is not None, "golden elastic trace missing footer"
+    assert trace.header.elastic, "golden elastic trace not marked elastic"
+    assert trace.footer.accounting["n_rank_drops"] > 0
+    assert trace.footer.accounting["n_rejoins"] > 0
+    cfg = reduced(get_config("llama-350m"), dtype="float32")
+    ctl = FTController(
+        cfg=cfg, mecefo=MeCeFOConfig(mode="dynamic"),
+        n_dp=trace.header.n_dp, n_stages=trace.header.n_stages,
+        global_batch=8,
+    )
+    engine = _drive(replay_engine(trace), trace.footer.total_steps, ctl)
+    problems = verify_replay(trace, engine,
+                             accounting=ctl.accounting.as_dict())
+    assert not problems, problems
 
 
 # ---------------------------------------------------------------------------

@@ -52,7 +52,7 @@ def test_controller_accounting_and_compile_key():
     assert ctl.accounting.n_failovers == 1
     assert ctl.accounting.peer_fetch_bytes > 0
     key = ctl.compile_key()
-    assert key == (2, 2, ((0, 1),))
+    assert key == (2, 2, ((0, 1),), ())
     # recovery refetches from the neighbor
     assert ctl.update_plan(NDBPlan(2, 2, frozenset()))
     assert ctl.accounting.n_recoveries == 1
@@ -81,6 +81,44 @@ def test_elastic_rank_drop():
     np.testing.assert_array_equal(
         np.asarray(ctx.example_weight), [0, 0, 1, 1]
     )
+
+
+def test_elastic_detached_rank_rebalances_batch():
+    """A *detached* rank (formal resize) redistributes its batch share to
+    the survivors instead of zero-weighting it."""
+    ctl = FTController(
+        cfg=TINY_DENSE, mecefo=MeCeFOConfig(mode="dynamic"),
+        n_dp=2, n_stages=2, global_batch=4,
+    )
+    plan = NDBPlan(2, 2, frozenset({(0, 0), (0, 1)})).detach(0)
+    ctl.update_plan(plan)
+    assert ctl.plan.dp_size() == 1
+    assert ctl.batch_shares() == {1: 4}
+    ctx = ctl.context()
+    np.testing.assert_array_equal(np.asarray(ctx.example_weight), [1, 1, 1, 1])
+    rp = ctl.last_reshard
+    assert rp is not None and rp.dropped == (0,) and rp.shares == {1: 4}
+    # rejoin: membership restored, full-state transfer accounted
+    before = ctl.accounting.peer_fetch_bytes
+    ctl.update_plan(ctl.plan.rejoin(0))
+    assert ctl.plan.is_healthy() and ctl.plan.dp_size() == 2
+    assert ctl.accounting.n_rejoins == 1
+    assert ctl.accounting.peer_fetch_bytes - before == 2 * ctl.stage_param_bytes()
+    assert ctl.last_reshard.rejoined == (0,)
+    assert ctl.batch_shares() == {0: 2, 1: 2}
+
+
+def test_rejoin_under_fsdp_restores_from_checkpoint():
+    ctl = FTController(
+        cfg=TINY_DENSE, mecefo=MeCeFOConfig(mode="dynamic"),
+        n_dp=2, n_stages=2, global_batch=4, params_replicated=False,
+    )
+    ctl.update_plan(NDBPlan(2, 2, frozenset({(1, 0), (1, 1)})).detach(1))
+    ctl.update_plan(ctl.plan.rejoin(1))
+    assert ctl.accounting.n_rejoins == 1
+    assert ctl.accounting.ckpt_restore_bytes > 0
+    assert ctl.accounting.peer_fetch_bytes == 0
+    assert ctl.last_reshard.source == "ckpt"
 
 
 def test_straggler_detection_reuses_ndb():

@@ -4,7 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need the [test] extra")
+from tests.conftest import require_hypothesis
+
+require_hypothesis()
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops
@@ -52,12 +54,14 @@ def test_flash_attention_sweep(case):
 # ---------------------------------------------------------------------------
 
 
-@settings(max_examples=12, deadline=None)
+@settings(max_examples=16, deadline=None)
 @given(
-    t=st.sampled_from([128, 256, 512]),
-    n=st.sampled_from([32, 64, 128]),
-    m=st.sampled_from([256, 512]),
-    r=st.sampled_from([8, 16, 64]),
+    # includes odd (non-multiple-of-8) sizes: the wrapper pads to the block
+    # grid so the kernel itself always sees hardware-aligned tiles
+    t=st.sampled_from([128, 256, 512, 300, 100]),
+    n=st.sampled_from([32, 64, 128, 52]),
+    m=st.sampled_from([256, 512, 260]),
+    r=st.sampled_from([8, 16, 64, 12]),
     dt=st.sampled_from(["float32", "bfloat16"]),
 )
 def test_lowrank_wgrad_property(t, n, m, r, dt):
@@ -67,6 +71,31 @@ def test_lowrank_wgrad_property(t, n, m, r, dt):
     dy = jax.random.normal(ks[1], (t, m), dt)
     v1 = jax.random.normal(ks[2], (n, r), dt)
     a = ops.lowrank_wgrad(x, dy, v1, block_t=128, block_m=256)
+    ref = lowrank_wgrad_ref(x, dy, v1).astype(a.dtype)
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-6
+    tol = 0.05 if dt == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32) / scale, np.asarray(ref, np.float32) / scale,
+        atol=tol,
+    )
+
+
+@pytest.mark.parametrize(
+    "t,n,m,r,dt",
+    [
+        # bf16 with odd (non-multiple-of-8) dims in every position
+        (300, 100, 260, 12, jnp.bfloat16),
+        (100, 52, 130, 10, jnp.bfloat16),
+        (260, 36, 412, 20, jnp.float32),
+    ],
+)
+def test_lowrank_wgrad_odd_shapes(t, n, m, r, dt):
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    x = jax.random.normal(ks[0], (t, n), dt)
+    dy = jax.random.normal(ks[1], (t, m), dt)
+    v1 = jax.random.normal(ks[2], (n, r), dt)
+    a = ops.lowrank_wgrad(x, dy, v1, block_t=128, block_m=256)
+    assert a.shape == (n, m) and a.dtype == dt
     ref = lowrank_wgrad_ref(x, dy, v1).astype(a.dtype)
     scale = float(jnp.max(jnp.abs(ref))) + 1e-6
     tol = 0.05 if dt == jnp.bfloat16 else 1e-4
@@ -178,6 +207,10 @@ def test_lowrank_kernel_matches_custom_vjp():
         (1, 512, 8, 1, 64, 512, 128, jnp.float32),   # MQA, full cache
         (2, 256, 4, 4, 32, 1, 64, jnp.bfloat16),     # single valid position
         (1, 1024, 2, 2, 128, 700, 256, jnp.bfloat16),
+        # ragged cache: Smax not a block_k multiple (wrapper pads, mask
+        # drops the padded positions) — incl. a full ragged cache
+        (2, 300, 4, 2, 32, 173, 64, jnp.float32),
+        (1, 250, 4, 4, 64, 250, 128, jnp.bfloat16),
     ],
 )
 def test_flash_decode_sweep(case):

@@ -206,24 +206,38 @@ def test_lowrank_mixed_interpolates():
     )
 
 
-def test_lowrank_grouped_matches_dense_per_expert():
-    E, C, n, m, r = 3, 8, 12, 10, 4
-    x = jax.random.normal(jax.random.PRNGKey(0), (E, C, n))
-    w = jax.random.normal(jax.random.PRNGKey(1), (E, n, m))
-    dy = jax.random.normal(jax.random.PRNGKey(2), (E, C, m))
+@pytest.mark.parametrize(
+    "E,C,n,m,r,dtype",
+    [
+        (3, 8, 12, 10, 4, "float32"),
+        # bf16 + odd (non-multiple-of-8) expert/capacity/feature dims — the
+        # grouped MoE path must match per-expert dense regardless of layout
+        (3, 7, 13, 11, 5, "bfloat16"),
+        (2, 9, 20, 17, 6, "bfloat16"),
+        (5, 6, 9, 21, 3, "float32"),
+    ],
+)
+def test_lowrank_grouped_matches_dense_per_expert(E, C, n, m, r, dtype):
+    dt = jnp.dtype(dtype)
+    x = jax.random.normal(jax.random.PRNGKey(0), (E, C, n), dt)
+    w = jax.random.normal(jax.random.PRNGKey(1), (E, n, m), dt)
+    dy = jax.random.normal(jax.random.PRNGKey(2), (E, C, m), dt)
     v1 = svd_projection(w, r)
     keep = jnp.zeros((E, C))
 
     dw = jax.grad(
         lambda w: jnp.sum(lowrank_linear_grouped(x, w, v1, keep, "degraded") * dy)
     )(w)
+    atol = 5e-2 if dt == jnp.bfloat16 else 1e-4
     for e in range(E):
         ref = jax.grad(
             lambda we: jnp.sum(
                 lowrank_linear(x[e], we, v1[e], jnp.zeros(C), "degraded") * dy[e]
             )
         )(w[e])
-        np.testing.assert_allclose(dw[e], ref, atol=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(dw[e], np.float32), np.asarray(ref, np.float32), atol=atol
+        )
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,247 @@
+"""Property-based NDBPlan invariants under arbitrary failure/heal sequences.
+
+Drives the real ChaosEngine (elastic membership on) with generated event
+schedules and asserts, at every step:
+
+  * a failed device's adopting neighbor is never itself failed, and batch
+    owners are never dropped ranks;
+  * ``plan_to_masks`` partitions the global batch exactly — elastic resizes
+    redistribute examples instead of losing them;
+  * ``signature()`` is stable under reordering of a step's events;
+  * resize transitions never lose or duplicate a rank.
+
+The invariant checkers are plain functions so deterministic tests (and the
+chaos suite) can reuse them outside hypothesis.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.ndb import NDBPlan, plan_to_masks, stage_of_layer
+from repro.data.pipeline import rank_batch_shares, rebalanced_owners
+from repro.ft.events import FAIL, NODE_HEAL, STRAGGLE, FailureEvent
+from repro.ft.failures import ChaosEngine
+from tests.conftest import require_hypothesis
+
+require_hypothesis()
+from hypothesis import given, settings, strategies as st
+
+
+def _cfg(n_layers: int) -> ModelConfig:
+    return ModelConfig(
+        name="prop", n_layers=n_layers, d_model=32, n_heads=2, n_kv_heads=2,
+        d_ff=64, vocab_size=64, dtype="float32",
+    )
+
+
+# ---------------------------------------------------------------------------
+# invariant checkers (plain functions — reusable without hypothesis)
+# ---------------------------------------------------------------------------
+
+
+def check_neighbor_invariant(plan: NDBPlan) -> None:
+    """The stage adopting a failed device's work is never itself failed."""
+    for (r, s) in plan.failed:
+        nb = plan.neighbor_of(r, s)
+        if nb is not None:
+            assert (r, nb) not in plan.failed, (r, s, nb)
+            assert nb != s
+
+
+def check_partition_invariant(plan: NDBPlan, cfg: ModelConfig, B: int) -> None:
+    """plan_to_masks assigns every example exactly once; elastic plans keep
+    the whole global batch; owners are never dropped ranks."""
+    keep, weight = plan_to_masks(plan, cfg, B)
+    assert keep.shape == (cfg.n_layers, B) and weight.shape == (B,)
+    assert set(np.unique(weight)) <= {0.0, 1.0}
+    active = plan.active_ranks()
+    dropped = plan.dropped_ranks()
+    assert set(active) | set(dropped) == set(range(plan.n_dp))
+    assert not set(active) & set(dropped)
+    shares = rank_batch_shares(B, plan.n_dp, active)
+    assert set(shares) == set(active)
+    if active:
+        assert sum(shares.values()) == B
+    if plan.detached and active:
+        # elastic resize: the batch is repartitioned, never shrunk
+        assert weight.sum() == B
+        owners = rebalanced_owners(B, plan.n_dp, active)
+        assert not set(owners.tolist()) & set(dropped)
+        counts = {r: int((owners == r).sum()) for r in active}
+        assert counts == shares
+        # keep masks reflect the *owning* rank's degraded stages
+        for r in active:
+            deg = plan.degraded_stages(r)
+            cols = owners == r
+            for layer in range(cfg.n_layers):
+                expect = 0.0 if stage_of_layer(
+                    layer, cfg.n_layers, plan.n_stages) in deg else 1.0
+                assert (keep[layer, cols] == expect).all()
+    if not plan.detached:
+        # transient semantics: a fully-failed rank's slice is zero-weighted
+        per = B // plan.n_dp
+        for r in range(plan.n_dp):
+            sl = slice(r * per, (r + 1) * per)
+            expect = 0.0 if r in dropped else 1.0
+            assert (weight[sl] == expect).all()
+
+
+def check_rank_conservation(prev: NDBPlan, cur: NDBPlan) -> None:
+    """A resize transition neither loses nor duplicates a rank."""
+    assert prev.n_dp == cur.n_dp
+    for plan in (prev, cur):
+        active, dropped = plan.active_ranks(), plan.dropped_ranks()
+        assert len(active) + len(dropped) == plan.n_dp
+        assert len(set(active)) == len(active)
+        assert plan.detached <= dropped
+
+
+# ---------------------------------------------------------------------------
+# generated failure/heal sequences
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def chaos_schedules(draw):
+    """(n_dp, n_stages, steps, events): at most one event per (step, device)
+    — a device cannot simultaneously fail and heal, which is also what makes
+    within-step reordering semantics well-defined."""
+    n_dp = draw(st.integers(1, 4))
+    n_stages = draw(st.integers(1, 4))
+    steps = draw(st.integers(4, 14))
+    raw = draw(
+        st.lists(
+            st.tuples(
+                st.integers(0, steps - 1),                     # step
+                st.sampled_from([FAIL, NODE_HEAL, STRAGGLE]),  # kind
+                st.integers(0, n_dp - 1),                      # rank
+                st.integers(0, n_stages - 1),                  # stage
+                st.integers(1, 6),                             # duration
+            ),
+            max_size=24,
+        )
+    )
+    seen, events = set(), []
+    for (step, kind, r, s, dur) in raw:
+        if (step, r, s) in seen:
+            continue
+        seen.add((step, r, s))
+        dur = 10**9 if (kind == FAIL and dur > 4) else dur  # some permanent
+        mag = 8.0 if kind == STRAGGLE else 0.0
+        events.append(
+            FailureEvent(step, kind, (r, s), duration_steps=dur,
+                         magnitude=mag, source="prop")
+        )
+    return n_dp, n_stages, steps, events
+
+
+def _drive(n_dp, n_stages, events, steps):
+    eng = ChaosEngine(n_dp, n_stages, 1.0, seed=0, elastic=True)
+    for ev in events:
+        eng.schedule(ev)
+    return eng, [eng.step(i).plan for i in range(steps)]
+
+
+@settings(max_examples=60, deadline=None)
+@given(chaos_schedules())
+def test_plan_invariants_under_generated_chaos(schedule):
+    n_dp, n_stages, steps, events = schedule
+    cfg = _cfg(n_layers=2 * n_stages)
+    B = 2 * n_dp
+    _, plans = _drive(n_dp, n_stages, events, steps)
+    prev = NDBPlan(n_dp, n_stages)
+    for plan in plans:
+        check_neighbor_invariant(plan)
+        check_partition_invariant(plan, cfg, B)
+        check_rank_conservation(prev, plan)
+        prev = plan
+
+
+@settings(max_examples=40, deadline=None)
+@given(chaos_schedules(), st.randoms(use_true_random=False))
+def test_signature_stable_under_event_reordering(schedule, rnd):
+    """Shuffling a step's events (one event per device) can't change the
+    resulting plan signature at any step."""
+    n_dp, n_stages, steps, events = schedule
+    shuffled = list(events)
+    rnd.shuffle(shuffled)
+    _, plans_a = _drive(n_dp, n_stages, events, steps)
+    _, plans_b = _drive(n_dp, n_stages, shuffled, steps)
+    for pa, pb in zip(plans_a, plans_b):
+        assert pa.signature() == pb.signature()
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(2, 4), st.integers(1, 4), st.integers(0, 3),
+    st.integers(1, 5), st.integers(0, 3),
+)
+def test_drop_heal_rejoin_roundtrip(n_dp, n_stages, victim, heal_delay, transfer):
+    """Losing a whole failure domain then healing it restores the original
+    DP size, with the global batch preserved at every step."""
+    victim = victim % n_dp
+    cfg = _cfg(n_layers=2 * n_stages)
+    B = 4 * n_dp
+    eng = ChaosEngine(n_dp, n_stages, 1.0, seed=0, elastic=True)
+    for s in range(n_stages):
+        eng.schedule(FailureEvent(1, FAIL, (victim, s), duration_steps=10**9))
+        eng.schedule(
+            FailureEvent(1 + heal_delay, NODE_HEAL, (victim, s),
+                         duration_steps=transfer)
+        )
+    healthy_keep, healthy_w = plan_to_masks(NDBPlan(n_dp, n_stages), cfg, B)
+    dropped_seen = False
+    for step in range(2 + heal_delay + transfer + 2):
+        plan = eng.step(step).plan
+        keep, w = plan_to_masks(plan, cfg, B)
+        if plan.active_ranks():
+            assert w.sum() == B  # batch preserved through the resize
+        if victim in plan.dropped_ranks():
+            dropped_seen = True
+            assert plan.dp_size() == n_dp - 1 or n_dp == 1
+    assert dropped_seen
+    final = eng.plan()
+    assert final.is_healthy() and final.dp_size() == n_dp
+    keep, w = plan_to_masks(final, cfg, B)
+    assert (keep == healthy_keep).all() and (w == healthy_w).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 12), st.data())
+def test_rebalanced_shares_partition_exactly(n_dp, per, data):
+    """rank_batch_shares is a partition of the global batch for every
+    non-empty membership set, and a pure function of the set."""
+    B = n_dp * per
+    active = data.draw(
+        st.lists(st.integers(0, n_dp - 1), min_size=1, unique=True)
+    )
+    shares = rank_batch_shares(B, n_dp, active)
+    assert sum(shares.values()) == B
+    assert set(shares) == set(active)
+    assert all(v >= 0 for v in shares.values())
+    # pure function of the membership *set*: order must not matter
+    assert shares == rank_batch_shares(B, n_dp, list(reversed(sorted(active))))
+    owners = rebalanced_owners(B, n_dp, active)
+    # surviving ranks always keep their own contiguous slice (minimal churn)
+    for r in active:
+        assert (owners[r * per:(r + 1) * per] == r).all()
+
+
+def test_no_active_ranks_masks_are_zero():
+    cfg = _cfg(4)
+    plan = NDBPlan(2, 2, detached=frozenset({0, 1}))
+    keep, w = plan_to_masks(plan, cfg, 8)
+    assert w.sum() == 0 and keep.sum() == 0
+    assert rank_batch_shares(8, 2, ()) == {}
+    assert (rebalanced_owners(8, 2, ()) == -1).all()
+
+
+def test_detach_rejoin_transition_helpers():
+    plan = NDBPlan(4, 2, frozenset({(1, 0), (1, 1)}))
+    dropped = plan.detach(1)
+    assert dropped.dropped_ranks() == frozenset({1})
+    assert dropped.dp_size() == 3
+    back = dropped.rejoin(1)
+    assert back.is_healthy() and back.dp_size() == 4  # stale marks cleared
+    with pytest.raises(ValueError):
+        NDBPlan(2, 2, detached=frozenset({5}))

@@ -6,7 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need the [test] extra")
+from tests.conftest import require_hypothesis
+
+require_hypothesis()
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import TrainConfig
