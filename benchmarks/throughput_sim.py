@@ -256,6 +256,127 @@ def run_chaos_table(chaos: str = None, trace_path: str = None, verbose=True):
     return rows
 
 
+def run_statexfer_bench(
+    steps: int = 40,
+    snapshot_every: int = 2,
+    out_path: str = "BENCH_statexfer.json",
+    verbose: bool = True,
+):
+    """Measured statexfer costs from a REAL training run, next to the model.
+
+    Runs the reduced trainer under the elastic chaos preset with the live
+    state-transfer subsystem on, and reports
+      * snapshot overhead — the % of total step wall time the training
+        thread spent blocked on the cadence snapshotter (launch + any join
+        of a still-in-flight cycle; the async copy itself is free), and
+      * rejoin transfer latency — mean measured seconds to materialize a
+        rejoining rank's full state from its peer replica,
+    alongside the *modeled* numbers the discrete-event sim uses for the same
+    events (``fetch_pause_s``-per-stage rejoin pauses on the simulated-hour
+    grid), and the byte-accounting agreement (measured vs ``ReshardPlan``).
+    Writes ``out_path`` (JSON) and returns the dict.
+    """
+    import json
+    import time
+
+    from repro.configs.base import (
+        MeCeFOConfig, ShapeConfig, TrainConfig, get_config, reduced,
+    )
+    from repro.launch.train import Trainer
+
+    cfg = reduced(get_config("llama-350m"), dtype="float32")
+    # seq 256 keeps the CPU step heavy enough that the cadence launch cost
+    # is measured against a realistic compute/snapshot ratio
+    shape = ShapeConfig("bench", 256, 8, "train")
+    tc = TrainConfig(steps=steps, learning_rate=3e-4)
+    mecefo = MeCeFOConfig(mode="dynamic", rank=16, svd_period=20)
+
+    def run(statexfer: bool):
+        trainer = Trainer(
+            cfg, shape, tc, mecefo=mecefo,
+            # the same deterministic preset the golden statexfer trace pins
+            injectors=chaos_preset("elastic", SCENARIOS["none"]),
+            n_dp=4, n_stages=4, step_time_s=3600.0, seed=0,
+            statexfer=statexfer, snapshot_every=snapshot_every,
+        )
+        t0 = time.perf_counter()
+        hist = trainer.run(log_every=0)
+        return trainer, hist, time.perf_counter() - t0
+
+    base_trainer, base_hist, base_wall = run(statexfer=False)
+    trainer, hist, wall = run(statexfer=True)
+    tele = trainer.xfer.telemetry()
+    acc = trainer.controller.accounting
+
+    # skip the compile step when averaging step time (it dwarfs everything)
+    step_s = [h["seconds"] for h in hist[1:]] or [h["seconds"] for h in hist]
+    total_step_s = sum(step_s)
+    overhead_pct = 100.0 * tele["snapshot_blocked_s"] / max(total_step_s, 1e-9)
+    n_restores = tele["n_peer_restores"] + tele["n_ckpt_restores"]
+    # transfer-side stall per restore: the materialization copy plus the
+    # deterministic join of any in-flight snapshot cycle at reshard time
+    measured_latency_s = (
+        tele["transfer_s"] + tele["reshard_join_s"]
+    ) / max(n_restores, 1)
+
+    # the discrete-event model's view of the same rejoins: a full-pipeline
+    # fetch pause per rejoin on the simulated grid (see simulate())
+    fetch_pause_s = 3.0
+    modeled_latency_s = fetch_pause_s * trainer.controller.n_stages
+
+    # byte agreement: the plan models one rejoin as n_stages per-stage
+    # fetches of state_nbytes // n_stages each — integer division may drop
+    # up to n_stages-1 bytes vs the real full-state payload (the padding
+    # tolerance the golden trace and tests allow)
+    ctl = trainer.controller
+    modeled_bytes_per_rejoin = ctl.stage_param_bytes() * ctl.n_stages
+    measured_bytes_per_rejoin = acc.measured_transfer_bytes / max(n_restores, 1)
+
+    result = {
+        "steps": steps,
+        "snapshot_every": snapshot_every,
+        "snapshot_cycles": int(tele["snapshot_cycles"]),
+        "snapshot_bytes": int(tele["snapshot_bytes"]),
+        "snapshot_blocked_s": tele["snapshot_blocked_s"],
+        "snapshot_copy_s": tele["snapshot_copy_s"],
+        "reshard_join_s": tele["reshard_join_s"],
+        "snapshot_overhead_pct_of_step_time": overhead_pct,
+        "overhead_budget_pct": 5.0,
+        "overhead_ok": overhead_pct < 5.0,
+        "n_peer_restores": int(tele["n_peer_restores"]),
+        "n_ckpt_restores": int(tele["n_ckpt_restores"]),
+        "measured_transfer_bytes": int(acc.measured_transfer_bytes),
+        "planned_transfer_bytes": int(acc.peer_fetch_bytes
+                                      + acc.ckpt_restore_bytes),
+        "modeled_bytes_per_rejoin": int(modeled_bytes_per_rejoin),
+        "measured_bytes_per_rejoin": measured_bytes_per_rejoin,
+        "transfer_bytes_agree": (
+            0 <= measured_bytes_per_rejoin - modeled_bytes_per_rejoin
+            < ctl.n_stages
+        ),
+        "measured_rejoin_latency_s": measured_latency_s,
+        "modeled_rejoin_latency_s_simgrid": modeled_latency_s,
+        "wall_s_statexfer_on": wall,
+        "wall_s_statexfer_off": base_wall,
+        "final_loss": hist[-1]["loss"],
+        "final_loss_baseline": base_hist[-1]["loss"],
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    if verbose:
+        print(
+            f"statexfer bench: {result['snapshot_cycles']} cycles, "
+            f"overhead {overhead_pct:.2f}% of step time "
+            f"(budget 5%, ok={result['overhead_ok']}), "
+            f"rejoin latency measured {measured_latency_s*1e3:.2f}ms host-copy"
+            f" vs modeled {modeled_latency_s:.0f}s on the sim grid, "
+            f"bytes/rejoin measured {measured_bytes_per_rejoin/1e6:.2f}MB vs "
+            f"modeled {modeled_bytes_per_rejoin/1e6:.2f}MB "
+            f"(agree={result['transfer_bytes_agree']}) -> {out_path}"
+        )
+    return result
+
+
 def main():
     import argparse
 
@@ -266,7 +387,16 @@ def main():
                     help="run the comparison under a chaos preset")
     ap.add_argument("--trace", default=None,
                     help="replay a recorded chaos trace instead of sampling")
+    ap.add_argument("--statexfer-bench", action="store_true",
+                    help="measure real snapshot overhead + rejoin transfer "
+                         "latency vs the modeled numbers (BENCH_statexfer.json)")
+    ap.add_argument("--snapshot-every", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=40)
     args = ap.parse_args()
+    if args.statexfer_bench:
+        return run_statexfer_bench(
+            steps=args.steps, snapshot_every=args.snapshot_every
+        )
     if args.chaos or args.trace:
         return run_chaos_table(chaos=args.chaos, trace_path=args.trace)
     rows = run_table2()

@@ -28,12 +28,18 @@ from repro.launch.train import Trainer
 
 
 def elastic_demo(cfg, steps: int = 60) -> None:
-    """Deterministic drop → heal → rejoin: DP 4 → 3 → 4, batch preserved."""
+    """Deterministic drop → heal → rejoin: DP 4 → 3 → 4, batch preserved.
+
+    With the live state-transfer subsystem on, the resize is *executed*,
+    not just accounted: the dropped rank's state is pinned at its peer at
+    the detach step, and the rejoin materializes it back (measured bytes).
+    """
     shape = ShapeConfig("elastic", 64, 8, "train")
     tc = TrainConfig(steps=steps, learning_rate=3e-3)
     trainer = Trainer(
         cfg, shape, tc, mecefo=MeCeFOConfig(mode="dynamic", rank=16, svd_period=20),
         n_dp=4, n_stages=4, step_time_s=3600.0, injectors=[], elastic=True,
+        statexfer=True, snapshot_every=2,
     )
     victim = 2
     for s in range(4):
@@ -49,14 +55,24 @@ def elastic_demo(cfg, steps: int = 60) -> None:
     hist = trainer.run(log_every=10)
     sizes = [h["dp_size"] for h in hist]
     acc = trainer.controller.accounting
+    tele = trainer.xfer.telemetry()
     print(
         f"elastic: dp sizes {sorted(set(sizes))}, final dp "
         f"{trainer.controller.plan.dp_size()}/4, drops={acc.n_rank_drops} "
         f"rejoins={acc.n_rejoins} shares={trainer.controller.batch_shares()}"
     )
+    print(
+        f"statexfer: {tele['snapshot_cycles']:.0f} snapshot cycles, "
+        f"rank {victim} restored from peer "
+        f"({acc.measured_transfer_bytes / 1e6:.1f}MB measured on the wire, "
+        f"peer={tele['n_peer_restores']:.0f} ckpt={tele['n_ckpt_restores']:.0f})"
+    )
     assert min(sizes) == 3 and sizes[-1] == 4, sizes
     assert trainer.controller.plan.is_healthy()
     assert sum(trainer.controller.batch_shares().values()) == shape.global_batch
+    # the rejoin actually moved the rank's full state back from its peer
+    assert acc.n_peer_restores == 1 and victim in trainer.xfer.last_restored
+    assert acc.measured_transfer_bytes == trainer.controller.state_nbytes
 
 
 def main():

@@ -17,6 +17,8 @@ from typing import Any, Callable, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.utils.trees import host_copy, is_py_scalar
+
 Tree = Any
 
 
@@ -44,6 +46,23 @@ def save(state: Tree, directory: str, step: int) -> str:
     return final
 
 
+def _restore_leaf(saved: np.ndarray, like: Any) -> Any:
+    """Round-trip one leaf bit-exactly against its ``like`` counterpart.
+
+    Plain Python scalars have no ``dtype`` attribute, so a bare
+    ``hasattr(l, "dtype")`` cast used to skip them silently and hand back the
+    0-d numpy array np.savez produced — a different type (and, for floats
+    saved as float64 then consumed as float32, a different value) than what
+    was saved.  Scalars are rebuilt as their original Python type; array
+    leaves are cast back to the like leaf's dtype.
+    """
+    if is_py_scalar(like):
+        return type(like)(saved.item())
+    if hasattr(like, "dtype"):
+        return np.asarray(saved).astype(np.asarray(like).dtype)
+    return saved
+
+
 def restore(like: Tree, directory: str, step: Optional[int] = None) -> Tuple[Tree, int]:
     """Restore into the structure of `like`. Returns (state, step)."""
     step = step if step is not None else latest_step(directory)
@@ -52,12 +71,7 @@ def restore(like: Tree, directory: str, step: Optional[int] = None) -> Tuple[Tre
     path = os.path.join(directory, f"step_{step:08d}", "state.npz")
     data = np.load(path)
     leaves, treedef = _flatten(like)
-    out = [
-        np.asarray(data[f"leaf_{i}"]).astype(np.asarray(l).dtype)
-        if hasattr(l, "dtype")
-        else data[f"leaf_{i}"]
-        for i, l in enumerate(leaves)
-    ]
+    out = [_restore_leaf(data[f"leaf_{i}"], l) for i, l in enumerate(leaves)]
     return jax.tree_util.tree_unflatten(treedef, out), step
 
 
@@ -86,7 +100,7 @@ class CheckpointManager:
         self.wait()
         # device→host copy happens here (cheap on CPU; on TPU this is the
         # only sync point), the disk write on the thread.
-        host_state = jax.tree.map(np.asarray, state)
+        host_state = host_copy(state)
 
         def work():
             try:
@@ -108,8 +122,19 @@ class CheckpointManager:
             raise err
 
     def _gc(self) -> None:
-        while len(self.saved_steps) > self.keep:
-            victim = self.saved_steps.pop(0)
+        if len(self.saved_steps) <= self.keep:
+            return
+        # Snapshot the directory view once before deleting anything: a
+        # concurrent restore() resolves "latest" from this same listing, so
+        # the newest DONE step must survive pruning — even when ``keep``
+        # would otherwise evict it.  Everything else is pruned oldest-first
+        # until the retention bound holds again (out-of-order saves must not
+        # leave the bound permanently exceeded).
+        latest = latest_step(self.directory)
+        victims = sorted(s for s in self.saved_steps if s != latest)
+        while victims and len(self.saved_steps) > self.keep:
+            victim = victims.pop(0)
+            self.saved_steps.remove(victim)
             path = os.path.join(self.directory, f"step_{victim:08d}")
             shutil.rmtree(path, ignore_errors=True)
 

@@ -25,7 +25,14 @@ from repro.core.ndb import NDBContext, NDBPlan, context_for, stage_of_layer
 
 @dataclass
 class RecoveryAccounting:
-    """Bytes moved + stall estimates for the throughput model."""
+    """Bytes moved + stall estimates for the throughput model.
+
+    ``peer_fetch_bytes``/``ckpt_restore_bytes`` are the *planned* traffic
+    (inflated by network degradation to model retransmits); the
+    ``measured_*`` fields are filled from real :class:`TransferReceipt`s
+    when the statexfer subsystem executes the transfers — the wire-level
+    payload actually moved, which the golden statexfer trace pins in CI.
+    """
 
     peer_fetch_bytes: int = 0
     ckpt_restore_bytes: int = 0
@@ -33,6 +40,9 @@ class RecoveryAccounting:
     n_recoveries: int = 0
     n_rank_drops: int = 0
     n_rejoins: int = 0
+    measured_transfer_bytes: int = 0
+    n_peer_restores: int = 0
+    n_ckpt_restores: int = 0
 
     def as_dict(self) -> Dict[str, int]:
         """Integer totals for the chaos-trace footer (replay verification)."""
@@ -76,6 +86,10 @@ class FTController:
     accounting: RecoveryAccounting = field(default_factory=RecoveryAccounting)
     straggler_threshold: float = 3.0  # x median step time
     last_reshard: Optional[ReshardPlan] = None
+    # real total bytes of one rank's training state, registered by the
+    # statexfer runtime; when set it replaces the parameter-count estimate
+    # as the accounting basis (measured instead of modeled)
+    state_nbytes: Optional[int] = None
     _step_times: list = field(default_factory=list)
 
     def __post_init__(self):
@@ -84,7 +98,11 @@ class FTController:
 
     # ------------------------------------------------------------------
     def stage_param_bytes(self) -> int:
-        """Approx bytes of one stage's params + optimizer state."""
+        """Bytes of one stage's params + optimizer state: the measured state
+        size split over stages when the runtime registered one
+        (``state_nbytes``), a parameter-count estimate otherwise."""
+        if self.state_nbytes is not None:
+            return self.state_nbytes // self.n_stages
         from repro.models.params import count_params
 
         total = count_params(self.cfg)
@@ -174,6 +192,16 @@ class FTController:
             transfer_bytes=fetch_bytes * new_plan.n_stages * len(rejoined),
             source="peer" if self.params_replicated else "ckpt",
         )
+
+    def record_transfer(self, receipt) -> None:
+        """Fold one measured :class:`TransferReceipt` into the accounting."""
+        if not receipt.ok:
+            return
+        self.accounting.measured_transfer_bytes += receipt.bytes_moved
+        if receipt.source == "peer":
+            self.accounting.n_peer_restores += 1
+        elif receipt.source == "ckpt":
+            self.accounting.n_ckpt_restores += 1
 
     def batch_shares(self) -> Dict[int, int]:
         """Current per-rank share of the global batch (sums to the global

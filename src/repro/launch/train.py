@@ -71,6 +71,8 @@ class Trainer:
         trace_record: Optional[str] = None,
         trace_replay: Optional[str] = None,
         elastic: Optional[bool] = None,
+        statexfer: bool = False,
+        snapshot_every: int = 1,
     ):
         self.cfg, self.shape, self.train_cfg = cfg, shape, train
         self.parallel = parallel or ParallelConfig(
@@ -130,7 +132,35 @@ class Trainer:
         self._refresh_proj = None
         self._logged_reshard = None
 
+        # -- live state transfer: replicated snapshots + real reshards ------
+        self.xfer = None
+        self._pending_rejoin: set = set()
+        self._executed_reshard = None
+        if statexfer:
+            from repro.statexfer import StateTransferRegistry, tree_nbytes
+
+            self.xfer = StateTransferRegistry(
+                n_dp=self.controller.n_dp, cadence=snapshot_every,
+                replicated=self.controller.params_replicated,
+            )
+            # accounting basis becomes the measured state size
+            self.controller.state_nbytes = tree_nbytes(self.state)
+
     # ------------------------------------------------------------------
+    def _mask_plan(self) -> NDBPlan:
+        """The plan the batch masks are built from: the controller's plan
+        with rejoined-but-still-transferring ranks re-detached — masks only
+        flip once a rank's state transfer has actually completed.  If EVERY
+        active rank is mid-transfer, gating them all would zero-weight the
+        whole batch (a silent wasted step), so the plan is left ungated and
+        the pending ranks serve with the state they have."""
+        plan = self.controller.plan
+        active = set(plan.active_ranks())
+        pending = self._pending_rejoin & active
+        if not pending or pending == active:
+            return plan
+        return plan.detach(*sorted(pending))
+
     def _get_step(self, key):
         if key in self._step_cache:
             return self._step_cache[key]
@@ -138,7 +168,7 @@ class Trainer:
         kwargs = {}
         if mode == "static":
             keep, weight = plan_to_masks(
-                self.controller.plan, self.cfg, self.shape.global_batch
+                self._mask_plan(), self.cfg, self.shape.global_batch
             )
             kwargs["static_ndb"] = (keep, weight)
         jitted, *_ = make_train_step(
@@ -154,7 +184,30 @@ class Trainer:
             return ("off",)
         if self.mecefo.mode == "dynamic":
             return ("dynamic",)
-        return ("static",) + self.controller.compile_key()
+        # static mode bakes the masks: pending transfers are part of the key
+        return (
+            ("static",) + self.controller.compile_key()
+            + tuple(sorted(self._pending_rejoin))
+        )
+
+    def _run_state_transfers(self, step_idx: int) -> None:
+        """Execute any new ReshardPlan on real arrays and retry gated ranks."""
+        ckpt_dir = self.train_cfg.checkpoint_dir if self.ckpt else None
+        rp = self.controller.last_reshard
+        if rp is not None and rp is not self._executed_reshard:
+            self._executed_reshard = rp
+            out = self.xfer.on_reshard(
+                rp, self.state, step_idx,
+                ckpt_like=self.state, ckpt_dir=ckpt_dir,
+            )
+            for receipt in out.receipts:
+                self.controller.record_transfer(receipt)
+        if self.xfer.pending:
+            for receipt in self.xfer.retry_pending(
+                step_idx, ckpt_like=self.state, ckpt_dir=ckpt_dir
+            ):
+                self.controller.record_transfer(receipt)
+        self._pending_rejoin = set(self.xfer.pending)
 
     # ------------------------------------------------------------------
     def run(self, steps: Optional[int] = None, log_every: int = 10):
@@ -166,6 +219,8 @@ class Trainer:
             changed, slow = self.controller.apply_chaos(outcome)
             if changed and self.mecefo.mode != "off":
                 pass  # static mode: next _get_step call compiles/caches
+            if self.xfer is not None:
+                self._run_state_transfers(step_idx)
 
             batch = make_batch(
                 self.cfg, self.shape, step_idx, source=self.source, seed=self.seed
@@ -175,7 +230,7 @@ class Trainer:
             with self.mesh:
                 if key[0] == "dynamic":
                     keep, weight = plan_to_masks(
-                        self.controller.plan, self.cfg, self.shape.global_batch
+                        self._mask_plan(), self.cfg, self.shape.global_batch
                     )
                     ndb = {"keep": keep, "example_weight": weight}
                     self.state, metrics = jitted(self.state, batch, ndb)
@@ -195,6 +250,11 @@ class Trainer:
                         )
                     )
 
+            if self.xfer is not None:
+                # hot-spare snapshot of the post-step state (async, double-
+                # buffered: only the thread launch blocks this loop)
+                self.xfer.on_step(self.state, step_idx, self.controller.plan)
+
             if self.ckpt and step_idx and step_idx % self.train_cfg.checkpoint_every == 0:
                 self.ckpt.save_async(self.state, step_idx)
 
@@ -210,16 +270,25 @@ class Trainer:
                 "net_inflation": outcome.net_inflation,
                 "degraded_frac": self.controller.degraded_layer_fraction(),
                 "dp_size": self.controller.plan.dp_size(),
+                "pending_rejoin": len(self._pending_rejoin),
             }
             self.history.append(rec)
             rp = self.controller.last_reshard
             if log_every and rp is not None and rp is not self._logged_reshard:
                 self._logged_reshard = rp  # each resize produces a fresh plan
+                measured = ""
+                if self.xfer is not None:
+                    acc = self.controller.accounting
+                    measured = (
+                        f" measured={acc.measured_transfer_bytes/1e6:.1f}MB"
+                        f" pending={sorted(self._pending_rejoin)}"
+                    )
                 print(
                     f"step {step_idx:5d} elastic resize: dp {len(rp.old_active)}"
                     f"->{rp.dp_size} dropped={list(rp.dropped)} "
                     f"rejoined={list(rp.rejoined)} "
-                    f"transfer={rp.transfer_bytes/1e6:.1f}MB ({rp.source})",
+                    f"transfer={rp.transfer_bytes/1e6:.1f}MB ({rp.source})"
+                    f"{measured}",
                     flush=True,
                 )
             if log_every and i % log_every == 0:
@@ -232,6 +301,8 @@ class Trainer:
                 )
         if self.ckpt:
             self.ckpt.wait()
+        if self.xfer is not None:
+            self.xfer.wait()
         if self.process.recorder is not None:
             self.process.recorder.close(
                 total_steps=len(self.history),
@@ -281,6 +352,16 @@ def main(argv: Optional[List[str]] = None) -> int:
     )
     ap.add_argument("--n-dp", type=int, default=4)
     ap.add_argument("--n-stages", type=int, default=8)
+    ap.add_argument(
+        "--statexfer", action="store_true",
+        help="enable the live state-transfer subsystem: in-memory replicated "
+             "snapshots, real ReshardPlan execution on rejoin, measured "
+             "transfer accounting",
+    )
+    ap.add_argument(
+        "--snapshot-every", type=int, default=1, metavar="N",
+        help="statexfer snapshot cadence in steps (default 1)",
+    )
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgdm"])
@@ -326,6 +407,8 @@ def main(argv: Optional[List[str]] = None) -> int:
             trace_path if trace_mode == "record" else args.replay_record
         ),
         trace_replay=replay_trace,
+        statexfer=args.statexfer,
+        snapshot_every=args.snapshot_every,
     )
     hist = trainer.run()
     acc = trainer.controller.accounting
@@ -337,6 +420,17 @@ def main(argv: Optional[List[str]] = None) -> int:
         f"dp={trainer.controller.plan.dp_size()}/{trainer.controller.n_dp} "
         f"peer_fetch={acc.peer_fetch_bytes/1e6:.1f}MB"
     )
+    if trainer.xfer is not None:
+        tele = trainer.xfer.telemetry()
+        print(
+            f"statexfer: {tele['snapshot_cycles']:.0f} snapshot cycles "
+            f"({tele['snapshot_bytes']/1e6:.1f}MB replicated, "
+            f"{tele['snapshot_blocked_s']*1e3:.1f}ms blocked) "
+            f"restores peer={tele['n_peer_restores']:.0f} "
+            f"ckpt={tele['n_ckpt_restores']:.0f} "
+            f"measured={tele['measured_transfer_bytes']/1e6:.1f}MB "
+            f"in {tele['transfer_s']*1e3:.1f}ms"
+        )
     if trace_mode == "record":
         print(f"chaos trace recorded to {trace_path} "
               f"({len(trainer.process.events)} events)")

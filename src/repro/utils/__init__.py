@@ -1,0 +1,1 @@
+"""Small dependency-free helpers shared across subsystems."""

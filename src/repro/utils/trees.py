@@ -1,0 +1,44 @@
+"""Pytree host-memory helpers shared by checkpointing and state transfer.
+
+Lives in a leaf module so ``repro.checkpoint`` and ``repro.statexfer`` can
+both depend on it without depending on each other (statexfer's reshard
+executor needs the checkpoint restore as its fallback source; the
+checkpointer needs the same host-copy semantics the snapshotter uses).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+Tree = Any
+
+
+def tree_nbytes(tree: Tree) -> int:
+    """Total payload bytes of a pytree, measured from the real leaves."""
+    return sum(np.asarray(x).nbytes for x in jax.tree_util.tree_leaves(tree))
+
+
+def is_py_scalar(x: Any) -> bool:
+    """A plain Python scalar leaf (no ``dtype``): preserved as-is by copies
+    so snapshot/restore round-trips keep the exact leaf types."""
+    return isinstance(x, (bool, int, float, complex)) and not hasattr(x, "dtype")
+
+
+def host_copy(tree: Tree) -> Tree:
+    """Device→host copy of a state pytree (numpy leaves, scalars preserved).
+
+    jax arrays are immutable, so the device→host transfer ``np.asarray``
+    performs is already insulation enough; numpy leaves would *alias* under
+    ``np.asarray`` and must be copied explicitly, or a later in-place update
+    by the caller would silently rewrite the snapshot.  Plain Python scalars
+    are immutable too and pass through unchanged — converting them to 0-d
+    arrays would make peer-restored trees type-inconsistent with the saved
+    state (the defect class ``ckpt._restore_leaf`` guards against)."""
+    def leaf(x):
+        if is_py_scalar(x):
+            return x
+        return x.copy() if isinstance(x, np.ndarray) else np.asarray(x)
+
+    return jax.tree.map(leaf, tree)

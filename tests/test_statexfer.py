@@ -1,0 +1,528 @@
+"""Live state transfer: snapshots, peer replication, real reshard execution."""
+import numpy as np
+import pytest
+
+from repro.configs.base import MeCeFOConfig
+from repro.ft.controller import FTController
+from repro.statexfer import (
+    ReplicaStore,
+    SnapshotManager,
+    StateTransferRegistry,
+    dp_domains,
+    host_copy,
+    pod_domains,
+    ring_peers,
+    take_snapshot,
+    tree_nbytes,
+)
+from tests.conftest import TINY_DENSE
+
+GB = 8  # global batch used throughout
+
+
+def _state(step: int = 0, scale: float = 1.0):
+    """A small mixed pytree standing in for params + optimizer state."""
+    rng = np.random.default_rng(7)
+    base = rng.standard_normal((4, 8)).astype(np.float32)
+    return {
+        "params": {"w": base * scale + step, "b": np.arange(8.0) + step},
+        "opt": {"m": base * 0.1 + step, "v": np.abs(base) + step},
+        "step": step,
+    }
+
+
+def _trees_equal(a, b) -> bool:
+    import jax
+
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    return ta == tb and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+def _controller(n_dp=4, n_stages=4, replicated=True):
+    return FTController(
+        cfg=TINY_DENSE, mecefo=MeCeFOConfig(mode="dynamic"),
+        n_dp=n_dp, n_stages=n_stages, global_batch=GB,
+        params_replicated=replicated,
+    )
+
+
+# ---------------------------------------------------------------------------
+# ring placement over failure domains
+# ---------------------------------------------------------------------------
+
+
+def test_ring_peers_dp_topology():
+    peers = ring_peers(range(4), dp_domains(4))
+    assert peers == {0: 1, 1: 2, 2: 3, 3: 0}
+    for r, p in peers.items():
+        assert p != r  # never your own replica
+
+
+def test_ring_peers_skip_same_pod():
+    # pods of 2: rank 0's next-in-ring (1) shares its pod, so it must skip
+    # to rank 2 — one pod outage never takes a rank and its replica holder
+    dom = pod_domains(4, ranks_per_pod=2)
+    peers = ring_peers(range(4), dom)
+    for r, p in peers.items():
+        assert dom[r] != dom[p], (r, p)
+    assert peers[0] == 2 and peers[1] == 2 and peers[2] == 0
+
+
+def test_ring_peers_degenerate():
+    assert ring_peers([3]) == {}
+    assert ring_peers([]) == {}
+    # all ranks in ONE domain: no cross-domain placement exists, plain ring
+    one = {r: 0 for r in range(3)}
+    assert ring_peers(range(3), one) == {0: 1, 1: 2, 2: 0}
+
+
+def test_pod_domains_validation():
+    with pytest.raises(ValueError):
+        pod_domains(4, 0)
+
+
+# ---------------------------------------------------------------------------
+# snapshot manager: cadence, double buffer, measured sizes
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_cadence_and_front_buffer():
+    mgr = SnapshotManager(cadence=2)
+    assert mgr.maybe_snapshot(_state(0), 0, [0, 1])
+    assert not mgr.maybe_snapshot(_state(1), 1, [0, 1])  # off-cadence
+    assert mgr.maybe_snapshot(_state(2), 2, [0, 1])
+    mgr.wait()
+    assert mgr.n_cycles == 2
+    snap = mgr.latest(1)
+    assert snap is not None and snap.step == 2
+    assert _trees_equal(snap.tree, host_copy(_state(2)))
+    assert snap.nbytes == tree_nbytes(_state(2))
+    # completed cycles replicate every requested rank
+    assert mgr.latest(0).step == 2 and mgr.latest(7) is None
+
+
+def test_snapshot_cycle_hook_feeds_replication():
+    cycles = []
+    mgr = SnapshotManager(
+        cadence=1, on_cycle=lambda cyc, ctx: cycles.append((cyc, ctx))
+    )
+    mgr.maybe_snapshot(_state(5), 5, [0, 2], ctx={"placement": 1})
+    mgr.wait()
+    [(cycle, ctx)] = cycles
+    assert sorted(cycle) == [0, 2] and cycle[0].step == 5
+    assert ctx == {"placement": 1}  # launch-time context reaches the hook
+
+
+def test_snapshot_cadence_validation():
+    with pytest.raises(ValueError):
+        SnapshotManager(cadence=0)
+
+
+def test_snapshot_worker_error_surfaces_on_wait():
+    """A failed copy/replication cycle must not silently disable the hot
+    spare: the error is re-raised on the next join, then cleared."""
+    def boom(cycle, ctx):
+        raise RuntimeError("replication failed")
+
+    mgr = SnapshotManager(cadence=1, on_cycle=boom)
+    assert mgr.maybe_snapshot(_state(0), 0, [0])
+    with pytest.raises(RuntimeError, match="replication failed"):
+        mgr.wait()
+    mgr.on_cycle = None
+    assert mgr.maybe_snapshot(_state(1), 1, [0])  # recovered: next cycle runs
+    mgr.wait()
+    assert mgr.latest(0).step == 1
+
+
+def test_snapshot_is_insulated_from_later_mutation():
+    state = _state(0)
+    mgr = SnapshotManager(cadence=1)
+    mgr.maybe_snapshot(state, 0, [0])
+    mgr.wait()
+    state["params"]["w"] += 100.0  # trainer moves on
+    assert float(mgr.latest(0).tree["params"]["w"][0, 0]) != float(
+        state["params"]["w"][0, 0]
+    )
+
+
+# ---------------------------------------------------------------------------
+# replica store: freeze/thaw/holder loss
+# ---------------------------------------------------------------------------
+
+
+def test_replica_freeze_blocks_overwrite_until_thaw():
+    store = ReplicaStore()
+    assert store.push(take_snapshot(1, 10, _state(10)), holder=2)
+    assert store.freeze(1)
+    assert not store.push(take_snapshot(1, 11, _state(11)), holder=2)
+    assert store.replica_of(1).snapshot.step == 10  # pinned at detach
+    store.thaw(1)
+    assert store.push(take_snapshot(1, 12, _state(12)), holder=2)
+    assert store.replica_of(1).snapshot.step == 12
+
+
+def test_lose_holder_drops_only_its_replicas():
+    store = ReplicaStore()
+    store.push(take_snapshot(0, 1, _state()), holder=1)
+    store.push(take_snapshot(2, 1, _state()), holder=3)
+    lost = store.lose_holder(1)
+    assert lost == {0: 1}
+    assert store.replica_of(0) is None and store.replica_of(2) is not None
+    assert len(store) == 1 and store.nbytes() == tree_nbytes(_state())
+
+
+# ---------------------------------------------------------------------------
+# executed reshards: the tentpole semantics
+# ---------------------------------------------------------------------------
+
+
+def _drive_resize(reg, ctl, new_plan, state, step, **kw):
+    """One controller plan update + (if it resized) real execution."""
+    ctl.update_plan(new_plan)
+    rp = ctl.last_reshard
+    out = None
+    if rp is not None:
+        out = reg.on_reshard(rp, state, step, **kw)
+        for r in out.receipts:
+            ctl.record_transfer(r)
+        ctl.last_reshard = None
+    return out
+
+
+def test_drop_pins_detach_state_and_rejoin_restores_it():
+    ctl = _controller()
+    reg = StateTransferRegistry(n_dp=4, cadence=1)
+    plan = ctl.plan
+    # cadence replication has been running on an older state
+    reg.on_step(_state(0), 0, plan)
+    reg.wait()
+    detach_state = _state(3)
+    _drive_resize(reg, ctl, plan.detach(1), detach_state, 3)
+    # drop moves no bytes — the replica was already at the peer
+    assert reg.measured_transfer_bytes == 0
+    # peer pin is the exact detach-step state, not the older cadence copy
+    rep = reg.store.replica_of(1)
+    assert rep.frozen and rep.holder == reg.peers[1] == 2
+    assert _trees_equal(rep.snapshot.tree, host_copy(detach_state))
+
+    out = _drive_resize(reg, ctl, ctl.plan.rejoin(1), _state(9), 9)
+    [receipt] = out.receipts
+    assert receipt.source == "peer" and receipt.ok
+    assert receipt.snapshot_step == 3  # provenance: the detach step
+    assert _trees_equal(out.restored[1], host_copy(detach_state))
+    # measured bytes equal the real payload and match the plan's accounting
+    # within the integer-division padding of the per-stage estimate
+    assert receipt.bytes_moved == tree_nbytes(detach_state)
+    ctl.state_nbytes = tree_nbytes(detach_state)
+    modeled = ctl.stage_param_bytes() * ctl.n_stages
+    assert 0 <= receipt.bytes_moved - modeled < ctl.n_stages
+    assert ctl.accounting.n_peer_restores == 1
+    assert ctl.accounting.measured_transfer_bytes == receipt.bytes_moved
+
+
+def test_restored_tree_is_a_private_copy():
+    ctl = _controller()
+    reg = StateTransferRegistry(n_dp=4, cadence=1)
+    s = _state(1)
+    _drive_resize(reg, ctl, ctl.plan.detach(0), s, 1)
+    out = _drive_resize(reg, ctl, ctl.plan.rejoin(0), _state(2), 2)
+    restored = out.restored[0]
+    restored["params"]["w"] += 1e6  # the rejoiner now owns these arrays
+    assert float(reg.store.replica_of(0).snapshot.tree["params"]["w"][0, 0]) < 1e5
+
+
+def test_holder_death_falls_back_to_checkpoint(tmp_path):
+    from repro.checkpoint.ckpt import save
+
+    ckpt_state = _state(2)
+    save(ckpt_state, str(tmp_path), step=2)
+    ctl = _controller()
+    reg = StateTransferRegistry(n_dp=4, cadence=1)
+    kw = dict(ckpt_like=_state(0), ckpt_dir=str(tmp_path))
+    # rank 1 drops (pinned at peer 2), then its holder 2 drops too
+    _drive_resize(reg, ctl, ctl.plan.detach(1), _state(5), 5, **kw)
+    _drive_resize(reg, ctl, ctl.plan.detach(2), _state(6), 6, **kw)
+    assert reg.store.replica_of(1) is None  # died with its holder
+    out = _drive_resize(reg, ctl, ctl.plan.rejoin(1), _state(8), 8, **kw)
+    [receipt] = out.receipts
+    assert receipt.source == "ckpt" and receipt.snapshot_step == 2
+    assert _trees_equal(out.restored[1], ckpt_state)
+    assert ctl.accounting.n_ckpt_restores == 1
+
+
+def test_rejoin_without_replica_or_ckpt_stays_pending_then_retries():
+    ctl = _controller()
+    reg = StateTransferRegistry(n_dp=4, cadence=1)
+    _drive_resize(reg, ctl, ctl.plan.detach(1), _state(1), 1)
+    _drive_resize(reg, ctl, ctl.plan.detach(2), _state(2), 2)  # holder of 1
+    out = _drive_resize(reg, ctl, ctl.plan.rejoin(1), _state(4), 4)
+    [receipt] = out.receipts
+    assert not receipt.ok and receipt.source == "none"
+    assert reg.pending == {1}
+    assert ctl.accounting.measured_transfer_bytes == 0  # nothing moved yet
+    # the cadence repopulates rank 1's replica now that it is active again
+    live = _state(5)
+    reg.on_step(live, 5, ctl.plan)
+    reg.wait()
+    # re-replication went to a LIVE holder (3), not the dead static peer (2)
+    assert reg.store.replica_of(1).holder == 3
+    done = reg.retry_pending(6)
+    assert [r.rank for r in done] == [1] and done[0].source == "peer"
+    assert not reg.pending
+    assert _trees_equal(reg.last_restored[1], host_copy(live))
+
+
+def test_pending_rank_that_drops_again_leaves_pending_set():
+    """A gated rejoiner that is dropped again must not be 'restored' by a
+    later retry (it is detached); its detach pin serves the NEXT rejoin."""
+    ctl = _controller()
+    reg = StateTransferRegistry(n_dp=4, cadence=1)
+    _drive_resize(reg, ctl, ctl.plan.detach(1), _state(1), 1)
+    _drive_resize(reg, ctl, ctl.plan.detach(2), _state(2), 2)  # holder of 1
+    _drive_resize(reg, ctl, ctl.plan.rejoin(1), _state(4), 4)
+    assert reg.pending == {1}
+    redrop_state = _state(5)
+    _drive_resize(reg, ctl, ctl.plan.detach(1), redrop_state, 5)
+    assert reg.pending == set()  # re-dropped: no longer awaiting transfer
+    reg.on_step(_state(6), 6, ctl.plan)
+    assert reg.retry_pending(6) == []  # nothing to retry, nothing counted
+    assert reg.measured_transfer_bytes == 0
+    out = _drive_resize(reg, ctl, ctl.plan.rejoin(1), _state(8), 8)
+    [receipt] = out.receipts
+    # exactly one restore, of the state pinned at the re-drop
+    assert receipt.source == "peer" and receipt.snapshot_step == 5
+    assert _trees_equal(out.restored[1], host_copy(redrop_state))
+    assert ctl.accounting.n_peer_restores == 1
+
+
+def test_peer_restore_preserves_python_scalar_leaves():
+    """Snapshot → replica → materialize round-trips plain Python scalars as
+    their original types (the same guarantee the ckpt path gives)."""
+    ctl = _controller()
+    reg = StateTransferRegistry(n_dp=4, cadence=1)
+    s = _state(3)
+    assert type(s["step"]) is int
+    _drive_resize(reg, ctl, ctl.plan.detach(0), s, 3)
+    out = _drive_resize(reg, ctl, ctl.plan.rejoin(0), _state(4), 4)
+    restored = out.restored[0]
+    assert type(restored["step"]) is int and restored["step"] == 3
+    assert isinstance(restored["params"]["w"], np.ndarray)
+
+
+def test_fsdp_mode_never_uses_peer_replicas(tmp_path):
+    from repro.checkpoint.ckpt import save
+
+    ckpt_state = _state(3)
+    save(ckpt_state, str(tmp_path), step=3)
+    ctl = _controller(replicated=False)
+    reg = StateTransferRegistry(n_dp=4, cadence=1, replicated=False)
+    kw = dict(ckpt_like=_state(0), ckpt_dir=str(tmp_path))
+    reg.on_step(_state(4), 4, ctl.plan)
+    reg.wait()
+    _drive_resize(reg, ctl, ctl.plan.detach(1), _state(5), 5, **kw)
+    out = _drive_resize(reg, ctl, ctl.plan.rejoin(1), _state(7), 7, **kw)
+    [receipt] = out.receipts
+    assert receipt.source == "ckpt"
+    assert _trees_equal(out.restored[1], ckpt_state)
+
+
+def test_registry_telemetry_counts():
+    ctl = _controller()
+    reg = StateTransferRegistry(n_dp=4, cadence=2)
+    for step in range(4):
+        reg.on_step(_state(step), step, ctl.plan)
+    reg.wait()
+    _drive_resize(reg, ctl, ctl.plan.detach(3), _state(4), 4)
+    _drive_resize(reg, ctl, ctl.plan.rejoin(3), _state(5), 5)
+    tele = reg.telemetry()
+    assert tele["snapshot_cycles"] == 2  # cadence 2 over steps 0..3
+    assert tele["n_peer_restores"] == 1 and tele["pending_rejoin"] == 0
+    assert tele["measured_transfer_bytes"] == tree_nbytes(_state(0))
+    assert tele["snapshot_bytes"] == 2 * 4 * tree_nbytes(_state(0))
+
+
+def test_mask_gating_excludes_pending_rank_but_covers_batch():
+    """The trainer's gating rule (re-detach mid-transfer ranks before
+    plan_to_masks): the gated rank owns no examples, the batch stays whole."""
+    from repro.core.ndb import NDBPlan
+    from repro.data.pipeline import rebalanced_owners
+
+    plan = NDBPlan(4, 4, frozenset()).detach(3)  # 3 dropped for good
+    gated = plan.detach(1)                       # 1 rejoined, mid-transfer
+    got = rebalanced_owners(GB, 4, gated.active_ranks())
+    assert 1 not in set(got.tolist()) and (got >= 0).all()
+    for r in gated.active_ranks():
+        assert (got == r).sum() > 0  # survivors share the whole batch
+
+
+# ---------------------------------------------------------------------------
+# checkpoint fallback source: mixed-pytree round-trip + GC safety
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_mixed_pytree_roundtrips_bit_exactly(tmp_path):
+    """Regression: non-array leaves (plain ints/floats/bools) used to come
+    back as the 0-d numpy arrays np.savez produced — a silent type (and,
+    across dtype defaults, value) change.  The full mixed pytree must
+    round-trip bit-exactly, preserving Python scalar types — the FSDP
+    fallback restore depends on it."""
+    import jax.numpy as jnp
+
+    from repro.checkpoint.ckpt import restore, save
+
+    state = {
+        "arrays": {
+            "f32": jnp.arange(6.0, dtype=jnp.float32).reshape(2, 3),
+            "i32": jnp.int32(7),
+            "np64": np.linspace(0.0, 1.0, 5),  # float64 numpy leaf
+            "npbool": np.array([True, False]),
+        },
+        "scalars": {
+            "step": 12345,                    # python int
+            "lr": 0.0017,                     # python float (f64 bit pattern)
+            "done": False,                    # python bool
+        },
+    }
+    save(state, str(tmp_path), 7)
+    got, step = restore(state, str(tmp_path))
+    assert step == 7
+    # scalar leaves come back as the SAME python type, bit-exact
+    assert type(got["scalars"]["step"]) is int and got["scalars"]["step"] == 12345
+    assert type(got["scalars"]["lr"]) is float
+    assert got["scalars"]["lr"].hex() == (0.0017).hex()
+    assert type(got["scalars"]["done"]) is bool and got["scalars"]["done"] is False
+    # array leaves keep dtype and value
+    for k, v in state["arrays"].items():
+        assert np.asarray(got["arrays"][k]).dtype == np.asarray(v).dtype, k
+        np.testing.assert_array_equal(got["arrays"][k], v)
+
+
+def test_checkpoint_gc_never_deletes_latest_done_step(tmp_path):
+    """Pruning under ``keep`` must skip the newest DONE step even when the
+    retention window would evict it — a concurrent restore() resolves
+    'latest' from the same directory listing the GC snapshot saw."""
+    from repro.checkpoint.ckpt import CheckpointManager, latest_step, restore
+
+    import os
+
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    state = {"w": np.ones(4)}
+    # out-of-order saves put the NEWEST step at the front of the GC queue
+    for s in (30, 20, 10):
+        mgr.save_async(state, s)
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 30  # survived, despite keep=1
+    got, step = restore(state, str(tmp_path))
+    assert step == 30
+    np.testing.assert_array_equal(got["w"], state["w"])
+    # ... and the retention bound still holds: older steps were pruned
+    assert sorted(os.listdir(tmp_path)) == ["step_00000030"]
+
+
+# ---------------------------------------------------------------------------
+# trainer-level: deterministic end-to-end restore + golden trace
+# ---------------------------------------------------------------------------
+
+
+def _elastic_trainer(tmp_path=None, steps=16, statexfer=True, **kw):
+    from repro.configs.base import ShapeConfig, TrainConfig
+    from repro.ft.events import FAIL, NODE_HEAL, FailureEvent
+    from repro.launch.train import Trainer
+
+    shape = ShapeConfig("sx", 32, GB, "train")
+    tc = TrainConfig(steps=steps, learning_rate=3e-3)
+    trainer = Trainer(
+        TINY_DENSE, shape, tc,
+        mecefo=MeCeFOConfig(mode="dynamic", rank=8, svd_period=50),
+        n_dp=4, n_stages=4, step_time_s=3600.0, injectors=[], elastic=True,
+        statexfer=statexfer, **kw,
+    )
+    for s in range(4):
+        trainer.process.schedule(
+            FailureEvent(4, FAIL, (2, s), duration_steps=10**9)
+        )
+        trainer.process.schedule(
+            FailureEvent(9, NODE_HEAL, (2, s), duration_steps=2)
+        )
+    return trainer
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_trainer_rejoin_restores_live_detach_state():
+    """End-to-end: the rank rejoining a REAL training run gets back the
+    trainer's live state as of its detach step, array-for-array."""
+    trainer = _elastic_trainer()
+    captured = {}
+    orig = trainer.xfer.on_reshard
+
+    def spy(plan, state, step, **kw):
+        for r in plan.dropped:
+            captured[r] = host_copy(state)
+        return orig(plan, state, step, **kw)
+
+    trainer.xfer.on_reshard = spy
+    trainer.run(log_every=0)
+    assert 2 in captured, "victim rank never dropped"
+    acc = trainer.controller.accounting
+    assert acc.n_peer_restores == 1 and acc.n_ckpt_restores == 0
+    assert _trees_equal(trainer.xfer.last_restored[2], captured[2])
+    # measured bytes match the ReshardPlan accounting within padding
+    state_nbytes = trainer.controller.state_nbytes
+    assert acc.measured_transfer_bytes == state_nbytes
+    modeled = trainer.controller.stage_param_bytes() * trainer.controller.n_stages
+    assert 0 <= acc.measured_transfer_bytes - modeled < trainer.controller.n_stages
+    assert not trainer._pending_rejoin
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_trainer_statexfer_record_replay_measured_accounting(tmp_path):
+    """Measured transfer accounting reproduces bit-exactly under replay."""
+    path = tmp_path / "sx.jsonl"
+    rec = _elastic_trainer(trace_record=str(path))
+    rec.run(log_every=0)
+    assert rec.controller.accounting.measured_transfer_bytes > 0
+    from repro.launch.train import Trainer
+
+    trace_kw = dict(trace_replay=str(path))
+    from repro.configs.base import ShapeConfig, TrainConfig
+
+    rep = Trainer(
+        TINY_DENSE, ShapeConfig("sx", 32, GB, "train"),
+        TrainConfig(steps=16, learning_rate=3e-3),
+        mecefo=MeCeFOConfig(mode="dynamic", rank=8, svd_period=50),
+        statexfer=True, **trace_kw,
+    )
+    rep.run(log_every=0)
+    assert not rep.verify_replay()
+    assert (
+        rep.controller.accounting.as_dict()
+        == rec.controller.accounting.as_dict()
+    )
+
+
+@pytest.mark.chaos
+def test_golden_statexfer_trace_replays_bit_exactly():
+    """The committed golden statexfer trace: events replay bit-exactly and
+    the footer pins the measured transfer totals (the CI smoke re-runs the
+    full trainer against it with --statexfer to verify those too)."""
+    from pathlib import Path
+
+    from repro.ft.trace import load_trace, replay_engine, verify_replay
+
+    golden = Path(__file__).parent / "data" / "golden_trace_statexfer.jsonl"
+    trace = load_trace(golden)
+    assert trace.footer is not None and trace.header.elastic
+    acc = trace.footer.accounting
+    assert acc["measured_transfer_bytes"] > 0, "no real bytes were pinned"
+    assert acc["n_peer_restores"] > 0
+    assert acc["n_rejoins"] >= acc["n_peer_restores"] + acc["n_ckpt_restores"]
+    engine = replay_engine(trace)
+    for step in range(trace.footer.total_steps):
+        engine.step(step)
+    problems = verify_replay(trace, engine)  # event stream only: accounting
+    assert not problems, problems           # is verified by the CI CLI replay

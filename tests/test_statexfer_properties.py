@@ -1,0 +1,90 @@
+"""Hypothesis properties for the rejoin transfer path: after ANY
+drop→heal→rejoin sequence, a restored rank's pytree equals the snapshot
+taken at its detach step (peer path) or the last checkpoint (FSDP path),
+and the transfer-gated masks still partition the global batch exactly."""
+from repro.core.ndb import plan_to_masks
+from repro.statexfer import StateTransferRegistry, host_copy, tree_nbytes
+from tests.conftest import TINY_DENSE, require_hypothesis
+from tests.test_statexfer import GB, _controller, _drive_resize, _state, _trees_equal
+
+require_hypothesis()
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+ops_strategy = st.lists(
+    st.tuples(st.booleans(), st.integers(min_value=0, max_value=3)),
+    min_size=1, max_size=12,
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=ops_strategy, cadence=st.integers(min_value=1, max_value=3))
+def test_rejoin_restores_detach_snapshot_property(ops, cadence):
+    """Peer-path restores are array-equal to the live state at the rank's
+    detach step; measured bytes equal the real payload; masks partition."""
+    ctl = _controller()
+    reg = StateTransferRegistry(n_dp=4, cadence=cadence)
+    detach_ref = {}  # rank -> host copy of the live state at its detach step
+    for step, (is_drop, rank) in enumerate(ops):
+        live = _state(step)
+        plan = ctl.plan
+        if is_drop and rank in plan.active_ranks() and plan.dp_size() > 1:
+            new_plan = plan.detach(rank)
+            detach_ref[rank] = host_copy(live)
+        elif not is_drop and rank in plan.detached:
+            new_plan = plan.rejoin(rank)
+        else:
+            new_plan = plan  # op invalid in this membership state: no-op
+        out = _drive_resize(reg, ctl, new_plan, live, step)
+        if out is not None:
+            for receipt in out.receipts:
+                if receipt.source == "peer":
+                    assert receipt.snapshot_step is not None
+                    assert _trees_equal(
+                        out.restored[receipt.rank], detach_ref[receipt.rank]
+                    ), f"step {step}: peer restore != detach snapshot"
+                    assert receipt.bytes_moved == tree_nbytes(
+                        detach_ref[receipt.rank]
+                    )
+        # mask partition invariant, with mid-transfer ranks re-detached
+        mask_plan = ctl.plan
+        pend = reg.pending & set(mask_plan.active_ranks())
+        if pend and len(set(mask_plan.active_ranks()) - pend):
+            mask_plan = mask_plan.detach(*sorted(pend))
+        if mask_plan.active_ranks():
+            _, w = plan_to_masks(mask_plan, TINY_DENSE, GB)
+            assert float(w.sum()) == GB
+        reg.on_step(live, step, ctl.plan)
+    reg.wait()
+    # bookkeeping stayed consistent: every successful restore was counted
+    ok = [r for r in reg.receipts if r.ok]
+    assert reg.measured_transfer_bytes == sum(r.bytes_moved for r in ok)
+    assert ctl.accounting.measured_transfer_bytes == reg.measured_transfer_bytes
+
+
+@settings(max_examples=20, deadline=None)
+@given(ops=ops_strategy)
+def test_fsdp_rejoin_restores_last_checkpoint_property(tmp_path_factory, ops):
+    """FSDP path: every successful restore equals the checkpoint exactly."""
+    from repro.checkpoint.ckpt import save
+
+    tmp = tmp_path_factory.mktemp("fsdp_ckpt")
+    ckpt_state = _state(0)
+    save(ckpt_state, str(tmp), step=0)
+    ctl = _controller(replicated=False)
+    reg = StateTransferRegistry(n_dp=4, cadence=1, replicated=False)
+    kw = dict(ckpt_like=_state(0), ckpt_dir=str(tmp))
+    for step, (is_drop, rank) in enumerate(ops):
+        plan = ctl.plan
+        if is_drop and rank in plan.active_ranks() and plan.dp_size() > 1:
+            new_plan = plan.detach(rank)
+        elif not is_drop and rank in plan.detached:
+            new_plan = plan.rejoin(rank)
+        else:
+            new_plan = plan
+        out = _drive_resize(reg, ctl, new_plan, _state(step), step, **kw)
+        if out is not None:
+            for receipt in out.receipts:
+                assert receipt.source == "ckpt"  # never a peer under FSDP
+                assert _trees_equal(out.restored[receipt.rank], ckpt_state)
+    assert reg.n_peer_restores == 0
