@@ -200,7 +200,82 @@ class CorrelatedDomainInjector(Injector):
 PERMANENT_STEPS = 1_000_000_000
 
 
-class DomainOutageWithHealInjector(Injector):
+class _HealDrivenOutageInjector(Injector):
+    """Shared machinery for outages that end at a *heal*, not an expiry.
+
+    One Poisson draw per step picks a failure domain (subclasses define the
+    key space and its device membership); every device of the domain fails
+    with ``PERMANENT_STEPS`` — emitted for EVERY domain device so the engine
+    extends the deadline of devices other injectors had already taken down
+    transiently: the outage ends at the heal, never at a shorter Poisson
+    expiry.  ``heal_time_s`` later the devices heal (with ``transfer_steps``
+    of state streaming before their ranks can rejoin), and the domain
+    becomes a candidate again.
+    """
+
+    elastic = True
+
+    def __init__(self, fail_interval_s: float, heal_time_s: float,
+                 transfer_steps: int = 1):
+        super().__init__()
+        self.fail_interval_s = fail_interval_s
+        self.heal_time_s = heal_time_s
+        self.transfer_steps = transfer_steps
+        self._pending_heals: List[Tuple[int, Device]] = []
+        self._in_flight: Set[Tuple[str, int]] = set()
+
+    # -- subclass hooks ------------------------------------------------
+    def _key_of_device(self, dev: Device) -> Tuple[str, int]:
+        raise NotImplementedError
+
+    def _candidate_keys(self, state: GridState) -> List[Tuple[str, int]]:
+        """Domains eligible for a fresh outage, in a deterministic order."""
+        raise NotImplementedError
+
+    def _devices_of(self, key: Tuple[str, int],
+                    state: GridState) -> List[Device]:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------
+    def emit(self, step: int, state: GridState) -> List[FailureEvent]:
+        out: List[FailureEvent] = []
+        due = sorted(p for p in self._pending_heals if p[0] <= step)
+        self._pending_heals = [p for p in self._pending_heals if p[0] > step]
+        for _due_step, dev in due:
+            out.append(
+                FailureEvent(step, NODE_HEAL, dev,
+                             duration_steps=self.transfer_steps,
+                             source=self.name)
+            )
+            self._in_flight.discard(self._key_of_device(dev))
+
+        lam = state.step_time_s / self.fail_interval_s
+        if self.rng.random() < min(lam, 1.0):
+            candidates = self._candidate_keys(state)
+            if candidates:
+                key = candidates[int(self.rng.integers(len(candidates)))]
+                self._in_flight.add(key)
+                heal_steps = max(
+                    int(round(self.heal_time_s / state.step_time_s)), 1
+                )
+                for dev in self._devices_of(key, state):
+                    out.append(
+                        FailureEvent(step, FAIL, dev,
+                                     duration_steps=PERMANENT_STEPS,
+                                     source=self.name)
+                    )
+                    self._pending_heals.append((step + heal_steps, dev))
+        return out
+
+    def describe(self) -> dict:
+        d = super().describe()
+        d.update(fail_interval_s=self.fail_interval_s,
+                 heal_time_s=self.heal_time_s,
+                 transfer_steps=self.transfer_steps)
+        return d
+
+
+class DomainOutageWithHealInjector(_HealDrivenOutageInjector):
     """A whole failure domain is lost and later *healed* (repaired/replaced).
 
     Unlike :class:`CorrelatedDomainInjector`, the outage has no automatic
@@ -218,79 +293,89 @@ class DomainOutageWithHealInjector(Injector):
     """
 
     name = "domain-heal"
-    elastic = True
 
     def __init__(self, fail_interval_s: float, heal_time_s: float,
                  transfer_steps: int = 1, domain: str = "dp"):
-        super().__init__()
+        super().__init__(fail_interval_s, heal_time_s, transfer_steps)
         if domain not in ("stage", "dp"):
             raise ValueError(f"domain must be 'stage' or 'dp', got {domain!r}")
-        self.fail_interval_s = fail_interval_s
-        self.heal_time_s = heal_time_s
-        self.transfer_steps = transfer_steps
         self.domain = domain
-        self._pending_heals: List[Tuple[int, Device]] = []
-        self._in_flight: Set[Tuple[str, int]] = set()
 
-    def emit(self, step: int, state: GridState) -> List[FailureEvent]:
-        out: List[FailureEvent] = []
-        due = sorted(p for p in self._pending_heals if p[0] <= step)
-        self._pending_heals = [p for p in self._pending_heals if p[0] > step]
-        healed_domains = set()
-        for _due_step, dev in due:
-            out.append(
-                FailureEvent(step, NODE_HEAL, dev,
-                             duration_steps=self.transfer_steps,
-                             source=self.name)
-            )
-            healed_domains.add(dev[0] if self.domain == "dp" else dev[1])
-        for idx in healed_domains:
-            self._in_flight.discard((self.domain, idx))
+    def _key_of_device(self, dev: Device) -> Tuple[str, int]:
+        return (self.domain, dev[0] if self.domain == "dp" else dev[1])
 
-        lam = state.step_time_s / self.fail_interval_s
-        if self.rng.random() < min(lam, 1.0):
-            if self.domain == "dp":
-                candidates = [
-                    r for r in range(state.n_dp)
-                    if ("dp", r) not in self._in_flight
-                ]
-                col = None
-                if candidates:
-                    r = candidates[int(self.rng.integers(len(candidates)))]
-                    self._in_flight.add(("dp", r))
-                    col = [(r, s) for s in range(state.n_stages)]
-            else:
-                candidates = [
-                    s for s in range(state.n_stages)
-                    if ("stage", s) not in self._in_flight
-                ]
-                col = None
-                if candidates:
-                    s = candidates[int(self.rng.integers(len(candidates)))]
-                    self._in_flight.add(("stage", s))
-                    col = [(r, s) for r in range(state.n_dp)]
-            if col is not None:
-                heal_steps = max(
-                    int(round(self.heal_time_s / state.step_time_s)), 1
-                )
-                for dev in col:
-                    # emit for EVERY domain device: the engine extends the
-                    # deadline of devices other injectors had already taken
-                    # down transiently — this outage ends at the heal, never
-                    # at a shorter Poisson expiry
-                    out.append(
-                        FailureEvent(step, FAIL, dev,
-                                     duration_steps=PERMANENT_STEPS,
-                                     source=self.name)
-                    )
-                    self._pending_heals.append((step + heal_steps, dev))
-        return out
+    def _candidate_keys(self, state: GridState) -> List[Tuple[str, int]]:
+        n = state.n_dp if self.domain == "dp" else state.n_stages
+        return [
+            (self.domain, i) for i in range(n)
+            if (self.domain, i) not in self._in_flight
+        ]
+
+    def _devices_of(self, key: Tuple[str, int],
+                    state: GridState) -> List[Device]:
+        _, idx = key
+        if self.domain == "dp":
+            return [(idx, s) for s in range(state.n_stages)]
+        return [(r, idx) for r in range(state.n_dp)]
 
     def describe(self) -> dict:
         d = super().describe()
-        d.update(domain=self.domain, fail_interval_s=self.fail_interval_s,
-                 heal_time_s=self.heal_time_s,
-                 transfer_steps=self.transfer_steps)
+        d["domain"] = self.domain
+        return d
+
+
+class PodOutageInjector(_HealDrivenOutageInjector):
+    """Pod-granular heal-based outages over a ``pod_domains`` placement.
+
+    The multi-pod topology (``statexfer.replication.pod_domains``) groups
+    ``ranks_per_pod`` consecutive DP ranks into one failure domain; one pod
+    event takes out *every* stage of *every* rank in a randomly chosen pod
+    at once, with the same heal-driven lifecycle as
+    :class:`DomainOutageWithHealInjector` (which models one-rank domains —
+    ``ranks_per_pod=1`` reproduces its ``domain="dp"`` behavior).  With
+    whole pipelines lost, the elastic engine detaches each pod rank and
+    re-admits it via ``rejoin`` once its ``transfer_steps`` of state
+    streaming complete.
+
+    This is also the serving-replica killer: the serve engine's replica set
+    maps replicas onto DP ranks of a 1-stage grid, so a pod outage kills
+    ``ranks_per_pod`` serving replicas together — exactly the correlated
+    failure the pod-aware ring replication of KV snapshots must survive.
+    """
+
+    name = "pod-outage"
+
+    def __init__(self, fail_interval_s: float, heal_time_s: float,
+                 ranks_per_pod: int = 2, transfer_steps: int = 1):
+        super().__init__(fail_interval_s, heal_time_s, transfer_steps)
+        if ranks_per_pod < 1:
+            raise ValueError(
+                f"ranks_per_pod must be >= 1, got {ranks_per_pod}"
+            )
+        self.ranks_per_pod = ranks_per_pod
+
+    def _key_of_device(self, dev: Device) -> Tuple[str, int]:
+        return ("pod", dev[0] // self.ranks_per_pod)
+
+    def _candidate_keys(self, state: GridState) -> List[Tuple[str, int]]:
+        n_pods = -(-state.n_dp // self.ranks_per_pod)
+        return [
+            ("pod", p) for p in range(n_pods)
+            if ("pod", p) not in self._in_flight
+        ]
+
+    def _devices_of(self, key: Tuple[str, int],
+                    state: GridState) -> List[Device]:
+        _, pod = key
+        ranks = range(
+            pod * self.ranks_per_pod,
+            min((pod + 1) * self.ranks_per_pod, state.n_dp),
+        )
+        return [(r, s) for r in ranks for s in range(state.n_stages)]
+
+    def describe(self) -> dict:
+        d = super().describe()
+        d["ranks_per_pod"] = self.ranks_per_pod
         return d
 
 
@@ -460,8 +545,11 @@ def chaos_preset(name: str, scenario=None) -> List[Injector]:
         ],
         "pod": lambda: [
             poisson,
-            CorrelatedDomainInjector(12 * base, scenario.recover_time_s or 4 * base,
-                                     domain="dp"),
+            # pod-granular outages over the pod_domains placement: two
+            # consecutive DP ranks share a pod; one event drops them both
+            # until the heal + transfer window completes (elastic rejoin)
+            PodOutageInjector(12 * base, 4 * base, ranks_per_pod=2,
+                              transfer_steps=2),
         ],
         "stragglers": lambda: [
             poisson,

@@ -5,6 +5,11 @@ attends to a (Smax, KV, hd) cache.  Online softmax over KV blocks with the
 (1 × hd) accumulator in VMEM; the cache is streamed block-by-block, the
 length mask handles cur_len < Smax.
 
+``cur_len`` may be a scalar (every sequence at the same position — the
+lock-step path) or a ``(B,)`` vector of per-sequence lengths — the ragged
+layout the continuous-batching serve engine produces, where every slot of
+the decode batch sits at a different position in its own cache.
+
 Grid: (batch, q_heads, Smax/Bk) — KV-block axis innermost (sequential on
 TPU), scratch carries (m, l, acc) across blocks.
 """
@@ -23,6 +28,7 @@ NEG_INF = -1e30
 
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
             bk, scale):
+    b = pl.program_id(0)
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -32,7 +38,7 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    cur_len = len_ref[0]
+    cur_len = len_ref[b]
     k_start = ki * bk
 
     def _compute():
@@ -65,7 +71,7 @@ def flash_decode(
     q: jnp.ndarray,        # (B, 1, H, hd)
     k_cache: jnp.ndarray,  # (B, Smax, KV, hd)
     v_cache: jnp.ndarray,
-    cur_len,               # scalar int32 — valid cache positions
+    cur_len,               # scalar or (B,) int32 — valid cache positions
     *,
     block_k: int = 512,
     interpret: bool = False,
@@ -77,7 +83,9 @@ def flash_decode(
     bk = min(block_k, Smax)
     assert Smax % bk == 0, (Smax, bk)
     scale = 1.0 / math.sqrt(hd)
-    lens = jnp.full((1,), cur_len, jnp.int32)
+    lens = jnp.broadcast_to(
+        jnp.asarray(cur_len, jnp.int32).reshape(-1), (B,)
+    )
 
     kernel = functools.partial(_kernel, bk=bk, scale=scale)
     return pl.pallas_call(

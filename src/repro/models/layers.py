@@ -126,7 +126,9 @@ def decode_attention(q, k_cache, v_cache, cur_len):
     """Single-token attention against a (B, Smax, KV, hd) cache.
 
     q: (B, 1, H, hd). ``cur_len``: number of valid cache positions (after the
-    current token's K/V were written).  fp32 softmax; GQA grouped einsum.
+    current token's K/V were written) — a scalar, or a (B,) vector for the
+    ragged continuous-batching layout where every slot sits at its own
+    position.  fp32 softmax; GQA grouped einsum.
     """
     B, _, H, hd = q.shape
     KV = k_cache.shape[2]
@@ -134,8 +136,9 @@ def decode_attention(q, k_cache, v_cache, cur_len):
     scale = hd ** -0.5
     qg = q.reshape(B, KV, G, hd)
     s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache).astype(jnp.float32) * scale
-    valid = jnp.arange(k_cache.shape[1]) < cur_len
-    s = jnp.where(valid[None, None, None], s, -1e30)
+    lens = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32).reshape(-1), (B,))
+    valid = jnp.arange(k_cache.shape[1])[None, :] < lens[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
     out = jnp.einsum("bkgs,bskh->bkgh", p, v_cache)
     return out.reshape(B, 1, H, hd)
@@ -177,12 +180,21 @@ def attention_block(
         if cur_len is None:
             raise ValueError("decode/prefill cache requires cur_len")
         if q.shape[1] == 1:  # decode: write one position, attend to cache
-            k_cache = jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k.astype(cache["k"].dtype), cur_len, axis=1
-            )
-            v_cache = jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v.astype(cache["v"].dtype), cur_len, axis=1
-            )
+            if jnp.ndim(cur_len):  # ragged: per-slot write positions
+                upd = jax.vmap(
+                    lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
+                        c, u, i, axis=0
+                    )
+                )
+                k_cache = upd(cache["k"], k.astype(cache["k"].dtype), cur_len)
+                v_cache = upd(cache["v"], v.astype(cache["v"].dtype), cur_len)
+            else:
+                k_cache = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k.astype(cache["k"].dtype), cur_len, axis=1
+                )
+                v_cache = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v.astype(cache["v"].dtype), cur_len, axis=1
+                )
             new_cache = {"k": k_cache, "v": v_cache}
             o = decode_attention(q, k_cache, v_cache, cur_len + 1)
         else:  # prefill: attend within the prompt, write K/V into the cache

@@ -236,8 +236,16 @@ def forward_prefill(
     rules: ShardingRules,
     flags: ExecFlags,
     cache_structs_tree: Tree,
+    logit_pos=None,
 ):
-    """Prompt prefill: returns (filled caches, last-position logits)."""
+    """Prompt prefill: returns (filled caches, last-position logits).
+
+    ``logit_pos`` selects which position's logits to return (default: the
+    last).  The serve engine pads prompts up to a page multiple to bound the
+    number of compiled prefill shapes, and reads the logits at the true last
+    prompt position — pad positions beyond it are never attended to later
+    (the decode length mask stops at ``cur_len``).
+    """
     ctx = NDBContext(mode="off")
     h, _ = frontends.embed_inputs(params, batch, cfg)
     h = constrain(h, rules, "batch", "seq", None)
@@ -249,7 +257,8 @@ def forward_prefill(
         positions=positions, caches=caches, cur_len=jnp.int32(0),
     )
     h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
-    logits = logits_for_position(h[:, -1], _unembed(params), cfg.vocab_size)
+    h_last = h[:, -1] if logit_pos is None else jnp.take(h, logit_pos, axis=1)
+    logits = logits_for_position(h_last, _unembed(params), cfg.vocab_size)
     return new_caches, logits
 
 
@@ -257,7 +266,7 @@ def forward_decode(
     params: Tree,
     caches: Tree,
     token: jnp.ndarray,  # (B,) int32
-    cur_len,  # scalar int32 — number of valid cache positions
+    cur_len,  # scalar int32, or (B,) for ragged per-slot positions
     cfg: ModelConfig,
     rules: ShardingRules,
     flags: ExecFlags,
@@ -270,10 +279,12 @@ def forward_decode(
     else:
         h = params["embed"][token][:, None, :]
     h = constrain(h, rules, "batch", None, None)
-    positions = cur_len[None] if jnp.ndim(cur_len) == 0 else cur_len
+    cur_len = jnp.asarray(cur_len, jnp.int32)
+    # scalar: one shared position; (B,): per-slot rope positions (B, 1)
+    positions = cur_len[None] if jnp.ndim(cur_len) == 0 else cur_len[:, None]
     h, new_caches, _ = run_trunk(
         params, None, h, cfg, rules, ctx, flags,
-        positions=jnp.asarray(positions), caches=caches, cur_len=cur_len,
+        positions=positions, caches=caches, cur_len=cur_len,
     )
     h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
     logits = logits_for_position(h[:, -1], _unembed(params), cfg.vocab_size)

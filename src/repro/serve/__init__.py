@@ -1,0 +1,26 @@
+"""Fault-tolerant serving engine: continuous batching over a paged KV pool.
+
+The inference-side counterpart of the training fault-tolerance stack:
+
+  * :mod:`repro.serve.request` — requests, deterministic workloads, metrics;
+  * :mod:`repro.serve.kvpool` — fixed-size KV pages + per-slot page tables
+    over the scan-stacked ``models/kvcache.py`` layout;
+  * :mod:`repro.serve.engine` — one replica's continuous-batching scheduler
+    (slot admission, interleaved prefill/decode, ragged per-slot ``cur_len``);
+  * :mod:`repro.serve.replicas` — the replica set: chaos-driven kills
+    (``ft`` injectors), KV-page snapshot replication, deterministic
+    in-flight request migration;
+  * :mod:`repro.serve.trace` — replayable JSONL serve traces;
+  * :mod:`repro.serve.run` — record/replay CLI (the CI serve-smoke entry).
+"""
+from repro.serve.engine import EngineConfig, ServeEngine
+from repro.serve.kvpool import PageAllocator
+from repro.serve.replicas import KVSnapshotRegistry, ReplicaSet
+from repro.serve.request import Request, RequestState, WorkloadSpec, build_workload
+from repro.serve.sampling import greedy_token
+
+__all__ = [
+    "EngineConfig", "ServeEngine", "PageAllocator", "KVSnapshotRegistry",
+    "ReplicaSet", "Request", "RequestState", "WorkloadSpec", "build_workload",
+    "greedy_token",
+]

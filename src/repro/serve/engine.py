@@ -1,0 +1,348 @@
+"""One serving replica: request-level continuous batching over paged KV.
+
+The engine keeps a fixed decode batch of ``max_slots`` slots.  Each engine
+step, new requests are admitted into free slots (prefill, which also emits
+the first token) and then *every* occupied slot advances one decode round —
+new requests join the running batch mid-flight instead of waiting for it to
+drain.  The decode round always runs at the full ``(max_slots,)`` shape with
+per-slot ``cur_len`` (ragged flash-decode layout); empty slots carry null
+page tables and length 0, so their lanes compute garbage that is never read
+and never written over live pages.
+
+Determinism contract (what the failover machinery relies on): with
+attention-only mixers and a dense FFN, every batch lane is value-isolated —
+matmuls, norms and the length-masked attention never mix values across
+rows, and masked positions contribute exactly zero (``exp(-1e30 - m) == 0``).
+A request's token stream is therefore a bit-exact function of (params,
+prompt, emitted prefix), independent of batch composition, page layout, or
+which replica runs it.  MoE FFNs break this (capacity routing couples
+lanes); the engine accepts them but bit-exact failover is only guaranteed
+for dense FFNs.
+
+Restore paths (used for failover migration and re-admission):
+  * ``snapshot`` — write a replicated KV-page snapshot into fresh pages,
+    then teacher-force the tokens emitted after the snapshot;
+  * ``replay``  — deterministic re-prefill of the prompt plus teacher-forced
+    replay of every emitted token (no snapshot needed).
+Both rebuild the exact cache bits the unkilled run would have had, so the
+migrated stream continues bit-identically.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.kvcache import cache_structs
+from repro.models.model import ExecFlags, forward_decode, forward_prefill
+from repro.parallel.sharding import ShardingRules
+from repro.serve.kvpool import (
+    NULL_PAGE,
+    PageAllocator,
+    check_attention_only,
+    gather_pages,
+    gather_slot_pages,
+    init_pool,
+    pages_needed,
+    restore_slot_pages,
+    scatter_prefill,
+    scatter_token,
+)
+from repro.serve.request import RequestState
+from repro.serve.sampling import greedy_token
+from repro.utils.trees import tree_nbytes
+
+Tree = Any
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Serving-side knobs (model shapes stay in ModelConfig)."""
+
+    max_slots: int = 4          # decode batch size (fixed shape)
+    page_size: int = 16         # tokens per KV page
+    pages_per_slot: int = 8     # page-table width -> max_len per request
+    n_pages: int = 0            # physical pages incl. null; 0 -> full reserve
+    admission: str = "continuous"   # "continuous" | "lockstep" (baseline)
+    max_prefills_per_step: int = 1  # continuous admission budget per step
+
+    def __post_init__(self):
+        if self.admission not in ("continuous", "lockstep"):
+            raise ValueError(f"unknown admission policy {self.admission!r}")
+
+    @property
+    def max_len(self) -> int:
+        return self.page_size * self.pages_per_slot
+
+    @property
+    def resolved_n_pages(self) -> int:
+        if self.n_pages:
+            return self.n_pages
+        return 1 + self.max_slots * self.pages_per_slot
+
+
+# ---------------------------------------------------------------------------
+# jitted steps (module-level: every replica shares one compile per shape)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "rules", "flags"))
+def _prefill_step(params, tokens, last_idx, *, cfg, rules, flags):
+    """Batch-1 prefill over a page-aligned padded prompt.
+
+    Returns (dense caches (np, 1, S_pad, KV, hd), logits at ``last_idx``).
+    """
+    dt = params["embed"].dtype
+    cs = cache_structs(cfg, 1, tokens.shape[1], dt)
+    return forward_prefill(
+        params, {"tokens": tokens}, cfg, rules, flags, cs, logit_pos=last_idx
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "rules", "flags", "page_size")
+)
+def _decode_round(params, pool, tables, lens, tokens, *, cfg, rules, flags,
+                  page_size):
+    """One ragged decode round over the paged pool.
+
+    Gathers the slot-major dense view, consumes one token per slot (writing
+    its K/V at ``lens[b]``), scatters the new rows back to their pages, and
+    returns (new pool, (B, V) logits).
+    """
+    dense = gather_pages(pool, tables, page_size=page_size)
+    new_dense, logits = forward_decode(
+        params, dense, tokens, lens, cfg, rules, flags
+    )
+    pool = scatter_token(pool, new_dense, tables, lens, page_size=page_size)
+    return pool, logits
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+class ServeEngine:
+    """One replica's slots, pages, and compiled prefill/decode steps."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Tree,
+        rules: ShardingRules,
+        flags: ExecFlags,
+        ecfg: EngineConfig,
+        *,
+        alloc_rng: Optional[np.random.Generator] = None,
+    ):
+        check_attention_only(cfg)
+        self.cfg = cfg
+        self.params = params
+        self.rules = rules
+        self.flags = flags
+        self.ecfg = ecfg
+        dt = params["embed"].dtype
+        self.pool = init_pool(cfg, ecfg.resolved_n_pages, ecfg.page_size, dt)
+        self.alloc = PageAllocator(
+            ecfg.resolved_n_pages, ecfg.page_size, rng=alloc_rng
+        )
+        self.slots: List[Optional[RequestState]] = [None] * ecfg.max_slots
+        self._tables = np.full(
+            (ecfg.max_slots, ecfg.pages_per_slot), NULL_PAGE, np.int32
+        )
+        self._lens = np.zeros((ecfg.max_slots,), np.int32)
+
+    # -- capacity ------------------------------------------------------
+    @property
+    def n_active(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    def free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def can_admit(self, rs: RequestState) -> bool:
+        if rs.req.total_len > self.ecfg.max_len:
+            raise ValueError(
+                f"request {rs.rid} needs {rs.req.total_len} positions "
+                f"> max_len {self.ecfg.max_len}"
+            )
+        slot = self.free_slot()
+        if slot is None:
+            return False
+        return self.alloc.can_allocate(slot, rs.req.total_len)
+
+    # -- admission -----------------------------------------------------
+    def _bind(self, rs: RequestState) -> int:
+        slot = self.free_slot()
+        assert slot is not None
+        # reserve the full request up front: no mid-flight OOM, and freeing
+        # at completion returns the whole span to the pool for reuse
+        self.alloc.ensure(slot, rs.req.total_len)
+        self.slots[slot] = rs
+        self._tables[slot] = self.alloc.table_row(
+            slot, self.ecfg.pages_per_slot
+        )
+        return slot
+
+    def _prefill_into(self, slot: int, rs: RequestState):
+        """Run the padded prefill and scatter the prompt K/V into pages."""
+        S = len(rs.req.prompt)
+        ps = self.ecfg.page_size
+        n_pg = pages_needed(S, ps)
+        S_pad = n_pg * ps
+        toks = np.zeros((1, S_pad), np.int32)
+        toks[0, :S] = rs.req.prompt
+        dense, logits = _prefill_step(
+            self.params, jnp.asarray(toks), jnp.int32(S - 1),
+            cfg=self.cfg, rules=self.rules, flags=self.flags,
+        )
+        page_ids = jnp.asarray(self.alloc.tables[slot][:n_pg], jnp.int32)
+        self.pool = scatter_prefill(
+            self.pool, dense, page_ids, page_size=ps
+        )
+        self._lens[slot] = S
+        return logits
+
+    def admit_new(self, rs: RequestState, step: int) -> int:
+        """Admit a fresh request: prefill + first token.  Returns the token.
+
+        A ``max_new_tokens == 1`` request completes right here — its slot is
+        evicted immediately so the next decode round never over-generates.
+        """
+        slot = self._bind(rs)
+        logits = self._prefill_into(slot, rs)
+        tok = int(greedy_token(logits[0], self.cfg))
+        rs.admit_step = step
+        rs.record_token(tok, step)
+        if rs.done:
+            self._evict(slot)
+        return tok
+
+    def admit_restored(self, rs: RequestState, snapshot, step: int
+                       ) -> Tuple[str, int]:
+        """Re-admit a migrated/preempted request; returns (path, replayed).
+
+        ``snapshot`` is a KV-page snapshot (or None).  Emits no new token —
+        the stream resumes at the next decode round, bit-identically.
+        """
+        assert rs.emitted, "restore path requires an already-started request"
+        slot = self._bind(rs)
+        ps = self.ecfg.page_size
+        if snapshot is not None:
+            n_cov = pages_needed(snapshot.cur_len, ps)
+            self.pool = restore_slot_pages(
+                self.pool, self.alloc.tables[slot][:n_cov], snapshot.pages
+            )
+            self._lens[slot] = snapshot.cur_len
+            replay = rs.emitted[snapshot.n_emitted - 1 : -1]
+            path = "snapshot"
+            rs.restored_bytes += snapshot.nbytes
+        else:
+            logits = self._prefill_into(slot, rs)
+            t0 = int(greedy_token(logits[0], self.cfg))
+            if t0 != rs.emitted[0]:
+                raise AssertionError(
+                    f"re-prefill of request {rs.rid} diverged: emitted "
+                    f"{rs.emitted[0]} vs recomputed {t0}"
+                )
+            replay = rs.emitted[:-1]
+            path = "replay"
+        self._replay_tokens(slot, replay)
+        rs.admit_step = step
+        rs.n_migrations += 1
+        rs.replayed_tokens += len(replay)
+        return path, len(replay)
+
+    def _replay_tokens(self, slot: int, tokens: List[int]) -> None:
+        """Teacher-force ``tokens`` through the decode step, isolated to one
+        slot (all other lanes null), rebuilding its K/V bit-exactly."""
+        if not tokens:
+            return
+        B, P = self.ecfg.max_slots, self.ecfg.pages_per_slot
+        tables = np.full((B, P), NULL_PAGE, np.int32)
+        tables[slot] = self._tables[slot]
+        for t in tokens:
+            lens = np.zeros((B,), np.int32)
+            lens[slot] = self._lens[slot]
+            toks = np.zeros((B,), np.int32)
+            toks[slot] = t
+            self.pool, _ = _decode_round(
+                self.params, self.pool, jnp.asarray(tables),
+                jnp.asarray(lens), jnp.asarray(toks),
+                cfg=self.cfg, rules=self.rules, flags=self.flags,
+                page_size=self.ecfg.page_size,
+            )
+            self._lens[slot] += 1
+
+    # -- decode --------------------------------------------------------
+    def decode_round(self, step: int) -> List[Tuple[RequestState, int, bool]]:
+        """Advance every occupied slot one token.
+
+        Returns [(state, token, completed)] in slot order; completed
+        requests are evicted (slot + pages freed for reuse).
+        """
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return []
+        toks = np.zeros((self.ecfg.max_slots,), np.int32)
+        for i in active:
+            toks[i] = self.slots[i].emitted[-1]
+        self.pool, logits = _decode_round(
+            self.params, self.pool, jnp.asarray(self._tables),
+            jnp.asarray(self._lens), jnp.asarray(toks),
+            cfg=self.cfg, rules=self.rules, flags=self.flags,
+            page_size=self.ecfg.page_size,
+        )
+        new_toks = np.asarray(greedy_token(logits, self.cfg))
+        out = []
+        for i in active:
+            rs = self.slots[i]
+            self._lens[i] += 1
+            tok = int(new_toks[i])
+            rs.record_token(tok, step)
+            if rs.done:
+                self._evict(i)
+                out.append((rs, tok, True))
+            else:
+                out.append((rs, tok, False))
+        return out
+
+    def _evict(self, slot: int) -> None:
+        self.alloc.free(slot)
+        self.slots[slot] = None
+        self._tables[slot] = NULL_PAGE
+        self._lens[slot] = 0
+
+    # -- failover surface ---------------------------------------------
+    def live_states(self) -> List[Tuple[int, RequestState]]:
+        return [
+            (i, s) for i, s in enumerate(self.slots) if s is not None
+        ]
+
+    def snapshot_slot(self, slot: int):
+        """(host page contents covering cur_len, n_emitted, cur_len, nbytes)."""
+        rs = self.slots[slot]
+        assert rs is not None
+        cur_len = int(self._lens[slot])
+        n_cov = pages_needed(cur_len, self.ecfg.page_size)
+        pages = gather_slot_pages(self.pool, self.alloc.tables[slot][:n_cov])
+        return pages, len(rs.emitted), cur_len, tree_nbytes(pages)
+
+    def kill(self) -> List[RequestState]:
+        """The replica dies: its pages are gone; hand back the in-flight
+        request records (the router streamed their tokens, so the emitted
+        prefix survives the replica) for migration."""
+        inflight = sorted(
+            (s for s in self.slots if s is not None), key=lambda r: r.rid
+        )
+        self.slots = [None] * self.ecfg.max_slots
+        return inflight

@@ -1,0 +1,205 @@
+"""Paged KV-cache pool: fixed-size pages + per-slot page tables.
+
+Two layers, separately testable:
+
+  * :class:`PageAllocator` — pure-Python bookkeeping: a free list of page
+    ids and per-slot page tables.  Page 0 is the reserved *null* page; every
+    unused page-table entry points at it, so the padded gathers/scatters of
+    inactive slots can never touch a live page.  The hypothesis suite pins
+    its invariants (no page in two live tables, eviction only frees the
+    owner's pages, capacity conservation).
+  * physical pages — jnp arrays shaped like ``models/kvcache.py``'s
+    scan-stacked entries with the (batch, seq) dims replaced by
+    (page, page_slot): ``(n_periods, n_pages, page_size, KV, hd)``.
+    :func:`gather_pages` materializes a slot-major dense view
+    ``(n_periods, B, pages_per_slot*page_size, KV, hd)`` for the ragged
+    flash-decode path; :func:`scatter_token` writes each slot's one new
+    (K, V) row back to its page.  Positions at or past a slot's ``cur_len``
+    read whatever the page holds (zeros or stale rows) — the decode length
+    mask zeroes their attention weight exactly (``exp(-1e30 - m) == 0``), so
+    page layout never changes logits bitwise.  That property is what the
+    paged-vs-dense equality test pins.
+
+Only attention caches are paged; the serve engine rejects SSM/hybrid
+configs (their decode state is O(1) per slot, not a growing cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Set
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.kvcache import cache_structs
+from repro.models.params import block_layout
+
+Tree = Any
+
+NULL_PAGE = 0
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    return -(-n_tokens // page_size)
+
+
+class PageAllocator:
+    """Free-list page allocator over ids ``1..n_pages-1`` (0 is null).
+
+    ``rng`` (optional ``numpy.random.Generator``) shuffles the initial free
+    list — the tests use it to prove decode results are invariant to the
+    physical page layout.
+    """
+
+    def __init__(self, n_pages: int, page_size: int,
+                 rng: Optional[np.random.Generator] = None):
+        if n_pages < 2:
+            raise ValueError(f"need >= 2 pages (1 is the null page), got {n_pages}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(1, n_pages))
+        if rng is not None:
+            rng.shuffle(self._free)
+        self.tables: Dict[int, List[int]] = {}
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def live_pages(self) -> Set[int]:
+        return {p for t in self.tables.values() for p in t}
+
+    def capacity(self, slot: int) -> int:
+        return len(self.tables.get(slot, ())) * self.page_size
+
+    def can_allocate(self, slot: int, n_tokens: int) -> bool:
+        have = len(self.tables.get(slot, ()))
+        return pages_needed(n_tokens, self.page_size) - have <= self.free_count
+
+    def ensure(self, slot: int, n_tokens: int) -> List[int]:
+        """Grow ``slot``'s table to cover ``n_tokens`` positions.
+
+        Returns the newly allocated page ids (possibly empty).  Raises
+        ``MemoryError`` when the free list can't cover the growth — the
+        admission policy is expected to have checked :meth:`can_allocate`.
+        """
+        table = self.tables.setdefault(slot, [])
+        need = pages_needed(n_tokens, self.page_size) - len(table)
+        if need <= 0:
+            return []
+        if need > len(self._free):
+            raise MemoryError(
+                f"KV pool exhausted: slot {slot} needs {need} pages, "
+                f"{len(self._free)} free"
+            )
+        new = [self._free.pop(0) for _ in range(need)]
+        table.extend(new)
+        return new
+
+    def free(self, slot: int) -> List[int]:
+        """Evict ``slot``: return its pages to the free list for reuse."""
+        pages = self.tables.pop(slot, [])
+        self._free.extend(pages)
+        return pages
+
+    def table_row(self, slot: int, pages_per_slot: int) -> List[int]:
+        """Fixed-width table row (padded with the null page)."""
+        t = self.tables.get(slot, [])
+        if len(t) > pages_per_slot:
+            raise ValueError(
+                f"slot {slot} holds {len(t)} pages > pages_per_slot={pages_per_slot}"
+            )
+        return t + [NULL_PAGE] * (pages_per_slot - len(t))
+
+
+# ---------------------------------------------------------------------------
+# Physical pages
+# ---------------------------------------------------------------------------
+
+
+def check_attention_only(cfg: ModelConfig) -> None:
+    kinds = {kind for kind, _ in block_layout(cfg)}
+    if kinds != {"attn"}:
+        raise ValueError(
+            "the paged serve engine supports attention-mixer configs only "
+            f"(got block kinds {sorted(kinds)}); SSM decode state is not paged"
+        )
+
+
+def init_pool(cfg: ModelConfig, n_pages: int, page_size: int, dtype) -> Tree:
+    """Zeroed physical pages for every cache entry of ``cfg``."""
+    check_attention_only(cfg)
+    structs = cache_structs(cfg, 1, page_size, dtype)
+    return jax.tree.map(
+        lambda s: jnp.zeros(
+            (s.shape[0], n_pages, page_size) + s.shape[3:], s.dtype
+        ),
+        structs,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("page_size",))
+def gather_pages(pool: Tree, tables: jnp.ndarray, *, page_size: int) -> Tree:
+    """(B, P) page tables -> dense caches (n_periods, B, P*page_size, KV, hd)."""
+    B, P = tables.shape
+
+    def g(pg):
+        d = pg[:, tables]  # (np, B, P, ps, KV, hd)
+        return d.reshape(pg.shape[0], B, P * page_size, *pg.shape[3:])
+
+    return jax.tree.map(g, pool)
+
+
+@functools.partial(jax.jit, static_argnames=("page_size",))
+def scatter_prefill(pool: Tree, dense: Tree, page_ids: jnp.ndarray, *,
+                    page_size: int) -> Tree:
+    """Write a batch-1 prefill cache (np, 1, S_pad, KV, hd) into its pages.
+
+    ``page_ids``: (S_pad / page_size,) distinct page ids.
+    """
+    n = page_ids.shape[0]
+
+    def put(pg, dn):
+        chunks = dn[:, 0].reshape(pg.shape[0], n, page_size, *pg.shape[3:])
+        return pg.at[:, page_ids].set(chunks)
+
+    return jax.tree.map(put, pool, dense)
+
+
+@functools.partial(jax.jit, static_argnames=("page_size",))
+def scatter_token(pool: Tree, dense: Tree, tables: jnp.ndarray,
+                  lens: jnp.ndarray, *, page_size: int) -> Tree:
+    """Write each slot's freshly-decoded K/V row (position ``lens[b]`` of the
+    dense view) back to its page.  Inactive slots (null tables, len 0) write
+    into the null page — never into live data.
+    """
+    pids = jnp.take_along_axis(
+        tables, (lens // page_size)[:, None], axis=1
+    )[:, 0]
+    offs = lens % page_size
+
+    def put(pg, dn):
+        tok = jnp.take_along_axis(
+            dn, lens[None, :, None, None, None], axis=2
+        )  # (np, B, 1, KV, hd)
+        return pg.at[:, pids, offs].set(tok[:, :, 0])
+
+    return jax.tree.map(put, pool, dense)
+
+
+def gather_slot_pages(pool: Tree, page_ids: List[int]) -> Tree:
+    """Host copy of one slot's pages (the KV snapshot payload)."""
+    idx = jnp.asarray(page_ids, jnp.int32)
+    return jax.tree.map(lambda pg: np.asarray(pg[:, idx]), pool)
+
+
+def restore_slot_pages(pool: Tree, page_ids: List[int], host: Tree) -> Tree:
+    """Write a snapshot's page contents into freshly allocated pages."""
+    idx = jnp.asarray(page_ids, jnp.int32)
+    return jax.tree.map(
+        lambda pg, h: pg.at[:, idx].set(jnp.asarray(h)), pool, host
+    )

@@ -1,0 +1,334 @@
+"""Replica set: chaos-driven kills, KV-snapshot replication, migration.
+
+Replicas map onto DP ranks of an ``(n_replicas, 1)`` chaos grid, so the
+existing ``ft`` injectors drive serving failures unchanged —
+:class:`~repro.ft.injectors.PodOutageInjector` kills whole pods of replicas,
+``ScheduledInjector`` scripts deterministic kills for tests and golden
+traces.  A replica's death is a ``fail`` event on its device; it comes back
+at the engine's derived ``rejoin`` (heal + transfer window), with a fresh
+empty engine.
+
+KV-page snapshots follow the ``statexfer`` pattern: every ``cadence`` steps
+each alive replica pushes, for every in-flight request, a host copy of the
+pages covering its ``cur_len`` to a *peer* replica chosen by
+``ring_peers`` over the ``pod_domains`` topology — so one pod outage never
+takes a request's slot *and* the replica holding its snapshot.  When a
+replica dies, its in-flight requests re-queue at the front and are
+re-admitted on surviving replicas: from the peer snapshot (plus
+teacher-forced replay of tokens emitted after it) when one survives, else
+by full deterministic re-prefill.  Either way the continued stream is
+bit-identical to the unkilled run (see ``serve/engine.py``'s determinism
+contract).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.ft.events import FAIL, RANK_REJOIN
+from repro.ft.failures import ChaosEngine
+from repro.ft.injectors import Injector
+from repro.models.model import ExecFlags
+from repro.parallel.sharding import ShardingRules
+from repro.serve.engine import EngineConfig, ServeEngine
+from repro.serve.request import Request, RequestState
+from repro.serve.trace import ServeEvent
+from repro.statexfer.replication import pod_domains, ring_peers
+
+Tree = Any
+
+
+@dataclass
+class KVSnapshot:
+    """One in-flight request's KV pages as held by a peer replica."""
+
+    rid: int
+    holder: int
+    step: int
+    n_emitted: int
+    cur_len: int
+    pages: Tree  # host numpy, (np, n_pages_covering_cur_len, ps, KV, hd)
+    nbytes: int
+
+
+class KVSnapshotRegistry:
+    """Who holds whose in-flight KV state (request-keyed ReplicaStore)."""
+
+    def __init__(self):
+        self._snaps: Dict[int, KVSnapshot] = {}
+        self.n_pushes = 0
+        self.pushed_bytes = 0
+
+    def push(self, snap: KVSnapshot) -> None:
+        self._snaps[snap.rid] = snap
+        self.n_pushes += 1
+        self.pushed_bytes += snap.nbytes
+
+    def get(self, rid: int) -> Optional[KVSnapshot]:
+        return self._snaps.get(rid)
+
+    def drop(self, rid: int) -> None:
+        self._snaps.pop(rid, None)
+
+    def lose_holder(self, holder: int) -> List[int]:
+        """The holder's domain died: its held snapshots are gone.  Returns
+        the owning request ids (they will fall back to re-prefill)."""
+        lost = sorted(
+            r for r, s in self._snaps.items() if s.holder == holder
+        )
+        for r in lost:
+            del self._snaps[r]
+        return lost
+
+    def __len__(self) -> int:
+        return len(self._snaps)
+
+
+def check_workload_fits(workload: Sequence[Request],
+                        ecfg: EngineConfig) -> None:
+    """Reject requests that can NEVER fit a slot — admitting one would
+    otherwise crash (or stall the queue head) mid-run, at a data-dependent
+    step, possibly leaving a footerless trace."""
+    oversized = [
+        req.rid for req in workload if req.total_len > ecfg.max_len
+    ]
+    if oversized:
+        raise ValueError(
+            f"requests {oversized} need more than max_len={ecfg.max_len} "
+            f"KV positions (page_size * pages_per_slot); enlarge the "
+            f"engine or bound the workload"
+        )
+
+
+@dataclass
+class ServeResult:
+    states: Dict[int, RequestState]
+    accounting: Dict[str, int]
+    n_steps: int
+    step_wall: List[float] = field(default_factory=list)
+
+    def streams(self) -> Dict[int, List[int]]:
+        return {rid: list(rs.emitted) for rid, rs in self.states.items()}
+
+    def streams_sha256(self) -> str:
+        payload = json.dumps(
+            sorted((rid, s) for rid, s in self.streams().items())
+        )
+        return hashlib.sha256(payload.encode()).hexdigest()
+
+
+class ReplicaSet:
+    """N serving replicas + router + chaos + snapshot replication."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Tree,
+        rules: ShardingRules,
+        flags: ExecFlags,
+        ecfg: EngineConfig,
+        n_replicas: int = 2,
+        *,
+        ranks_per_pod: int = 1,
+        injectors: Sequence[Injector] = (),
+        chaos_seed: int = 0,
+        snapshots: bool = True,
+        snapshot_cadence: int = 1,
+        layout_seed: Optional[int] = None,
+        recorder=None,
+    ):
+        self.cfg, self.params = cfg, params
+        self.rules, self.flags, self.ecfg = rules, flags, ecfg
+        self.n_replicas = n_replicas
+        self.pod_of = pod_domains(n_replicas, ranks_per_pod)
+        self.snapshots = snapshots
+        self.snapshot_cadence = max(int(snapshot_cadence), 1)
+        self.layout_seed = layout_seed
+        # membership bookkeeping always on: replica revival rides the
+        # derived rejoin events, whatever the injector mix
+        self.chaos = ChaosEngine(
+            n_replicas, 1, 1.0, injectors=list(injectors), seed=chaos_seed,
+            elastic=True,
+        )
+        self.engines: Dict[int, Optional[ServeEngine]] = {
+            r: self._fresh_engine(r) for r in range(n_replicas)
+        }
+        self.alive = set(range(n_replicas))
+        self.registry = KVSnapshotRegistry()
+        self.queue: List[RequestState] = []
+        self.requests: Dict[int, RequestState] = {}
+        self.events: List[ServeEvent] = []
+        self.recorder = recorder
+        self.acct: Dict[str, int] = {
+            k: 0 for k in (
+                "n_requests", "n_tokens", "n_kills", "n_revives",
+                "n_migrations", "n_restore_snapshot", "n_restore_replay",
+                "replayed_tokens", "restored_bytes",
+                "n_snapshots", "snapshot_bytes",
+            )
+        }
+
+    def _fresh_engine(self, r: int) -> ServeEngine:
+        rng = (
+            np.random.default_rng([self.layout_seed, r])
+            if self.layout_seed is not None else None
+        )
+        return ServeEngine(
+            self.cfg, self.params, self.rules, self.flags, self.ecfg,
+            alloc_rng=rng,
+        )
+
+    # ------------------------------------------------------------------
+    def _emit(self, ev: ServeEvent, out: List[ServeEvent]) -> None:
+        out.append(ev)
+        self.events.append(ev)
+
+    def step(self, t: int, arrivals: Sequence[Request] = ()) -> List[ServeEvent]:
+        out: List[ServeEvent] = []
+        # 1. arrivals
+        for req in arrivals:
+            rs = RequestState(req)
+            self.queue.append(rs)
+            self.requests[req.rid] = rs
+            self.acct["n_requests"] += 1
+            self._emit(ServeEvent(t, "arrive", req=req.rid), out)
+
+        # 2. chaos: kills and revivals
+        outcome = self.chaos.step(t)
+        for ev in outcome.events:
+            if ev.kind == FAIL and ev.device is not None:
+                r = ev.device[0]
+                if r in self.alive:
+                    self._kill(r, t, out)
+            elif ev.kind == RANK_REJOIN and ev.rank is not None:
+                if ev.rank not in self.alive:
+                    self.engines[ev.rank] = self._fresh_engine(ev.rank)
+                    self.alive.add(ev.rank)
+                    self.acct["n_revives"] += 1
+                    self._emit(ServeEvent(t, "revive", replica=ev.rank), out)
+
+        # 3. admissions (fresh requests and migrants, least-loaded first)
+        for r in sorted(self.alive,
+                        key=lambda r: (self.engines[r].n_active, r)):
+            self._admit_into(r, t, out)
+
+        # 4. decode rounds
+        for r in sorted(self.alive):
+            for rs, tok, done in self.engines[r].decode_round(t):
+                self.acct["n_tokens"] += 1
+                self._emit(
+                    ServeEvent(t, "token", req=rs.rid, replica=r, token=tok),
+                    out,
+                )
+                if done:
+                    self.registry.drop(rs.rid)
+                    self._emit(ServeEvent(t, "complete", req=rs.rid,
+                                          replica=r), out)
+
+        # 5. KV-snapshot replication (covers this step's tokens)
+        if self.snapshots and t % self.snapshot_cadence == 0:
+            peers = ring_peers(sorted(self.alive), self.pod_of)
+            for r in sorted(self.alive):
+                holder = peers.get(r)
+                if holder is None:
+                    continue
+                eng = self.engines[r]
+                for slot, rs in eng.live_states():
+                    pages, n_emitted, cur_len, nbytes = eng.snapshot_slot(slot)
+                    self.registry.push(KVSnapshot(
+                        rid=rs.rid, holder=holder, step=t,
+                        n_emitted=n_emitted, cur_len=cur_len,
+                        pages=pages, nbytes=nbytes,
+                    ))
+                    self.acct["n_snapshots"] += 1
+                    self.acct["snapshot_bytes"] += nbytes
+
+        if self.recorder is not None:
+            self.recorder.record(out)
+        return out
+
+    def _kill(self, r: int, t: int, out: List[ServeEvent]) -> None:
+        # the dead replica's pages are gone, and so is every snapshot it
+        # *held* for peers; snapshots of its own requests held elsewhere
+        # survive and drive the snapshot-path migration
+        self.registry.lose_holder(r)
+        migrants = self.engines[r].kill()
+        self.engines[r] = None
+        self.alive.discard(r)
+        self.acct["n_kills"] += 1
+        self._emit(ServeEvent(t, "kill", replica=r,
+                              n_inflight=len(migrants)), out)
+        # migrants wait at the front of the queue, in rid order
+        self.queue[:0] = migrants
+
+    def _admit_into(self, r: int, t: int, out: List[ServeEvent]) -> None:
+        eng = self.engines[r]
+        if self.ecfg.admission == "lockstep":
+            # baseline: refill only once the whole batch has drained
+            if eng.n_active > 0:
+                return
+            budget = self.ecfg.max_slots
+        else:
+            budget = self.ecfg.max_prefills_per_step
+        admitted = 0
+        while self.queue and admitted < budget:
+            rs = self.queue[0]
+            if not eng.can_admit(rs):
+                break
+            self.queue.pop(0)
+            if rs.emitted:  # migrated / re-queued: restore, don't restart
+                snap = self.registry.get(rs.rid)
+                path, replayed = eng.admit_restored(rs, snap, t)
+                key = "n_restore_snapshot" if path == "snapshot" else \
+                    "n_restore_replay"
+                self.acct[key] += 1
+                self.acct["n_migrations"] += 1
+                self.acct["replayed_tokens"] += replayed
+                if snap is not None:
+                    self.acct["restored_bytes"] += snap.nbytes
+                self._emit(ServeEvent(
+                    t, "migrate", req=rs.rid, replica=r, path=path,
+                    replayed=replayed,
+                    nbytes=snap.nbytes if snap is not None else 0,
+                ), out)
+            else:
+                tok = eng.admit_new(rs, t)
+                self.acct["n_tokens"] += 1
+                self._emit(ServeEvent(t, "admit", req=rs.rid, replica=r), out)
+                self._emit(ServeEvent(t, "token", req=rs.rid, replica=r,
+                                      token=tok), out)
+                if rs.done:  # max_new_tokens == 1: done at the prefill
+                    self.registry.drop(rs.rid)
+                    self._emit(ServeEvent(t, "complete", req=rs.rid,
+                                          replica=r), out)
+            admitted += 1
+
+    # ------------------------------------------------------------------
+    def run(self, workload: Sequence[Request], max_steps: int = 10_000
+            ) -> ServeResult:
+        check_workload_fits(workload, self.ecfg)
+        by_step: Dict[int, List[Request]] = {}
+        for req in workload:
+            by_step.setdefault(req.arrival_step, []).append(req)
+        step_wall: List[float] = []
+        t = 0
+        pending = {req.rid for req in workload}
+        while pending and t < max_steps:
+            t0 = time.perf_counter()
+            for ev in self.step(t, by_step.get(t, ())):
+                if ev.kind == "complete":
+                    pending.discard(ev.req)
+            step_wall.append(time.perf_counter() - t0)
+            t += 1
+        return ServeResult(
+            states=dict(self.requests),
+            accounting=dict(self.acct),
+            n_steps=t,
+            step_wall=step_wall,
+        )

@@ -1,0 +1,133 @@
+"""Serving requests, deterministic workloads, and per-request metrics.
+
+A :class:`Request` is immutable (what arrived); a :class:`RequestState` is
+the mutable serving-side record (emitted tokens, step-indexed latency marks,
+migration accounting).  Workloads are generated from a :class:`WorkloadSpec`
+with an isolated ``default_rng(seed)`` stream, so a serve trace header that
+pins the spec pins the exact request sequence on replay.
+
+Latency metrics are step-indexed (deterministic, replayable): TTFT is
+``first_token_step - arrival_step`` engine steps, TPOT the mean step gap
+between tokens.  Wall-clock percentiles live in ``benchmarks/serve_bench.py``
+(measured, not traced).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Request:
+    rid: int
+    arrival_step: int
+    prompt: Tuple[int, ...]
+    max_new_tokens: int
+
+    @property
+    def total_len(self) -> int:
+        """KV positions the fully-decoded request occupies."""
+        return len(self.prompt) + self.max_new_tokens
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """Deterministic open-loop arrival process (seeded)."""
+
+    n_requests: int = 16
+    vocab_size: int = 512
+    seed: int = 0
+    mean_interarrival_steps: float = 1.0
+    prompt_len: Tuple[int, int] = (4, 24)   # inclusive [lo, hi]
+    new_tokens: Tuple[int, int] = (4, 32)   # inclusive [lo, hi]
+
+    def to_json(self) -> dict:
+        return {
+            "n_requests": self.n_requests, "vocab_size": self.vocab_size,
+            "seed": self.seed,
+            "mean_interarrival_steps": self.mean_interarrival_steps,
+            "prompt_len": list(self.prompt_len),
+            "new_tokens": list(self.new_tokens),
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "WorkloadSpec":
+        return cls(
+            n_requests=int(d["n_requests"]), vocab_size=int(d["vocab_size"]),
+            seed=int(d["seed"]),
+            mean_interarrival_steps=float(d["mean_interarrival_steps"]),
+            prompt_len=tuple(d["prompt_len"]),
+            new_tokens=tuple(d["new_tokens"]),
+        )
+
+
+def build_workload(spec: WorkloadSpec) -> List[Request]:
+    """Requests in arrival order, a pure function of the spec."""
+    rng = np.random.default_rng(spec.seed)
+    t = 0.0
+    out: List[Request] = []
+    for rid in range(spec.n_requests):
+        t += rng.exponential(spec.mean_interarrival_steps)
+        plen = int(rng.integers(spec.prompt_len[0], spec.prompt_len[1] + 1))
+        gen = int(rng.integers(spec.new_tokens[0], spec.new_tokens[1] + 1))
+        prompt = tuple(
+            int(x) for x in rng.integers(0, spec.vocab_size, size=plen)
+        )
+        out.append(Request(rid, int(t), prompt, gen))
+    return out
+
+
+@dataclass
+class RequestState:
+    """One request's life on the serving side.
+
+    Invariant: ``cur_len`` (valid KV positions written) equals
+    ``len(prompt) + len(emitted) - 1`` once the prefill has emitted the
+    first token — each decode round consumes the last emitted token (writes
+    its K/V at ``cur_len``) and emits the next.
+    """
+
+    req: Request
+    emitted: List[int] = field(default_factory=list)
+    admit_step: Optional[int] = None
+    first_token_step: Optional[int] = None
+    last_token_step: Optional[int] = None
+    token_steps: List[int] = field(default_factory=list)
+    n_migrations: int = 0
+    replayed_tokens: int = 0
+    restored_bytes: int = 0
+
+    @property
+    def rid(self) -> int:
+        return self.req.rid
+
+    @property
+    def done(self) -> bool:
+        return len(self.emitted) >= self.req.max_new_tokens
+
+    @property
+    def cur_len(self) -> int:
+        return len(self.req.prompt) + max(len(self.emitted) - 1, 0)
+
+    def record_token(self, token: int, step: int) -> None:
+        self.emitted.append(int(token))
+        self.token_steps.append(step)
+        if self.first_token_step is None:
+            self.first_token_step = step
+        self.last_token_step = step
+
+    # -- step-indexed latency metrics ----------------------------------
+    @property
+    def ttft_steps(self) -> Optional[int]:
+        if self.first_token_step is None:
+            return None
+        return self.first_token_step - self.req.arrival_step
+
+    @property
+    def tpot_steps(self) -> Optional[float]:
+        if self.first_token_step is None or len(self.emitted) < 2:
+            return None
+        span = self.last_token_step - self.first_token_step
+        return span / (len(self.emitted) - 1)

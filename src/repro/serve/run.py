@@ -1,0 +1,218 @@
+"""Serve-engine driver: run / record / replay deterministic serve traces.
+
+Record a golden trace:
+
+    PYTHONPATH=src python -m repro.serve.run --record trace.jsonl \
+        --n-replicas 3 --chaos pod --fail-every 12 --heal-steps 6
+
+Replay it bit-exactly (the CI serve-smoke job; non-zero exit on drift):
+
+    PYTHONPATH=src python -m repro.serve.run --replay trace.jsonl \
+        --replay-record /tmp/replayed.jsonl
+
+Replay rebuilds *everything* from the trace header — model config, engine
+geometry, workload spec, chaos injectors, seeds — re-simulates the full
+serve run, and asserts the event stream, token streams, and failover
+accounting match the recording.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from dataclasses import asdict
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ParallelConfig, get_config, reduced
+from repro.ft.injectors import Injector, PodOutageInjector, ScheduledInjector
+from repro.ft.events import FAIL, FailureEvent
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import build_flags, build_rules
+from repro.models.params import init_params
+from repro.serve.engine import EngineConfig
+from repro.serve.replicas import ReplicaSet, ServeResult, check_workload_fits
+from repro.serve.request import WorkloadSpec, build_workload
+from repro.serve.trace import (
+    ServeTraceHeader,
+    ServeTraceRecorder,
+    load_serve_trace,
+    verify_serve_replay,
+)
+
+DEFAULT_CONFIG = "qwen3-0.6b"
+
+
+def injectors_from_spec(spec: dict) -> List[Injector]:
+    """Chaos injectors from the JSON-able spec pinned in the trace header."""
+    kind = spec.get("kind", "none")
+    if kind == "none":
+        return []
+    if kind == "pod":
+        return [PodOutageInjector(
+            fail_interval_s=float(spec["fail_every_steps"]),
+            heal_time_s=float(spec["heal_steps"]),
+            ranks_per_pod=int(spec.get("ranks_per_pod", 1)),
+            transfer_steps=int(spec.get("transfer_steps", 1)),
+        )]
+    if kind == "scripted":
+        return [ScheduledInjector([
+            FailureEvent(step=int(s), kind=FAIL, device=(int(r), 0),
+                         duration_steps=int(d), source="scripted")
+            for s, r, d in spec["kills"]
+        ])]
+    raise ValueError(f"unknown chaos spec kind {kind!r}")
+
+
+def build_replica_set(
+    header: ServeTraceHeader, recorder=None
+) -> Tuple[ReplicaSet, List]:
+    """(ReplicaSet, workload) from a (possibly freshly-built) header."""
+    cfg = get_config(header.config)
+    if header.reduced:
+        cfg = reduced(cfg, dtype=header.dtype)
+    mesh = make_host_mesh()
+    par = ParallelConfig(fsdp=False)
+    rules = build_rules(cfg, mesh, par)
+    flags = build_flags(cfg, par, mesh)
+    params = init_params(
+        cfg, jax.random.PRNGKey(header.seed), jnp.dtype(cfg.dtype)
+    )
+    ecfg = EngineConfig(**header.engine)
+    spec = WorkloadSpec.from_json(header.workload)
+    if spec.vocab_size != cfg.vocab_size:
+        raise ValueError(
+            f"workload vocab {spec.vocab_size} != model vocab {cfg.vocab_size}"
+        )
+    workload = build_workload(spec)
+    check_workload_fits(workload, ecfg)  # before any trace header is written
+    rs = ReplicaSet(
+        cfg, params, rules, flags, ecfg,
+        n_replicas=header.n_replicas,
+        ranks_per_pod=header.ranks_per_pod,
+        injectors=injectors_from_spec(header.chaos),
+        chaos_seed=header.seed,
+        snapshots=header.snapshots,
+        snapshot_cadence=header.snapshot_cadence,
+        layout_seed=header.layout_seed,
+        recorder=recorder,
+    )
+    return rs, workload
+
+
+def run_from_header(header: ServeTraceHeader,
+                    record_path: Optional[str] = None) -> Tuple[ServeResult, List]:
+    recorder = ServeTraceRecorder(record_path) if record_path else None
+    rset, workload = build_replica_set(header, recorder=recorder)
+    if recorder is not None:  # header only once the setup validated
+        recorder.write_header(header)
+    result = rset.run(workload)
+    if recorder is not None:
+        recorder.close(result.n_steps, result.streams_sha256(),
+                       result.accounting)
+    return result, rset.events
+
+
+def replay_serve_trace(path, replay_record: Optional[str] = None) -> List[str]:
+    """Re-simulate ``path`` and return mismatch descriptions (empty = exact)."""
+    trace = load_serve_trace(path)
+    result, events = run_from_header(trace.header, record_path=replay_record)
+    return verify_serve_replay(
+        trace, events, accounting=result.accounting,
+        streams_sha256=result.streams_sha256(),
+    )
+
+
+def header_from_args(args) -> ServeTraceHeader:
+    if args.chaos == "pod":
+        chaos = {
+            "kind": "pod", "fail_every_steps": args.fail_every,
+            "heal_steps": args.heal_steps,
+            "ranks_per_pod": args.ranks_per_pod,
+            "transfer_steps": args.transfer_steps,
+        }
+    else:
+        chaos = {"kind": "none"}
+    cfg = get_config(args.config)
+    vocab = reduced(cfg).vocab_size if args.reduced else cfg.vocab_size
+    spec = WorkloadSpec(
+        n_requests=args.requests, vocab_size=vocab, seed=args.seed,
+        mean_interarrival_steps=args.mean_interarrival,
+        prompt_len=(args.prompt_min, args.prompt_max),
+        new_tokens=(args.gen_min, args.gen_max),
+    )
+    ecfg = EngineConfig(
+        max_slots=args.slots, page_size=args.page_size,
+        pages_per_slot=args.pages_per_slot,
+    )
+    return ServeTraceHeader(
+        config=args.config, reduced=args.reduced, dtype="float32",
+        seed=args.seed, n_replicas=args.n_replicas,
+        ranks_per_pod=args.ranks_per_pod,
+        snapshots=not args.no_snapshots,
+        snapshot_cadence=args.snapshot_cadence,
+        layout_seed=args.seed,
+        engine=asdict(ecfg), workload=spec.to_json(), chaos=chaos,
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", default=DEFAULT_CONFIG)
+    ap.add_argument("--full", dest="reduced", action="store_false",
+                    help="serve the full-size config (default: reduced)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--n-replicas", type=int, default=3)
+    ap.add_argument("--ranks-per-pod", type=int, default=1)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--pages-per-slot", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--mean-interarrival", type=float, default=1.5)
+    ap.add_argument("--prompt-min", type=int, default=4)
+    ap.add_argument("--prompt-max", type=int, default=20)
+    ap.add_argument("--gen-min", type=int, default=4)
+    ap.add_argument("--gen-max", type=int, default=24)
+    ap.add_argument("--chaos", default="pod", choices=["none", "pod"])
+    ap.add_argument("--fail-every", type=float, default=12.0,
+                    help="mean steps between pod outages")
+    ap.add_argument("--heal-steps", type=float, default=6.0)
+    ap.add_argument("--transfer-steps", type=int, default=1)
+    ap.add_argument("--snapshot-cadence", type=int, default=2)
+    ap.add_argument("--no-snapshots", action="store_true")
+    ap.add_argument("--record", default=None, metavar="PATH")
+    ap.add_argument("--replay", default=None, metavar="PATH")
+    ap.add_argument("--replay-record", default=None, metavar="PATH",
+                    help="also record the replayed run (diffable on drift)")
+    args = ap.parse_args(argv)
+
+    if args.replay:
+        problems = replay_serve_trace(args.replay, args.replay_record)
+        if problems:
+            print(f"serve replay DIVERGED from {args.replay}:")
+            for p in problems:
+                print(f"  {p}")
+            return 1
+        print(f"serve replay of {args.replay} is bit-exact")
+        return 0
+
+    header = header_from_args(args)
+    result, _ = run_from_header(header, record_path=args.record)
+    acct = result.accounting
+    done = sum(1 for rs in result.states.values() if rs.done)
+    print(
+        f"served {done}/{acct['n_requests']} requests, "
+        f"{acct['n_tokens']} tokens in {result.n_steps} steps; "
+        f"kills={acct['n_kills']} migrations={acct['n_migrations']} "
+        f"(snapshot={acct['n_restore_snapshot']} "
+        f"replay={acct['n_restore_replay']}, "
+        f"replayed_tokens={acct['replayed_tokens']})"
+    )
+    if args.record:
+        print(f"trace recorded to {args.record}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

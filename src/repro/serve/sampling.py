@@ -1,0 +1,22 @@
+"""Shared sampling head for the serve path.
+
+The vocab-padding slice + argmax lived inline in ``examples/serve_batched.py``
+(twice); it is the one place where ``ModelConfig.padded_vocab`` handling can
+silently go wrong at serve time — logits columns ``>= vocab_size`` are TP
+padding and must never win the argmax.  Both the example and the serve
+engine decode through this helper.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def greedy_token(logits: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Greedy next token over the *real* vocab columns.
+
+    logits: (..., V) with V >= cfg.vocab_size (TP-padded).  Returns (...,)
+    int32 token ids, always < cfg.vocab_size.
+    """
+    return jnp.argmax(logits[..., : cfg.vocab_size], axis=-1).astype(jnp.int32)

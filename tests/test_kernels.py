@@ -236,3 +236,40 @@ def test_flash_decode_matches_model_decode_attention():
     v = jax.random.normal(ks[2], (2, 128, 2, 32))
     o = ops.flash_decode(q, k, v, jnp.int32(100), block_k=64)
     np.testing.assert_allclose(o, decode_attention(q, k, v, 100), atol=2e-5)
+
+
+def test_flash_decode_ragged_lens():
+    """Per-slot (B,) cur_len — the continuous-batching serve layout — must
+    match the per-row scalar reference for every slot independently."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    B, Smax, H, KV, hd = 4, 256, 4, 2, 32
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    k = jax.random.normal(ks[1], (B, Smax, KV, hd))
+    v = jax.random.normal(ks[2], (B, Smax, KV, hd))
+    lens = jnp.asarray([1, 77, 200, 256], jnp.int32)
+    o = ops.flash_decode(q, k, v, lens, block_k=64)
+    ref = jnp.concatenate([
+        flash_decode_ref(q[i:i + 1], k[i:i + 1], v[i:i + 1], int(lens[i]))
+        for i in range(B)
+    ])
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ref), atol=2e-5)
+
+
+def test_decode_attention_ragged_matches_scalar_rows():
+    """The jnp decode path (what the serve engine runs on CPU) must treat a
+    (B,) cur_len exactly as B independent scalar-length rows — bitwise."""
+    from repro.models.layers import decode_attention
+
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    B, Smax, H, KV, hd = 3, 64, 4, 2, 32
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    k = jax.random.normal(ks[1], (B, Smax, KV, hd))
+    v = jax.random.normal(ks[2], (B, Smax, KV, hd))
+    lens = jnp.asarray([5, 33, 64], jnp.int32)
+    o = decode_attention(q, k, v, lens)
+    for i in range(B):
+        row = decode_attention(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                               int(lens[i]))
+        np.testing.assert_allclose(
+            np.asarray(o[i:i + 1]), np.asarray(row), atol=2e-5
+        )

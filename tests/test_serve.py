@@ -1,0 +1,411 @@
+"""Serve engine: continuous batching, paged KV, chaos-driven failover.
+
+The failover determinism tests pin the PR's core claim: a replica killed
+mid-decode yields bit-identical token streams for migrated requests, via
+both restore paths (KV-page snapshot and deterministic re-prefill).
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.ft.events import FAIL, FailureEvent
+from repro.ft.injectors import (
+    PodOutageInjector,
+    ScheduledInjector,
+    chaos_preset,
+)
+from repro.ft.failures import SCENARIOS, ChaosEngine
+from repro.models.kvcache import cache_structs
+from repro.models.model import ExecFlags, forward_decode, forward_prefill
+from repro.models.params import init_params
+from repro.serve.engine import EngineConfig
+from repro.serve.kvpool import check_attention_only
+from repro.serve.replicas import ReplicaSet
+from repro.serve.request import WorkloadSpec, build_workload
+from repro.serve.sampling import greedy_token
+from repro.serve.trace import (
+    ServeEvent,
+    load_serve_trace,
+    verify_serve_replay,
+)
+
+SERVE_CFG = ModelConfig(
+    name="serve-tiny", n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab_size=256, dtype="float32",
+)
+FLAGS = ExecFlags(scan_layers=True, remat="none", attn_chunk=64)
+ECFG = EngineConfig(max_slots=3, page_size=4, pages_per_slot=6)
+SPEC = WorkloadSpec(
+    n_requests=8, vocab_size=256, seed=3, mean_interarrival_steps=1.0,
+    prompt_len=(3, 12), new_tokens=(3, 10),
+)
+
+
+@pytest.fixture(scope="module")
+def setup(local_rules):
+    params = init_params(SERVE_CFG, jax.random.PRNGKey(0), jnp.float32)
+    return SERVE_CFG, params, local_rules, FLAGS
+
+
+def run_set(setup, *, ecfg=ECFG, n_replicas=1, injectors=(), snapshots=True,
+            snapshot_cadence=1, layout_seed=None, spec=SPEC, recorder=None,
+            ranks_per_pod=1):
+    cfg, params, rules, flags = setup
+    rset = ReplicaSet(
+        cfg, params, rules, flags, ecfg, n_replicas=n_replicas,
+        ranks_per_pod=ranks_per_pod, injectors=injectors, chaos_seed=0,
+        snapshots=snapshots, snapshot_cadence=snapshot_cadence,
+        layout_seed=layout_seed, recorder=recorder,
+    )
+    result = rset.run(build_workload(spec))
+    return rset, result
+
+
+def kill_at(step, replica, down=10_000):
+    """Scripted replica kill (device (replica, 0) of the 1-stage grid)."""
+    return ScheduledInjector([
+        FailureEvent(step=step, kind=FAIL, device=(replica, 0),
+                     duration_steps=down, source="scripted")
+    ])
+
+
+# ---------------------------------------------------------------------------
+# workload / sampling satellites
+# ---------------------------------------------------------------------------
+
+
+def test_workload_deterministic():
+    a, b = build_workload(SPEC), build_workload(SPEC)
+    assert a == b
+    assert [r.arrival_step for r in a] == sorted(r.arrival_step for r in a)
+    assert all(0 <= t < SPEC.vocab_size for r in a for t in r.prompt)
+    assert build_workload(dataclasses.replace(SPEC, seed=4)) != a
+
+
+def test_greedy_token_ignores_vocab_padding():
+    cfg = dataclasses.replace(SERVE_CFG, vocab_size=250)
+    assert cfg.padded_vocab == 256
+    logits = jnp.zeros((2, cfg.padded_vocab))
+    logits = logits.at[:, 252].set(10.0).at[0, 17].set(5.0).at[1, 200].set(5.0)
+    toks = np.asarray(greedy_token(logits, cfg))
+    # col 252 is TP padding: the real argmax must win
+    assert toks.tolist() == [17, 200]
+
+
+def test_engine_rejects_ssm_configs():
+    from repro.configs.base import SSMConfig
+
+    ssm = ModelConfig(
+        name="s", family="ssm", n_layers=2, d_model=64, n_heads=1,
+        n_kv_heads=1, d_ff=0, vocab_size=64, dtype="float32",
+        ssm=SSMConfig(d_state=16, head_dim=16, chunk=8),
+    )
+    with pytest.raises(ValueError, match="attention-mixer"):
+        check_attention_only(ssm)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching over the paged pool
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def baseline(setup):
+    """No-chaos single-replica run shared by the equality tests."""
+    rset, result = run_set(setup)
+    return rset, result
+
+
+def test_serves_all_requests(baseline):
+    rset, result = baseline
+    workload = build_workload(SPEC)
+    assert len(result.states) == SPEC.n_requests
+    for req in workload:
+        rs = result.states[req.rid]
+        assert rs.done
+        assert len(rs.emitted) == req.max_new_tokens
+        assert rs.ttft_steps is not None and rs.ttft_steps >= 0
+        assert all(0 <= t < SERVE_CFG.vocab_size for t in rs.emitted)
+    # eviction returned every page: the pool is fully reusable
+    eng = rset.engines[0]
+    assert eng.alloc.free_count == ECFG.resolved_n_pages - 1
+    assert eng.n_active == 0
+
+
+def test_single_token_requests_never_overgenerate(setup):
+    """max_new_tokens == 1 completes at the prefill — exactly one token."""
+    spec = dataclasses.replace(SPEC, n_requests=5, new_tokens=(1, 2))
+    _, result = run_set(setup, spec=spec)
+    for req in build_workload(spec):
+        rs = result.states[req.rid]
+        assert rs.done
+        assert len(rs.emitted) == req.max_new_tokens
+    assert result.accounting["n_tokens"] == sum(
+        r.max_new_tokens for r in build_workload(spec)
+    )
+
+
+def test_oversized_requests_rejected_up_front(setup):
+    """A request that can never fit a slot fails fast at run start, not
+    with a mid-flight crash when it reaches the queue head."""
+    spec = dataclasses.replace(
+        SPEC, new_tokens=(ECFG.max_len, ECFG.max_len + 4)
+    )
+    with pytest.raises(ValueError, match="max_len"):
+        run_set(setup, spec=spec)
+
+
+def test_interleaved_admission_beats_lockstep(setup, baseline):
+    _, cont = baseline
+    lockstep = dataclasses.replace(ECFG, admission="lockstep")
+    _, lock = run_set(setup, ecfg=lockstep)
+    assert lock.streams() == cont.streams()  # same tokens, different schedule
+    assert cont.n_steps < lock.n_steps
+
+
+def test_paged_decode_matches_dense_reference(setup, baseline):
+    """Engine tokens == a dense, non-paged, batch-1 reference decode."""
+    cfg, params, rules, flags = setup
+    _, result = baseline
+    for req in build_workload(SPEC)[:4]:
+        S = len(req.prompt)
+        cs = cache_structs(cfg, 1, ECFG.max_len, jnp.float32)
+        cache, logits = forward_prefill(
+            params, {"tokens": jnp.asarray([req.prompt], jnp.int32)},
+            cfg, rules, flags, cs,
+        )
+        toks = [int(greedy_token(logits[0], cfg))]
+        cur = S
+        while len(toks) < req.max_new_tokens:
+            cache, logits = forward_decode(
+                params, cache, jnp.asarray([toks[-1]], jnp.int32),
+                jnp.int32(cur), cfg, rules, flags,
+            )
+            toks.append(int(greedy_token(logits[0], cfg)))
+            cur += 1
+        assert toks == result.states[req.rid].emitted, f"req {req.rid}"
+
+
+@pytest.mark.parametrize("layout_seed", [7, 1234])
+def test_random_page_layouts_are_bit_identical(setup, baseline, layout_seed):
+    _, ref = baseline
+    _, shuffled = run_set(setup, layout_seed=layout_seed)
+    assert shuffled.streams() == ref.streams()
+
+
+# ---------------------------------------------------------------------------
+# failover determinism — the acceptance criterion
+# ---------------------------------------------------------------------------
+
+
+def test_failover_snapshot_path_bit_identical(setup, baseline):
+    _, ref = baseline
+    _, killed = run_set(
+        setup, n_replicas=2, injectors=[kill_at(5, 0)], snapshot_cadence=1,
+    )
+    acct = killed.accounting
+    assert acct["n_kills"] == 1
+    assert acct["n_migrations"] >= 1
+    # cadence-1 snapshots are always fresh: every migration restores pages
+    assert acct["n_restore_snapshot"] == acct["n_migrations"]
+    assert acct["n_restore_replay"] == 0
+    assert acct["restored_bytes"] > 0
+    assert killed.streams() == ref.streams()
+    migrated = [rs for rs in killed.states.values() if rs.n_migrations]
+    assert migrated and all(rs.done for rs in migrated)
+
+
+def test_failover_replay_path_bit_identical(setup, baseline):
+    _, ref = baseline
+    _, killed = run_set(
+        setup, n_replicas=2, injectors=[kill_at(5, 0)], snapshots=False,
+    )
+    acct = killed.accounting
+    assert acct["n_kills"] == 1
+    assert acct["n_restore_replay"] == acct["n_migrations"] >= 1
+    assert acct["n_restore_snapshot"] == 0
+    assert acct["replayed_tokens"] >= 1
+    assert killed.streams() == ref.streams()
+
+
+def test_failover_stale_snapshot_replays_tail(setup, baseline):
+    """A coarse snapshot cadence restores old pages + teacher-forces the
+    tokens emitted after the snapshot — still bit-identical."""
+    _, ref = baseline
+    _, killed = run_set(
+        setup, n_replicas=2, injectors=[kill_at(6, 0)], snapshot_cadence=4,
+    )
+    assert killed.accounting["n_migrations"] >= 1
+    assert killed.streams() == ref.streams()
+
+
+def test_total_outage_waits_for_revival(setup, baseline):
+    """Both replicas die; queued + migrated requests finish after rejoin,
+    with streams still bit-identical."""
+    _, ref = baseline
+    inj = ScheduledInjector([
+        FailureEvent(step=4, kind=FAIL, device=(0, 0), duration_steps=6,
+                     source="scripted"),
+        FailureEvent(step=4, kind=FAIL, device=(1, 0), duration_steps=6,
+                     source="scripted"),
+    ])
+    rset, killed = run_set(setup, n_replicas=2, injectors=[inj])
+    assert killed.accounting["n_kills"] == 2
+    assert killed.accounting["n_revives"] == 2
+    assert all(rs.done for rs in killed.states.values())
+    assert killed.streams() == ref.streams()
+
+
+# ---------------------------------------------------------------------------
+# PodOutageInjector (satellite: the ROADMAP multi-pod leftover)
+# ---------------------------------------------------------------------------
+
+
+def test_pod_outage_takes_whole_pods():
+    inj = PodOutageInjector(4.0, 3.0, ranks_per_pod=2, transfer_steps=1)
+    eng = ChaosEngine(4, 2, 1.0, injectors=[inj], seed=5)
+    assert eng.elastic  # auto-enabled membership bookkeeping
+    fails = {}
+    for t in range(40):
+        for ev in eng.step(t).events:
+            if ev.kind == FAIL and ev.source == "pod-outage":
+                fails.setdefault(t, []).append(ev.device)
+    assert fails, "no pod outage in 40 steps at interval 4"
+    for t, devs in fails.items():
+        ranks = sorted({r for r, _ in devs})
+        pods = {r // 2 for r in ranks}
+        assert len(pods) == 1, f"outage at {t} spans pods {pods}"
+        pod = pods.pop()
+        # the whole pod: both ranks, every stage
+        assert sorted(devs) == [
+            (r, s) for r in (2 * pod, 2 * pod + 1) for s in range(2)
+        ]
+
+
+def test_pod_outage_heals_and_rejoins():
+    inj = PodOutageInjector(3.0, 2.0, ranks_per_pod=2, transfer_steps=1)
+    eng = ChaosEngine(4, 1, 1.0, injectors=[inj], seed=1)
+    kinds = {"fail": 0, "heal": 0, "rejoin": 0}
+    for t in range(60):
+        for ev in eng.step(t).events:
+            if ev.kind in kinds:
+                kinds[ev.kind] += 1
+    assert kinds["fail"] > 0 and kinds["heal"] > 0 and kinds["rejoin"] > 0
+
+
+def test_pod_preset_uses_pod_outage_injector():
+    injs = chaos_preset("pod", SCENARIOS["high"])
+    assert any(isinstance(i, PodOutageInjector) for i in injs)
+    spec = [i.describe() for i in injs if isinstance(i, PodOutageInjector)][0]
+    assert spec["ranks_per_pod"] == 2
+
+
+def test_pod_aware_snapshot_placement(setup, baseline):
+    """With 2-replica pods, snapshots are held outside the owner's pod, so a
+    whole-pod kill still leaves every migrant a snapshot to restore from."""
+    _, ref = baseline
+    inj = ScheduledInjector([
+        FailureEvent(step=5, kind=FAIL, device=(r, 0), duration_steps=10_000,
+                     source="scripted")
+        for r in (0, 1)  # pod 0 = replicas {0, 1}
+    ])
+    _, killed = run_set(
+        setup, n_replicas=4, ranks_per_pod=2, injectors=[inj],
+        snapshot_cadence=1,
+    )
+    acct = killed.accounting
+    assert acct["n_kills"] == 2
+    assert acct["n_restore_replay"] == 0  # ring skipped same-pod holders
+    assert acct["n_restore_snapshot"] == acct["n_migrations"]
+    assert killed.streams() == ref.streams()
+
+
+# ---------------------------------------------------------------------------
+# serve traces
+# ---------------------------------------------------------------------------
+
+
+def test_serve_event_json_roundtrip():
+    evs = [
+        ServeEvent(3, "token", req=1, replica=0, token=42),
+        ServeEvent(5, "migrate", req=2, replica=1, path="snapshot",
+                   replayed=3, nbytes=1024),
+        ServeEvent(6, "kill", replica=0, n_inflight=2),
+    ]
+    for ev in evs:
+        assert ServeEvent.from_json(json.loads(json.dumps(ev.to_json()))) == ev
+    with pytest.raises(ValueError, match="unknown serve event"):
+        ServeEvent(0, "nope")
+
+
+@pytest.mark.chaos
+def test_serve_trace_record_replay_roundtrip(tmp_path):
+    from repro.serve.run import replay_serve_trace, run_from_header
+    from repro.serve.trace import ServeTraceHeader
+
+    header = ServeTraceHeader(
+        config="qwen3-0.6b", seed=0, n_replicas=2, ranks_per_pod=1,
+        engine=dataclasses.asdict(
+            EngineConfig(max_slots=3, page_size=8, pages_per_slot=4)
+        ),
+        workload=WorkloadSpec(
+            n_requests=6, vocab_size=512, seed=2, prompt_len=(3, 10),
+            new_tokens=(3, 8),
+        ).to_json(),
+        chaos={"kind": "scripted", "kills": [[4, 0, 10000]]},
+        snapshot_cadence=1,
+    )
+    path = tmp_path / "serve_trace.jsonl"
+    result, _ = run_from_header(header, record_path=str(path))
+    assert result.accounting["n_kills"] == 1
+    assert replay_serve_trace(str(path)) == []
+
+    # tamper with one token event: the replay must flag the divergence
+    lines = path.read_text().splitlines()
+    idx, d = next(
+        (i, json.loads(ln)) for i, ln in enumerate(lines)
+        if json.loads(ln).get("kind") == "token"
+    )
+    d["token"] = (d["token"] + 1) % 512
+    lines[idx] = json.dumps(d)
+    bad = tmp_path / "tampered.jsonl"
+    bad.write_text("\n".join(lines) + "\n")
+    assert replay_serve_trace(str(bad)) != []
+
+
+@pytest.mark.chaos
+def test_golden_serve_trace_replays_bit_exactly():
+    from repro.serve.run import replay_serve_trace
+
+    problems = replay_serve_trace("tests/data/golden_trace_serve.jsonl")
+    assert problems == [], "\n".join(problems)
+
+
+def test_verify_serve_replay_reports_accounting_drift(setup, tmp_path):
+    from repro.serve.trace import ServeTraceRecorder
+
+    recorder = ServeTraceRecorder(tmp_path / "t.jsonl")
+    from repro.serve.trace import ServeTraceHeader
+
+    recorder.write_header(ServeTraceHeader(
+        config="serve-tiny", seed=0, n_replicas=1, ranks_per_pod=1,
+        engine=dataclasses.asdict(ECFG), workload=SPEC.to_json(),
+        chaos={"kind": "none"},
+    ))
+    rset, result = run_set(setup, recorder=recorder)
+    recorder.close(result.n_steps, result.streams_sha256(),
+                   result.accounting)
+    trace = load_serve_trace(tmp_path / "t.jsonl")
+    assert trace.footer is not None
+    assert verify_serve_replay(
+        trace, rset.events, accounting=result.accounting,
+        streams_sha256=result.streams_sha256(),
+    ) == []
+    drift = dict(result.accounting)
+    drift["n_tokens"] += 1
+    assert verify_serve_replay(trace, rset.events, accounting=drift)

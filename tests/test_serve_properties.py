@@ -1,0 +1,101 @@
+"""Hypothesis invariants for the paged-KV page allocator.
+
+The pool-safety properties the serve engine's failover story rests on:
+pages are never shared by two live slots, eviction never frees a live page
+(only the evicted slot's own pages return to the free list), the null page
+is never allocated, and pages are conserved through any alloc/free/reuse
+sequence.
+"""
+from tests.conftest import require_hypothesis
+
+require_hypothesis()
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serve.kvpool import NULL_PAGE, PageAllocator, pages_needed  # noqa: E402
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+N_PAGES = 17   # 16 allocatable + null
+PAGE_SIZE = 4
+N_SLOTS = 5
+
+ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("ensure"), st.integers(0, N_SLOTS - 1),
+                  st.integers(1, 3 * PAGE_SIZE)),
+        st.tuples(st.just("grow"), st.integers(0, N_SLOTS - 1),
+                  st.integers(1, 6 * PAGE_SIZE)),
+        st.tuples(st.just("free"), st.integers(0, N_SLOTS - 1),
+                  st.integers(0, 0)),
+    ),
+    min_size=1, max_size=40,
+)
+
+
+def check_invariants(alloc: PageAllocator, shadow):
+    live = alloc.live_pages()
+    # 1. no page belongs to two live slots
+    total = sum(len(t) for t in alloc.tables.values())
+    assert total == len(live), "a page is shared by two live slots"
+    # 2. the null page is never handed out
+    assert NULL_PAGE not in live
+    assert NULL_PAGE not in alloc._free
+    # 3. conservation: free + live == all allocatable pages
+    assert len(live) + alloc.free_count == N_PAGES - 1
+    assert live.isdisjoint(alloc._free)
+    # 4. the allocator's tables match the shadow model exactly
+    assert {s: len(t) for s, t in alloc.tables.items() if t} == {
+        s: n for s, n in shadow.items() if n
+    }
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=ops, layout_seed=st.integers(0, 2**16))
+def test_allocator_invariants(ops, layout_seed):
+    alloc = PageAllocator(
+        N_PAGES, PAGE_SIZE, rng=np.random.default_rng(layout_seed)
+    )
+    shadow = {}  # slot -> page count (reference model)
+    for kind, slot, n_tokens in ops:
+        if kind == "free":
+            before = set(alloc.tables.get(slot, ()))
+            live_others = alloc.live_pages() - before
+            freed = alloc.free(slot)
+            # eviction never frees another slot's (live) page
+            assert set(freed) == before
+            assert live_others == alloc.live_pages()
+            shadow.pop(slot, None)
+        else:
+            need = pages_needed(n_tokens, PAGE_SIZE)
+            have = shadow.get(slot, 0)
+            grow = max(need - have, 0)
+            if grow > alloc.free_count:
+                with pytest.raises(MemoryError):
+                    alloc.ensure(slot, n_tokens)
+                # a failed allocation must not leak or mutate state
+            else:
+                new = alloc.ensure(slot, n_tokens)
+                assert len(new) == grow
+                shadow[slot] = max(have, need)
+                assert alloc.capacity(slot) >= n_tokens
+        check_invariants(alloc, shadow)
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(1, 500), ps=st.integers(1, 64))
+def test_pages_needed(n, ps):
+    got = pages_needed(n, ps)
+    assert (got - 1) * ps < n <= got * ps
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_shuffled_layouts_allocate_distinct_valid_pages(seed):
+    alloc = PageAllocator(N_PAGES, PAGE_SIZE,
+                          rng=np.random.default_rng(seed))
+    got = alloc.ensure(0, (N_PAGES - 1) * PAGE_SIZE)
+    assert sorted(got) == list(range(1, N_PAGES))
+    with pytest.raises(MemoryError):
+        alloc.ensure(1, 1)
