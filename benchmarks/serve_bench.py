@@ -13,6 +13,17 @@ and wall-clock TTFT/TPOT percentiles, and failover recovery cost.  The
 acceptance bar: continuous beats lock-step tok/s at equal batch size (same
 model, same kernels — the win is purely scheduling).
 
+Two perf sections ride along:
+
+  * ``paged_decode``   — the same workload decoded through the dense
+    ``gather_pages`` round-trip vs the page-table-walking flash-decode
+    kernel: modeled per-decode-step KV bytes touched (the zero-copy win —
+    pages covering each slot vs every table entry of every slot), the
+    wall-clock comparison, and a token-equality pin;
+  * ``prefix_sharing`` — the shared-prefix workload with COW page sharing:
+    forked/copied page counts, prefill tokens skipped, and the page-savings
+    fraction, again pinned token-equal against the unshared run.
+
     PYTHONPATH=src python benchmarks/serve_bench.py --out BENCH_serve.json
 """
 from __future__ import annotations
@@ -41,7 +52,7 @@ def _pctl(xs, q):
 
 
 def run_mode(cfg, params, rules, flags, ecfg, workload, *, n_replicas=1,
-             chaos=None, snapshot_cadence=1):
+             chaos=None, snapshot_cadence=1, keep_result=False):
     injs = injectors_from_spec(chaos or {"kind": "none"})
     rset = ReplicaSet(
         cfg, params, rules, flags, ecfg, n_replicas=n_replicas,
@@ -67,7 +78,7 @@ def run_mode(cfg, params, rules, flags, ecfg, workload, *, n_replicas=1,
 
     ttft_steps = [rs.ttft_steps for rs in states]
     tpot_steps = [rs.tpot_steps for rs in states if rs.tpot_steps is not None]
-    return {
+    stats = {
         "n_requests": acct["n_requests"],
         "n_tokens": acct["n_tokens"],
         "engine_steps": result.n_steps,
@@ -88,6 +99,76 @@ def run_mode(cfg, params, rules, flags, ecfg, workload, *, n_replicas=1,
         "n_restore_replay": acct["n_restore_replay"],
         "replayed_tokens": acct["replayed_tokens"],
         "restored_bytes": acct["restored_bytes"],
+        "decode_rounds": acct["decode_rounds"],
+        "kv_bytes_dense": acct["kv_bytes_dense"],
+        "kv_bytes_paged": acct["kv_bytes_paged"],
+    }
+    if keep_result:
+        return stats, result
+    return stats
+
+
+def paged_decode_section(cfg, params, rules, flags, ecfg, workload, dense_run):
+    """Dense gather/scatter vs page-table-walking kernel on one workload.
+
+    ``dense_run`` is main()'s already-warmed-and-measured continuous run —
+    the same (ecfg, workload) this section needs, so the dense side is not
+    re-run.  The modeled traffic comes from the engine's deterministic
+    accounting; the wall-clock numbers compare the two data paths
+    end-to-end (on CPU the Pallas kernel runs in interpret mode, so the
+    modeled bytes — not the wall clock — carry the HBM-traffic claim).
+    """
+    paged_cfg = dataclasses.replace(ecfg, use_paged_kernel=True)
+    run_mode(cfg, params, rules, flags, paged_cfg, workload)  # warm compiles
+    dense, dres = dense_run
+    paged, pres = run_mode(cfg, params, rules, flags, paged_cfg, workload,
+                           keep_result=True)
+    rounds = max(dense["decode_rounds"], 1)
+    return {
+        "dense": dense,
+        "paged": paged,
+        "kv_bytes_per_round_dense": dense["kv_bytes_dense"] / rounds,
+        "kv_bytes_per_round_paged": dense["kv_bytes_paged"] / rounds,
+        "bytes_reduction": (
+            dense["kv_bytes_dense"] / max(dense["kv_bytes_paged"], 1)
+        ),
+        "wall_speedup_paged": dense["wall_s"] / paged["wall_s"],
+        "tokens_equal": dres.streams() == pres.streams(),
+        "paged_reduces_bytes":
+            dense["kv_bytes_paged"] < dense["kv_bytes_dense"],
+    }
+
+
+def prefix_sharing_section(cfg, params, rules, flags, ecfg, spec):
+    """COW prefix sharing vs plain admission on a shared-prefix workload."""
+    # deliberately not page-aligned: the forked partial page exercises the
+    # write-triggered COW copy on every hit
+    shared_spec = dataclasses.replace(
+        spec, shared_prefix=2 * ecfg.page_size + ecfg.page_size // 2,
+        prompt_len=(4, 12),
+    )
+    workload = build_workload(shared_spec)
+    cow_cfg = dataclasses.replace(ecfg, prefix_sharing=True)
+    plain, plain_res = run_mode(cfg, params, rules, flags, ecfg, workload,
+                                keep_result=True)
+    shared, shared_res = run_mode(cfg, params, rules, flags, cow_cfg,
+                                  workload, keep_result=True)
+    acct = shared_res.accounting
+    prompt_pages = sum(
+        -(-len(r.prompt) // ecfg.page_size) for r in workload
+    )
+    return {
+        "workload": shared_spec.to_json(),
+        "n_prefix_hits": acct["n_prefix_hits"],
+        "n_pages_forked": acct["n_pages_forked"],
+        "n_cow_pages": acct["n_cow_pages"],
+        "n_pages_shared": acct["n_pages_shared"],
+        "shared_prefix_tokens": acct["shared_prefix_tokens"],
+        "prompt_pages_total": prompt_pages,
+        "pages_saved_frac": acct["n_pages_shared"] / prompt_pages,
+        "wall_s_plain": plain["wall_s"],
+        "wall_s_shared": shared["wall_s"],
+        "tokens_equal": plain_res.streams() == shared_res.streams(),
     }
 
 
@@ -97,7 +178,11 @@ def main():
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer requests, no chaos mode)")
     args = ap.parse_args()
+    if args.smoke:
+        args.requests = min(args.requests, 10)
 
     cfg = reduced(get_config("qwen3-0.6b"), dtype="float32")
     mesh = make_host_mesh()
@@ -121,13 +206,23 @@ def main():
     run_mode(cfg, params, rules, flags, lockstep_cfg, workload)
 
     lockstep = run_mode(cfg, params, rules, flags, lockstep_cfg, workload)
-    continuous = run_mode(cfg, params, rules, flags, ecfg, workload)
-    chaos = run_mode(
-        cfg, params, rules, flags, ecfg, workload, n_replicas=3,
-        chaos={"kind": "pod", "fail_every_steps": 12, "heal_steps": 6,
-               "ranks_per_pod": 1, "transfer_steps": 1},
-        snapshot_cadence=2,
+    continuous, cont_result = run_mode(
+        cfg, params, rules, flags, ecfg, workload, keep_result=True
     )
+    if args.smoke:
+        chaos = None
+    else:
+        chaos = run_mode(
+            cfg, params, rules, flags, ecfg, workload, n_replicas=3,
+            chaos={"kind": "pod", "fail_every_steps": 12, "heal_steps": 6,
+                   "ranks_per_pod": 1, "transfer_steps": 1},
+            snapshot_cadence=2,
+        )
+    paged = paged_decode_section(
+        cfg, params, rules, flags, ecfg, workload,
+        dense_run=(continuous, cont_result),
+    )
+    sharing = prefix_sharing_section(cfg, params, rules, flags, ecfg, spec)
 
     out = {
         "bench": "serve",
@@ -137,6 +232,8 @@ def main():
         "lockstep": lockstep,
         "continuous": continuous,
         "with_failures": chaos,
+        "paged_decode": paged,
+        "prefix_sharing": sharing,
         "speedup_tok_s": continuous["tok_s"] / lockstep["tok_s"],
         "speedup_steps": lockstep["engine_steps"] / continuous["engine_steps"],
         "continuous_beats_lockstep":
@@ -148,9 +245,26 @@ def main():
         f"lockstep {lockstep['tok_s']:.1f} tok/s "
         f"({lockstep['engine_steps']} steps) vs continuous "
         f"{continuous['tok_s']:.1f} tok/s ({continuous['engine_steps']} "
-        f"steps): {out['speedup_tok_s']:.2f}x; with failures "
-        f"{chaos['tok_s']:.1f} tok/s, {chaos['n_kills']} kills, "
-        f"{chaos['n_migrations']} migrations"
+        f"steps): {out['speedup_tok_s']:.2f}x"
+        + (
+            f"; with failures {chaos['tok_s']:.1f} tok/s, "
+            f"{chaos['n_kills']} kills, {chaos['n_migrations']} migrations"
+            if chaos else ""
+        )
+    )
+    print(
+        f"paged decode: {paged['bytes_reduction']:.1f}x fewer modeled KV "
+        f"bytes/step ({paged['kv_bytes_per_round_dense']/1e6:.2f} MB -> "
+        f"{paged['kv_bytes_per_round_paged']/1e6:.2f} MB), wall "
+        f"{paged['wall_speedup_paged']:.2f}x, tokens_equal="
+        f"{paged['tokens_equal']}"
+    )
+    print(
+        f"prefix sharing: {sharing['n_prefix_hits']} hits, "
+        f"{sharing['n_pages_shared']}/{sharing['prompt_pages_total']} prompt "
+        f"pages shared ({sharing['pages_saved_frac']:.0%}), "
+        f"{sharing['n_cow_pages']} COW copies, tokens_equal="
+        f"{sharing['tokens_equal']}"
     )
     print(f"wrote {args.out}")
 

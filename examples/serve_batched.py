@@ -6,8 +6,16 @@ outage takes a serving replica down mid-decode and its in-flight requests
 migrate to a survivor (KV-snapshot restore, or deterministic re-prefill),
 emitting bit-identical token streams.
 
+``--paged-kernel`` decodes natively on the paged pool via the
+page-table-walking flash-decode kernel (no dense gather);
+``--shared-prefix N`` gives every prompt an N-token common prefix and turns
+on copy-on-write page sharing, so shared prompt pages are forked instead of
+recomputed.  Either way the token streams are identical to the plain run.
+
     PYTHONPATH=src python examples/serve_batched.py
     PYTHONPATH=src python examples/serve_batched.py --chaos pod
+    PYTHONPATH=src python examples/serve_batched.py --paged-kernel
+    PYTHONPATH=src python examples/serve_batched.py --shared-prefix 12
 """
 import argparse
 import time
@@ -32,6 +40,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--chaos", default="none", choices=["none", "pod"])
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--paged-kernel", action="store_true",
+                    help="zero-copy decode via the page-table-walking kernel")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="common prompt prefix tokens (enables COW sharing)")
     args = ap.parse_args()
 
     cfg = reduced(get_config("qwen3-0.6b"), dtype="float32")
@@ -42,16 +54,22 @@ def main():
     params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
 
     spec = WorkloadSpec(n_requests=args.requests, vocab_size=cfg.vocab_size,
-                        seed=1, prompt_len=(4, 16), new_tokens=(4, 16))
+                        seed=1, prompt_len=(4, 16), new_tokens=(4, 16),
+                        shared_prefix=args.shared_prefix)
     workload = build_workload(spec)
     chaos = (
         {"kind": "pod", "fail_every_steps": 8, "heal_steps": 4,
          "ranks_per_pod": 1, "transfer_steps": 1}
         if args.chaos == "pod" else {"kind": "none"}
     )
+    ecfg = EngineConfig(
+        max_slots=4, page_size=8,
+        pages_per_slot=4 + -(-args.shared_prefix // 8),
+        use_paged_kernel=args.paged_kernel,
+        prefix_sharing=args.shared_prefix > 0,
+    )
     rset = ReplicaSet(
-        cfg, params, rules, flags,
-        EngineConfig(max_slots=4, page_size=8, pages_per_slot=4),
+        cfg, params, rules, flags, ecfg,
         n_replicas=2, injectors=injectors_from_spec(chaos), chaos_seed=7,
     )
 
@@ -71,6 +89,19 @@ def main():
             f"({acct['n_restore_snapshot']} KV-snapshot, "
             f"{acct['n_restore_replay']} re-prefill, "
             f"{acct['replayed_tokens']} tokens replayed)"
+        )
+    if args.paged_kernel:
+        print(
+            f"  paged kernel: {acct['kv_bytes_paged'] / 1e6:.1f} MB modeled "
+            f"KV traffic vs {acct['kv_bytes_dense'] / 1e6:.1f} MB for the "
+            f"dense gather ({acct['decode_rounds']} decode rounds)"
+        )
+    if args.shared_prefix:
+        print(
+            f"  prefix sharing: {acct['n_prefix_hits']} hits, "
+            f"{acct['n_pages_shared']} pages shared, "
+            f"{acct['n_cow_pages']} copy-on-write copies, "
+            f"{acct['shared_prefix_tokens']} prompt tokens not recomputed"
         )
     for rid in sorted(result.states)[:4]:
         rs = result.states[rid]

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import flash_decode as _fd
 from repro.kernels import lowrank_wgrad as _lw
+from repro.kernels import paged_decode as _pd
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import swiglu as _sg
 from repro.kernels import ref
@@ -52,6 +53,19 @@ def flash_decode(q, k_cache, v_cache, cur_len, *, block_k=512, interpret=True):
     )
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_flash_decode(q, k_pages, v_pages, tables, cur_len, *, interpret=True):
+    """Page-table-walking flash decode over the physical KV pool.
+
+    Bitwise-identical to ``flash_decode(q, gather(k_pages, tables),
+    gather(v_pages, tables), cur_len, block_k=page_size)`` — the zero-copy
+    serving decode path (see kernels/paged_decode.py).
+    """
+    return _pd.paged_flash_decode(
+        q, k_pages, v_pages, tables, cur_len, interpret=interpret
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("block_t", "block_m", "interpret"))
 def lowrank_wgrad(x, dy, v1, *, block_t=256, block_m=512, interpret=True):
     """Full technique-III Wgrad: dW = v1 @ ((x v1)^T dy).
@@ -82,4 +96,7 @@ def rmsnorm(x, scale, eps=1e-5, *, block_rows=256, interpret=True):
     return _rn.rmsnorm(x, scale, eps, block_rows=block_rows, interpret=interpret)
 
 
-__all__ = ["flash_attention", "flash_decode", "lowrank_wgrad", "swiglu", "rmsnorm", "ref"]
+__all__ = [
+    "flash_attention", "flash_decode", "paged_flash_decode", "lowrank_wgrad",
+    "swiglu", "rmsnorm", "ref",
+]

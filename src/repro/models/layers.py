@@ -16,6 +16,7 @@ from repro.configs.base import ModelConfig
 from repro.core.lowrank import lowrank_linear
 from repro.core.recompute import ffn_recompute, maybe_remat
 from repro.core.skipconn import cast_grad, grad_gate
+from repro.kernels.paged_decode import paged_flash_decode
 from repro.parallel.sharding import ShardingRules, constrain
 
 
@@ -144,6 +145,32 @@ def decode_attention(q, k_cache, v_cache, cur_len):
     return out.reshape(B, 1, H, hd)
 
 
+def history_attention(q, k_cache, v_cache, off):
+    """Chunk-prefill attention: C queries starting at position ``off``
+    attend to the cache prefix plus themselves (their K/V were written at
+    ``off..off+C-1`` before the call).
+
+    q: (B, C, H, hd); k_cache, v_cache: (B, Smax, KV, hd); ``off`` a scalar.
+    Query ``i`` attends to cache positions ``<= off + i``; pad queries past
+    the true chunk length produce garbage rows that are never read (their
+    cache writes sit at or past the slot's ``cur_len``).
+    """
+    B, C, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, C, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_cache).astype(jnp.float32)
+    s = s * scale
+    k_pos = jnp.arange(k_cache.shape[1])[None, :]
+    q_pos = off + jnp.arange(C)[:, None]
+    mask = k_pos <= q_pos  # (C, Smax)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v_cache)
+    return out.reshape(B, C, H, hd)
+
+
 def attention_block(
     p,
     x,
@@ -156,6 +183,10 @@ def attention_block(
     cur_len=None,
     attn_chunk: int = 1024,
     causal_slice: bool = False,
+    history: bool = False,
+    page_tables=None,
+    page_size: Optional[int] = None,
+    kernel_interpret: bool = True,
 ):
     """Pre-norm MHA sublayer with residual; returns (y, new_cache).
 
@@ -176,10 +207,37 @@ def attention_block(
     k = rope(k, positions, cfg.rope_theta)
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and page_tables is not None:
+        # paged decode: the pool (n_pages, ps, KV, hd) is the native layout —
+        # the new K/V row lands in its page in place and the flash-decode
+        # kernel walks the page table, so no slot-major dense copy exists
+        if cur_len is None or page_size is None:
+            raise ValueError("paged decode requires cur_len and page_size")
+        pids = jnp.take_along_axis(
+            page_tables, (cur_len // page_size)[:, None], axis=1
+        )[:, 0]
+        offs = cur_len % page_size
+        k_pages = cache["k"].at[pids, offs].set(k[:, 0].astype(cache["k"].dtype))
+        v_pages = cache["v"].at[pids, offs].set(v[:, 0].astype(cache["v"].dtype))
+        new_cache = {"k": k_pages, "v": v_pages}
+        o = paged_flash_decode(
+            q, k_pages, v_pages, page_tables, cur_len + 1,
+            interpret=kernel_interpret,
+        )
+    elif cache is not None:
         if cur_len is None:
             raise ValueError("decode/prefill cache requires cur_len")
-        if q.shape[1] == 1:  # decode: write one position, attend to cache
+        if history:  # chunk prefill: write the chunk, attend to prefix+self
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k.astype(cache["k"].dtype), cur_len, axis=1
+                ),
+                "v": jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v.astype(cache["v"].dtype), cur_len, axis=1
+                ),
+            }
+            o = history_attention(q, new_cache["k"], new_cache["v"], cur_len)
+        elif q.shape[1] == 1:  # decode: write one position, attend to cache
             if jnp.ndim(cur_len):  # ragged: per-slot write positions
                 upd = jax.vmap(
                     lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(

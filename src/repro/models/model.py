@@ -60,6 +60,10 @@ def _apply_block(
     flags: ExecFlags,
     positions,
     cur_len,
+    prefill_history: bool = False,
+    page_tables=None,
+    page_size=None,
+    kernel_interpret: bool = True,
 ):
     kind, is_moe = pos_kind
     lowrank_mode = ctx.lowrank_mode()
@@ -71,6 +75,8 @@ def _apply_block(
             bp["mixer"], h, cfg, rules, keep_attn, positions,
             cache=cache_l, cur_len=cur_len,
             attn_chunk=flags.attn_chunk, causal_slice=flags.causal_slice,
+            history=prefill_history, page_tables=page_tables,
+            page_size=page_size, kernel_interpret=kernel_interpret,
         )
     else:
         h, new_cache = ssm_block(
@@ -106,8 +112,19 @@ def run_trunk(
     positions,
     caches: Optional[Tree] = None,
     cur_len=None,
+    prefill_history: bool = False,
+    page_tables=None,
+    page_size=None,
+    kernel_interpret: bool = True,
 ):
-    """Runs all layers. Returns (h, new_caches, aux_loss_sum)."""
+    """Runs all layers. Returns (h, new_caches, aux_loss_sum).
+
+    ``page_tables`` switches the decode cache handling to the paged layout:
+    ``caches`` leaves are physical page pools (n_periods, n_pages, page_size,
+    KV, hd) and attention walks each slot's page table in place.
+    ``prefill_history`` marks a chunk prefill (queries at ``cur_len..``
+    attending to the cache prefix plus themselves).
+    """
     layout = block_layout(cfg)
     period = cfg.block_period
     n_periods = cfg.n_layers // period
@@ -138,6 +155,8 @@ def run_trunk(
                 keep_l,
                 None if cls is None else cls[p],
                 cfg, rules, ctx, flags, positions, cur_len,
+                prefill_history=prefill_history, page_tables=page_tables,
+                page_size=page_size, kernel_interpret=kernel_interpret,
             )
             aux_tot = aux_tot + aux
             if new_cls is not None:
@@ -241,10 +260,12 @@ def forward_prefill(
     """Prompt prefill: returns (filled caches, last-position logits).
 
     ``logit_pos`` selects which position's logits to return (default: the
-    last).  The serve engine pads prompts up to a page multiple to bound the
-    number of compiled prefill shapes, and reads the logits at the true last
-    prompt position — pad positions beyond it are never attended to later
-    (the decode length mask stops at ``cur_len``).
+    last) — a scalar, or a ``(B,)`` vector of per-row last-prompt positions
+    for the batched-prefill path.  The serve engine pads prompts up to a
+    page multiple to bound the number of compiled prefill shapes, and reads
+    the logits at the true last prompt position — pad positions beyond it
+    are never attended to later (the decode length mask stops at
+    ``cur_len``).
     """
     ctx = NDBContext(mode="off")
     h, _ = frontends.embed_inputs(params, batch, cfg)
@@ -257,7 +278,47 @@ def forward_prefill(
         positions=positions, caches=caches, cur_len=jnp.int32(0),
     )
     h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
-    h_last = h[:, -1] if logit_pos is None else jnp.take(h, logit_pos, axis=1)
+    if logit_pos is None:
+        h_last = h[:, -1]
+    elif jnp.ndim(logit_pos):  # per-row positions (batched prefill)
+        h_last = jnp.take_along_axis(
+            h, jnp.asarray(logit_pos)[:, None, None], axis=1
+        )[:, 0]
+    else:
+        h_last = jnp.take(h, logit_pos, axis=1)
+    logits = logits_for_position(h_last, _unembed(params), cfg.vocab_size)
+    return new_caches, logits
+
+
+def forward_prefill_chunk(
+    params: Tree,
+    caches: Tree,
+    batch: Tree,
+    off,
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    flags: ExecFlags,
+    logit_idx,
+):
+    """One page-aligned prompt chunk: tokens at positions ``off..off+C-1``
+    attend to the cache prefix (``[0, off)`` — earlier chunks or a forked
+    shared prefix) plus themselves, and write their K/V rows into the dense
+    cache view at ``off``.  Returns (new caches, logits at chunk-local
+    position ``logit_idx``).  Pad tokens past the true chunk length write
+    garbage rows at or past the slot's ``cur_len`` — never read.
+    """
+    ctx = NDBContext(mode="off")
+    h, _ = frontends.embed_inputs(params, batch, cfg)
+    h = constrain(h, rules, "batch", "seq", None)
+    C = h.shape[1]
+    positions = off + jnp.arange(C)
+    h, new_caches, _ = run_trunk(
+        params, None, h, cfg, rules, ctx, flags,
+        positions=positions, caches=caches, cur_len=jnp.asarray(off, jnp.int32),
+        prefill_history=True,
+    )
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    h_last = jnp.take(h, logit_idx, axis=1)
     logits = logits_for_position(h_last, _unembed(params), cfg.vocab_size)
     return new_caches, logits
 
@@ -270,8 +331,18 @@ def forward_decode(
     cfg: ModelConfig,
     rules: ShardingRules,
     flags: ExecFlags,
+    *,
+    page_tables=None,  # (B, P) int32: caches are physical page pools
+    page_size: Optional[int] = None,
+    kernel_interpret: bool = True,
 ):
-    """One decode step: returns (new caches, (B, V) logits)."""
+    """One decode step: returns (new caches, (B, V) logits).
+
+    With ``page_tables`` the caches are the paged KV pool itself
+    ((n_periods, n_pages, page_size, KV, hd) leaves): each slot's new K/V
+    row is written to its page in place and attention walks the page table
+    via the Pallas flash-decode kernel — no slot-major dense copy.
+    """
     ctx = NDBContext(mode="off")
     if cfg.frontend == "audio":
         # stub frontend: decode consumes a token id like any LM
@@ -282,9 +353,13 @@ def forward_decode(
     cur_len = jnp.asarray(cur_len, jnp.int32)
     # scalar: one shared position; (B,): per-slot rope positions (B, 1)
     positions = cur_len[None] if jnp.ndim(cur_len) == 0 else cur_len[:, None]
+    if page_tables is not None and jnp.ndim(cur_len) == 0:
+        cur_len = jnp.broadcast_to(cur_len, (h.shape[0],))
     h, new_caches, _ = run_trunk(
         params, None, h, cfg, rules, ctx, flags,
         positions=positions, caches=caches, cur_len=cur_len,
+        page_tables=page_tables, page_size=page_size,
+        kernel_interpret=kernel_interpret,
     )
     h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
     logits = logits_for_position(h[:, -1], _unembed(params), cfg.vocab_size)

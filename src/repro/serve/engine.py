@@ -9,6 +9,27 @@ per-slot ``cur_len`` (ragged flash-decode layout); empty slots carry null
 page tables and length 0, so their lanes compute garbage that is never read
 and never written over live pages.
 
+Decode data paths (``EngineConfig.use_paged_kernel``):
+  * dense (default)  — ``gather_pages`` materializes a slot-major dense copy
+    of every table entry, ``forward_decode`` runs the jnp attention over it,
+    ``scatter_token`` copies the new K/V rows back;
+  * paged            — ``kernels/paged_decode.py`` walks each slot's page
+    table inside the Pallas flash-decode grid and the new K/V rows land in
+    their pages in place: no dense copy exists, and per-step KV traffic
+    drops from ``max_slots * pages_per_slot`` pages to the pages each slot
+    actually covers (the modeled ``kv_bytes_*`` accounting tracks both).
+
+Prefill paths:
+  * batched  — up to the per-step admission budget of same-bucket prompts
+    (equal page-aligned padded length) run as one ``forward_prefill`` call;
+  * chunked  — prompts longer than ``prefill_chunk_pages`` pages are split
+    into page-aligned chunks processed one per engine step, interleaved
+    with the running batch's decode rounds (long admissions stop spiking
+    TTFT of in-flight slots);
+  * shared   — with ``prefix_sharing``, prompts that extend an already-seen
+    prompt fork the matching KV pages (refcounted, copy-on-write on the
+    last partial page) and only prefill their unique tail.
+
 Determinism contract (what the failover machinery relies on): with
 attention-only mixers and a dense FFN, every batch lane is value-isolated —
 matmuls, norms and the length-masked attention never mix values across
@@ -30,8 +51,8 @@ migrated stream continues bit-identically.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,17 +60,25 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.kvcache import cache_structs
-from repro.models.model import ExecFlags, forward_decode, forward_prefill
+from repro.models.model import (
+    ExecFlags,
+    forward_decode,
+    forward_prefill,
+    forward_prefill_chunk,
+)
 from repro.parallel.sharding import ShardingRules
 from repro.serve.kvpool import (
     NULL_PAGE,
     PageAllocator,
     check_attention_only,
+    copy_page,
     gather_pages,
     gather_slot_pages,
     init_pool,
+    page_nbytes,
     pages_needed,
     restore_slot_pages,
+    scatter_pages,
     scatter_prefill,
     scatter_token,
 )
@@ -70,10 +99,16 @@ class EngineConfig:
     n_pages: int = 0            # physical pages incl. null; 0 -> full reserve
     admission: str = "continuous"   # "continuous" | "lockstep" (baseline)
     max_prefills_per_step: int = 1  # continuous admission budget per step
+    use_paged_kernel: bool = False  # page-table-walking flash-decode
+    kernel_interpret: bool = True   # Pallas interpret mode (CPU); False on TPU
+    prefill_chunk_pages: int = 0    # chunk prompts longer than this (0 = off)
+    prefix_sharing: bool = False    # COW page sharing for common prefixes
 
     def __post_init__(self):
         if self.admission not in ("continuous", "lockstep"):
             raise ValueError(f"unknown admission policy {self.admission!r}")
+        if self.prefill_chunk_pages < 0:
+            raise ValueError("prefill_chunk_pages must be >= 0")
 
     @property
     def max_len(self) -> int:
@@ -86,6 +121,26 @@ class EngineConfig:
         return 1 + self.max_slots * self.pages_per_slot
 
 
+@dataclass
+class AdmitPlan:
+    """How a fresh request lands in a slot: forked shared-prefix pages plus
+    the free pages its own span still needs."""
+
+    n_shared: int = 0                       # prompt positions forked, not run
+    fork_pages: List[int] = field(default_factory=list)
+    need: int = 0                           # free pages required
+    donor: Optional[Tuple[int, ...]] = None  # registry key the fork came from
+
+
+@dataclass
+class _PendingPrefill:
+    """A slot mid-way through a chunked (or shared-suffix) prefill."""
+
+    prompt: Tuple[int, ...]
+    next_off: int   # cache positions already valid (forked prefix + chunks)
+    step: int       # last engine step a chunk ran (one chunk per step)
+
+
 # ---------------------------------------------------------------------------
 # jitted steps (module-level: every replica shares one compile per shape)
 # ---------------------------------------------------------------------------
@@ -93,14 +148,25 @@ class EngineConfig:
 
 @functools.partial(jax.jit, static_argnames=("cfg", "rules", "flags"))
 def _prefill_step(params, tokens, last_idx, *, cfg, rules, flags):
-    """Batch-1 prefill over a page-aligned padded prompt.
+    """Prefill over page-aligned padded prompts.
 
-    Returns (dense caches (np, 1, S_pad, KV, hd), logits at ``last_idx``).
+    ``tokens``: (n, S_pad) same-bucket batch; ``last_idx`` a scalar (n == 1)
+    or an (n,) vector of per-row last-prompt positions.  Returns (dense
+    caches (np, n, S_pad, KV, hd), logits at ``last_idx``).
     """
     dt = params["embed"].dtype
-    cs = cache_structs(cfg, 1, tokens.shape[1], dt)
+    cs = cache_structs(cfg, tokens.shape[0], tokens.shape[1], dt)
     return forward_prefill(
         params, {"tokens": tokens}, cfg, rules, flags, cs, logit_pos=last_idx
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "rules", "flags"))
+def _chunk_prefill_step(params, caches, tokens, off, logit_idx, *, cfg, rules,
+                        flags):
+    """One prompt chunk against a slot's gathered dense cache view."""
+    return forward_prefill_chunk(
+        params, caches, {"tokens": tokens}, off, cfg, rules, flags, logit_idx
     )
 
 
@@ -109,7 +175,7 @@ def _prefill_step(params, tokens, last_idx, *, cfg, rules, flags):
 )
 def _decode_round(params, pool, tables, lens, tokens, *, cfg, rules, flags,
                   page_size):
-    """One ragged decode round over the paged pool.
+    """One ragged decode round via the dense gather/scatter round-trip.
 
     Gathers the slot-major dense view, consumes one token per slot (writing
     its K/V at ``lens[b]``), scatters the new rows back to their pages, and
@@ -121,6 +187,28 @@ def _decode_round(params, pool, tables, lens, tokens, *, cfg, rules, flags,
     )
     pool = scatter_token(pool, new_dense, tables, lens, page_size=page_size)
     return pool, logits
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "rules", "flags", "page_size", "interpret"),
+)
+def _paged_decode_round(params, pool, tables, lens, tokens, *, cfg, rules,
+                        flags, page_size, interpret):
+    """One ragged decode round natively on the paged pool (zero-copy)."""
+    return forward_decode(
+        params, pool, tokens, lens, cfg, rules, flags,
+        page_tables=tables, page_size=page_size, kernel_interpret=interpret,
+    )
+
+
+def _lcp(a: Sequence[int], b: Sequence[int]) -> int:
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
 
 
 # ---------------------------------------------------------------------------
@@ -157,6 +245,19 @@ class ServeEngine:
             (ecfg.max_slots, ecfg.pages_per_slot), NULL_PAGE, np.int32
         )
         self._lens = np.zeros((ecfg.max_slots,), np.int32)
+        self._pending: Dict[int, _PendingPrefill] = {}
+        # prefix registry: prompt -> (pseudo-table id, full-page ids).  The
+        # registry itself holds a refcount on the pages (a pseudo table), so
+        # a prefix outlives its first request until page pressure releases it
+        self._registry: Dict[Tuple[int, ...], Tuple[str, List[int]]] = {}
+        self._reg_counter = 0
+        self._page_nbytes = page_nbytes(self.pool)
+        self.stats: Dict[str, int] = {
+            k: 0 for k in (
+                "decode_rounds", "kv_bytes_dense", "kv_bytes_paged",
+                "shared_prefix_tokens", "n_prefix_hits", "n_pages_shared",
+            )
+        }
 
     # -- capacity ------------------------------------------------------
     @property
@@ -169,21 +270,51 @@ class ServeEngine:
                 return i
         return None
 
-    def can_admit(self, rs: RequestState) -> bool:
+    def plan_admission(self, rs: RequestState) -> AdmitPlan:
+        """Fork-aware page plan for a fresh request (deterministic)."""
+        total = pages_needed(rs.req.total_len, self.ecfg.page_size)
+        ps = self.ecfg.page_size
+        S = len(rs.req.prompt)
+        if self.ecfg.prefix_sharing and not rs.emitted:
+            best_len, best_pages, best_key = 0, None, None
+            for key, (_pseudo, pages) in self._registry.items():
+                n = min(_lcp(key, rs.req.prompt), S - 1, len(pages) * ps)
+                if n > best_len:
+                    best_len, best_pages, best_key = n, pages, key
+            if best_len >= ps:
+                n_cov = pages_needed(best_len, ps)
+                return AdmitPlan(
+                    n_shared=best_len,
+                    fork_pages=list(best_pages[:n_cov]),
+                    need=total - best_len // ps,
+                    donor=best_key,
+                )
+        return AdmitPlan(need=total)
+
+    def _admissible(self, rs: RequestState) -> Optional[AdmitPlan]:
+        """Capacity check; returns the admission plan when the request fits
+        (possibly after releasing registry-only prefix pages), else None."""
         if rs.req.total_len > self.ecfg.max_len:
             raise ValueError(
                 f"request {rs.rid} needs {rs.req.total_len} positions "
                 f"> max_len {self.ecfg.max_len}"
             )
-        slot = self.free_slot()
-        if slot is None:
-            return False
-        return self.alloc.can_allocate(slot, rs.req.total_len)
+        if self.free_slot() is None:
+            return None
+        plan = self.plan_admission(rs)
+        if self.alloc.free_count < plan.need:
+            self._release_prefixes(plan.need, protect=plan.donor)
+        return plan if self.alloc.free_count >= plan.need else None
+
+    def can_admit(self, rs: RequestState) -> bool:
+        return self._admissible(rs) is not None
 
     # -- admission -----------------------------------------------------
-    def _bind(self, rs: RequestState) -> int:
+    def _bind(self, rs: RequestState, plan: Optional[AdmitPlan] = None) -> int:
         slot = self.free_slot()
         assert slot is not None
+        if plan is not None and plan.fork_pages:
+            self.alloc.fork(slot, plan.fork_pages)
         # reserve the full request up front: no mid-flight OOM, and freeing
         # at completion returns the whole span to the pool for reuse
         self.alloc.ensure(slot, rs.req.total_len)
@@ -193,8 +324,113 @@ class ServeEngine:
         )
         return slot
 
+    def try_bind(self, rs: RequestState, step: int
+                 ) -> Optional[Tuple[int, AdmitPlan, bool]]:
+        """Admit check + bind.  Returns (slot, plan, complex) or None;
+        ``complex`` marks prompts that must go through the chunk machinery
+        (forked prefix or longer than the prefill chunk) instead of the
+        batched full-prefill path."""
+        plan = self._admissible(rs)
+        if plan is None:
+            return None
+        slot = self._bind(rs, plan)
+        rs.admit_step = step
+        cp = self.ecfg.prefill_chunk_pages
+        n_pg = pages_needed(len(rs.req.prompt), self.ecfg.page_size)
+        return slot, plan, plan.n_shared > 0 or (0 < cp < n_pg)
+
+    def prefill_bucket(self, rs: RequestState) -> int:
+        return pages_needed(len(rs.req.prompt), self.ecfg.page_size)
+
+    def admit_new(self, rs: RequestState, step: int) -> Optional[int]:
+        """Single-request admission convenience: bind + prefill.
+
+        Returns the first token, or None when a chunked prefill started
+        (the token arrives from :meth:`step_prefills` a few steps later).
+        A ``max_new_tokens == 1`` request completes right here — its slot
+        is evicted immediately so the next decode round never
+        over-generates.
+        """
+        bound = self.try_bind(rs, step)
+        assert bound is not None, "caller must check can_admit"
+        slot, plan, is_complex = bound
+        if is_complex:
+            return self.start_prefill(slot, rs, plan, step)
+        return self.prefill_bound([(slot, rs)], step)[0]
+
+    def start_prefill(self, slot: int, rs: RequestState, plan: AdmitPlan,
+                      step: int) -> Optional[int]:
+        """Begin a chunked / shared-suffix prefill on a bound slot.
+
+        The first chunk runs now; with chunking enabled, later chunks run
+        one per engine step (interleaved with decode rounds).  Returns the
+        first token when the prompt finished within this call, else None.
+        """
+        if plan.n_shared:
+            self.stats["shared_prefix_tokens"] += plan.n_shared
+            self.stats["n_prefix_hits"] += 1
+            # full pages never re-materialized (the forked partial page is
+            # copied on the first write, so it saves nothing)
+            self.stats["n_pages_shared"] += plan.n_shared // self.ecfg.page_size
+        self._pending[slot] = _PendingPrefill(
+            tuple(rs.req.prompt), plan.n_shared, step
+        )
+        tok = self._advance_prefill(slot, step)
+        if tok is not None:
+            rs.record_token(tok, step)
+            if rs.done:
+                self._evict(slot)
+        return tok
+
+    def prefill_bound(self, pairs: List[Tuple[int, RequestState]], step: int
+                      ) -> List[int]:
+        """Full prefill for bound slots — one bucketed forward for the whole
+        group (the batched-prefill path; the callers group by equal
+        page-aligned padded length)."""
+        ps = self.ecfg.page_size
+        n = len(pairs)
+        n_pg = pages_needed(len(pairs[0][1].req.prompt), ps)
+        if n == 1:
+            # keep the historical batch-1 call (scalar last_idx) so legacy
+            # golden traces replay bit-identically
+            slot, rs = pairs[0]
+            logits = self._prefill_into(slot, rs)
+            toks = np.asarray(greedy_token(logits, self.cfg))
+        else:
+            S_pad = n_pg * ps
+            toks_in = np.zeros((n, S_pad), np.int32)
+            last = np.zeros((n,), np.int32)
+            page_ids = np.zeros((n, n_pg), np.int32)
+            for i, (slot, rs) in enumerate(pairs):
+                S = len(rs.req.prompt)
+                assert pages_needed(S, ps) == n_pg, "mixed prefill buckets"
+                toks_in[i, :S] = rs.req.prompt
+                last[i] = S - 1
+                page_ids[i] = self.alloc.tables[slot][:n_pg]
+            dense, logits = _prefill_step(
+                self.params, jnp.asarray(toks_in), jnp.asarray(last),
+                cfg=self.cfg, rules=self.rules, flags=self.flags,
+            )
+            self.pool = scatter_prefill(
+                self.pool, dense, jnp.asarray(page_ids), page_size=ps
+            )
+            for slot, rs in pairs:
+                self._lens[slot] = len(rs.req.prompt)
+            toks = np.asarray(greedy_token(logits, self.cfg))
+        out = []
+        for i, (slot, rs) in enumerate(pairs):
+            tok = int(toks[i])
+            rs.record_token(tok, step)
+            self._register_prefix(slot)
+            if rs.done:
+                self._evict(slot)
+            out.append(tok)
+        return out
+
     def _prefill_into(self, slot: int, rs: RequestState):
-        """Run the padded prefill and scatter the prompt K/V into pages."""
+        """Run the padded batch-1 prefill and scatter the prompt K/V into
+        pages (also the deterministic re-prefill used by failover restore —
+        never forked/chunked, whatever the original admission path was)."""
         S = len(rs.req.prompt)
         ps = self.ecfg.page_size
         n_pg = pages_needed(S, ps)
@@ -212,20 +448,128 @@ class ServeEngine:
         self._lens[slot] = S
         return logits
 
-    def admit_new(self, rs: RequestState, step: int) -> int:
-        """Admit a fresh request: prefill + first token.  Returns the token.
+    # -- chunked prefill ----------------------------------------------
+    def _advance_prefill(self, slot: int, step: int) -> Optional[int]:
+        """Run the next page-aligned chunk of ``slot``'s pending prompt.
 
-        A ``max_new_tokens == 1`` request completes right here — its slot is
-        evicted immediately so the next decode round never over-generates.
+        Gathers the slot's dense cache view (history = forked prefix pages
+        plus earlier chunks), runs the chunk forward, scatters the written
+        pages back.  Shared pages in the write range are copied first
+        (write-triggered COW — this is where a forked partial page
+        detaches).  Returns the first token when this chunk was the last.
         """
-        slot = self._bind(rs)
-        logits = self._prefill_into(slot, rs)
-        tok = int(greedy_token(logits[0], self.cfg))
-        rs.admit_step = step
-        rs.record_token(tok, step)
-        if rs.done:
-            self._evict(slot)
-        return tok
+        pend = self._pending[slot]
+        ps = self.ecfg.page_size
+        S = len(pend.prompt)
+        pg_hi = pages_needed(S, ps) - 1
+        off = pend.next_off
+        pg_lo = off // ps
+        cp = self.ecfg.prefill_chunk_pages
+        pg_end = pg_hi if cp <= 0 else min(pg_lo + cp - 1, pg_hi)
+        true_c = min(S, (pg_end + 1) * ps) - off
+        final = pg_end == pg_hi
+        for idx in range(pg_lo, pg_end + 1):
+            self._cow_slot_page(slot, idx)
+        C_pad = (pg_end + 1) * ps - off
+        toks = np.zeros((1, C_pad), np.int32)
+        toks[0, :true_c] = pend.prompt[off:off + true_c]
+        dense = gather_pages(
+            self.pool, jnp.asarray(self._tables[slot][None]), page_size=ps
+        )
+        dense, logits = _chunk_prefill_step(
+            self.params, dense, jnp.asarray(toks), jnp.int32(off),
+            jnp.int32(true_c - 1),
+            cfg=self.cfg, rules=self.rules, flags=self.flags,
+        )
+        page_ids = jnp.asarray(
+            self.alloc.tables[slot][pg_lo:pg_end + 1], jnp.int32
+        )
+        self.pool = scatter_pages(
+            self.pool, dense, page_ids, pg_lo=pg_lo,
+            n_pg=pg_end - pg_lo + 1, page_size=ps,
+        )
+        pend.step = step
+        if not final:
+            pend.next_off = (pg_end + 1) * ps
+            return None
+        del self._pending[slot]
+        self._lens[slot] = S
+        self._register_prefix(slot)
+        return int(greedy_token(logits[0], self.cfg))
+
+    def step_prefills(self, step: int) -> List[Tuple[RequestState, int, bool]]:
+        """Advance every pending chunked prefill one chunk.  Returns
+        [(state, first_token, completed)] for the prompts that finished."""
+        out = []
+        for slot in sorted(self._pending):
+            if self._pending[slot].step >= step:
+                continue  # already advanced this step (fresh admission)
+            rs = self.slots[slot]
+            tok = self._advance_prefill(slot, step)
+            if tok is None:
+                continue
+            rs.record_token(tok, step)
+            if rs.done:
+                self._evict(slot)
+                out.append((rs, tok, True))
+            else:
+                out.append((rs, tok, False))
+        return out
+
+    # -- prefix sharing -----------------------------------------------
+    def _register_prefix(self, slot: int) -> None:
+        """Retain the full prompt pages of a freshly prefilled slot under a
+        registry pseudo-table, so later prompts sharing the prefix can fork
+        them (even after this request completes and evicts)."""
+        if not self.ecfg.prefix_sharing:
+            return
+        rs = self.slots[slot]
+        prompt = tuple(rs.req.prompt)
+        n_full = len(prompt) // self.ecfg.page_size
+        if n_full < 1 or prompt in self._registry:
+            return
+        pages = list(self.alloc.tables[slot][:n_full])
+        pseudo = f"~pfx{self._reg_counter}"
+        self._reg_counter += 1
+        self.alloc.fork(pseudo, pages)
+        self._registry[prompt] = (pseudo, pages)
+
+    def _release_prefixes(self, need: int,
+                          protect: Optional[Tuple[int, ...]] = None) -> None:
+        """Page pressure: drop registry entries (FIFO) until ``need`` pages
+        are free.  Only entries whose release actually returns pages are
+        dropped — a prefix whose pages live slots still hold frees nothing,
+        so popping it would just forfeit future sharing.  ``protect`` keeps
+        a planned fork donor resident."""
+        while self.alloc.free_count < need:
+            key = next(
+                (
+                    k for k, (_pseudo, pages) in self._registry.items()
+                    if k != protect
+                    and any(self.alloc.refcount.get(p) == 1 for p in pages)
+                ),
+                None,
+            )
+            if key is None:
+                return
+            pseudo, _pages = self._registry.pop(key)
+            self.alloc.free(pseudo)
+
+    def _cow_slot_page(self, slot: int, idx: int) -> None:
+        """Copy-on-write: detach table entry ``idx`` before a write if the
+        page is shared, duplicating its physical contents."""
+        table = self.alloc.tables.get(slot, [])
+        if idx >= len(table):
+            return
+        if not self.alloc.shared(table[idx]):
+            return
+        if self.alloc.free_count == 0:
+            self._release_prefixes(1)
+            if not self.alloc.shared(table[idx]):
+                return  # the release dropped the only other holder
+        old, new = self.alloc.cow(slot, idx)
+        self.pool = copy_page(self.pool, jnp.int32(old), jnp.int32(new))
+        self._tables[slot][idx] = new
 
     def admit_restored(self, rs: RequestState, snapshot, step: int
                        ) -> Tuple[str, int]:
@@ -275,32 +619,68 @@ class ServeEngine:
             lens[slot] = self._lens[slot]
             toks = np.zeros((B,), np.int32)
             toks[slot] = t
-            self.pool, _ = _decode_round(
-                self.params, self.pool, jnp.asarray(tables),
-                jnp.asarray(lens), jnp.asarray(toks),
-                cfg=self.cfg, rules=self.rules, flags=self.flags,
-                page_size=self.ecfg.page_size,
+            self.pool, _ = self._decode(
+                jnp.asarray(tables), jnp.asarray(lens), jnp.asarray(toks)
             )
             self._lens[slot] += 1
 
     # -- decode --------------------------------------------------------
+    def _decode(self, tables, lens, toks):
+        """Dispatch one decode round to the configured data path."""
+        if self.ecfg.use_paged_kernel:
+            return _paged_decode_round(
+                self.params, self.pool, tables, lens, toks,
+                cfg=self.cfg, rules=self.rules, flags=self.flags,
+                page_size=self.ecfg.page_size,
+                interpret=self.ecfg.kernel_interpret,
+            )
+        return _decode_round(
+            self.params, self.pool, tables, lens, toks,
+            cfg=self.cfg, rules=self.rules, flags=self.flags,
+            page_size=self.ecfg.page_size,
+        )
+
     def decode_round(self, step: int) -> List[Tuple[RequestState, int, bool]]:
         """Advance every occupied slot one token.
 
         Returns [(state, token, completed)] in slot order; completed
-        requests are evicted (slot + pages freed for reuse).
+        requests are evicted (slot + pages freed for reuse).  Slots still
+        mid-chunk-prefill are skipped.
         """
-        active = [i for i, s in enumerate(self.slots) if s is not None]
+        active = [
+            i for i, s in enumerate(self.slots)
+            if s is not None and i not in self._pending
+        ]
         if not active:
             return []
+        ps = self.ecfg.page_size
+        if self.ecfg.prefix_sharing:
+            # write-triggered COW: this round writes each slot's K/V row at
+            # position lens[i] — detach that page if it is shared
+            for i in active:
+                self._cow_slot_page(i, int(self._lens[i]) // ps)
         toks = np.zeros((self.ecfg.max_slots,), np.int32)
         for i in active:
             toks[i] = self.slots[i].emitted[-1]
-        self.pool, logits = _decode_round(
-            self.params, self.pool, jnp.asarray(self._tables),
-            jnp.asarray(self._lens), jnp.asarray(toks),
-            cfg=self.cfg, rules=self.rules, flags=self.flags,
-            page_size=self.ecfg.page_size,
+        tables = self._tables
+        if self._pending:
+            # mid-chunk-prefill slots hold real pages at length 0 — mask
+            # their lanes to the null table so the round's padded write
+            # can't stomp position 0 of their first page
+            tables = tables.copy()
+            for i in self._pending:
+                tables[i] = NULL_PAGE
+        self.pool, logits = self._decode(
+            jnp.asarray(tables), jnp.asarray(self._lens), jnp.asarray(toks),
+        )
+        # modeled KV traffic: the dense gather streams every table entry of
+        # every slot; the paged walk streams only the pages covering each
+        # active slot's valid length
+        B, P = self.ecfg.max_slots, self.ecfg.pages_per_slot
+        self.stats["decode_rounds"] += 1
+        self.stats["kv_bytes_dense"] += B * P * self._page_nbytes
+        self.stats["kv_bytes_paged"] += self._page_nbytes * sum(
+            pages_needed(int(self._lens[i]) + 1, ps) for i in active
         )
         new_toks = np.asarray(greedy_token(logits, self.cfg))
         out = []
@@ -322,10 +702,26 @@ class ServeEngine:
         self._tables[slot] = NULL_PAGE
         self._lens[slot] = 0
 
+    def drain_stats(self) -> Dict[str, int]:
+        """Harvest (and reset) the modeled-traffic / sharing counters."""
+        out = dict(self.stats)
+        out["n_pages_allocated"] = self.alloc.n_pages_allocated
+        out["n_pages_forked"] = self.alloc.n_pages_forked
+        out["n_cow_pages"] = self.alloc.n_cow_copies
+        for k in self.stats:
+            self.stats[k] = 0
+        self.alloc.n_pages_allocated = 0
+        self.alloc.n_pages_forked = 0
+        self.alloc.n_cow_copies = 0
+        return out
+
     # -- failover surface ---------------------------------------------
     def live_states(self) -> List[Tuple[int, RequestState]]:
+        """Slots with decoded state worth snapshotting (mid-chunk-prefill
+        slots have emitted nothing — a kill re-queues them as fresh)."""
         return [
-            (i, s) for i, s in enumerate(self.slots) if s is not None
+            (i, s) for i, s in enumerate(self.slots)
+            if s is not None and i not in self._pending
         ]
 
     def snapshot_slot(self, slot: int):
@@ -345,4 +741,5 @@ class ServeEngine:
             (s for s in self.slots if s is not None), key=lambda r: r.rid
         )
         self.slots = [None] * self.ecfg.max_slots
+        self._pending.clear()
         return inflight

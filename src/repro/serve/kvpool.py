@@ -1,24 +1,30 @@
-"""Paged KV-cache pool: fixed-size pages + per-slot page tables.
+"""Paged KV-cache pool: fixed-size pages + refcounted per-slot page tables.
 
 Two layers, separately testable:
 
-  * :class:`PageAllocator` — pure-Python bookkeeping: a free list of page
-    ids and per-slot page tables.  Page 0 is the reserved *null* page; every
-    unused page-table entry points at it, so the padded gathers/scatters of
-    inactive slots can never touch a live page.  The hypothesis suite pins
-    its invariants (no page in two live tables, eviction only frees the
-    owner's pages, capacity conservation).
+  * :class:`PageAllocator` — pure-Python bookkeeping: a free list (deque) of
+    page ids and refcounted per-slot page tables.  Page 0 is the reserved
+    *null* page; every unused page-table entry points at it, so the padded
+    gathers/scatters of inactive slots can never touch a live page.  Pages
+    may be **shared** between tables (copy-on-write prefix sharing):
+    :meth:`fork` adds an existing live page to another table and bumps its
+    refcount, :meth:`free` decrements instead of freeing, and :meth:`cow`
+    detaches a shared page into a private copy before a write.  The
+    hypothesis suite pins the invariants (refcount == number of table
+    occurrences, eviction never frees a page another table still holds,
+    capacity conservation through any alloc/fork/cow/free sequence).
   * physical pages — jnp arrays shaped like ``models/kvcache.py``'s
     scan-stacked entries with the (batch, seq) dims replaced by
     (page, page_slot): ``(n_periods, n_pages, page_size, KV, hd)``.
     :func:`gather_pages` materializes a slot-major dense view
-    ``(n_periods, B, pages_per_slot*page_size, KV, hd)`` for the ragged
-    flash-decode path; :func:`scatter_token` writes each slot's one new
-    (K, V) row back to its page.  Positions at or past a slot's ``cur_len``
-    read whatever the page holds (zeros or stale rows) — the decode length
-    mask zeroes their attention weight exactly (``exp(-1e30 - m) == 0``), so
-    page layout never changes logits bitwise.  That property is what the
-    paged-vs-dense equality test pins.
+    ``(n_periods, B, pages_per_slot*page_size, KV, hd)`` (the legacy decode
+    path and the chunk-prefill working view); the paged flash-decode kernel
+    (``kernels/paged_decode.py``) walks the pool in place instead.
+    Positions at or past a slot's ``cur_len`` read whatever the page holds
+    (zeros or stale rows) — the decode length mask zeroes their attention
+    weight exactly (``exp(-1e30 - m) == 0``), so page layout never changes
+    logits bitwise.  That property is what the paged-vs-dense equality
+    tests pin.
 
 Only attention caches are paged; the serve engine rejects SSM/hybrid
 configs (their decode state is O(1) per slot, not a growing cache).
@@ -26,7 +32,8 @@ configs (their decode state is O(1) per slot, not a growing cache).
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, Optional, Set
+from collections import deque
+from typing import Any, Deque, Dict, Hashable, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +53,11 @@ def pages_needed(n_tokens: int, page_size: int) -> int:
 
 
 class PageAllocator:
-    """Free-list page allocator over ids ``1..n_pages-1`` (0 is null).
+    """Refcounted free-list page allocator over ids ``1..n_pages-1`` (0 is
+    null).
+
+    Table keys are engine slot ids (ints) or opaque hashable handles (the
+    prefix registry retains shared-prefix pages under pseudo-slot keys).
 
     ``rng`` (optional ``numpy.random.Generator``) shuffles the initial free
     list — the tests use it to prove decode results are invariant to the
@@ -61,10 +72,19 @@ class PageAllocator:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         self.n_pages = n_pages
         self.page_size = page_size
-        self._free: List[int] = list(range(1, n_pages))
+        order = list(range(1, n_pages))
         if rng is not None:
-            rng.shuffle(self._free)
-        self.tables: Dict[int, List[int]] = {}
+            rng.shuffle(order)
+        # deque: allocation pops left in O(1) (was list.pop(0), O(n) per
+        # page); the pop order is identical, so golden traces replay
+        # unchanged
+        self._free: Deque[int] = deque(order)
+        self.tables: Dict[Hashable, List[int]] = {}
+        self.refcount: Dict[int, int] = {}
+        # accounting (monotonic; the serve bench reads these)
+        self.n_pages_allocated = 0
+        self.n_pages_forked = 0
+        self.n_cow_copies = 0
 
     @property
     def free_count(self) -> int:
@@ -73,14 +93,17 @@ class PageAllocator:
     def live_pages(self) -> Set[int]:
         return {p for t in self.tables.values() for p in t}
 
-    def capacity(self, slot: int) -> int:
+    def shared(self, page: int) -> bool:
+        return self.refcount.get(page, 0) > 1
+
+    def capacity(self, slot: Hashable) -> int:
         return len(self.tables.get(slot, ())) * self.page_size
 
-    def can_allocate(self, slot: int, n_tokens: int) -> bool:
+    def can_allocate(self, slot: Hashable, n_tokens: int) -> bool:
         have = len(self.tables.get(slot, ()))
         return pages_needed(n_tokens, self.page_size) - have <= self.free_count
 
-    def ensure(self, slot: int, n_tokens: int) -> List[int]:
+    def ensure(self, slot: Hashable, n_tokens: int) -> List[int]:
         """Grow ``slot``'s table to cover ``n_tokens`` positions.
 
         Returns the newly allocated page ids (possibly empty).  Raises
@@ -96,17 +119,66 @@ class PageAllocator:
                 f"KV pool exhausted: slot {slot} needs {need} pages, "
                 f"{len(self._free)} free"
             )
-        new = [self._free.pop(0) for _ in range(need)]
+        new = [self._free.popleft() for _ in range(need)]
+        for p in new:
+            self.refcount[p] = 1
         table.extend(new)
+        self.n_pages_allocated += len(new)
         return new
 
-    def free(self, slot: int) -> List[int]:
-        """Evict ``slot``: return its pages to the free list for reuse."""
-        pages = self.tables.pop(slot, [])
-        self._free.extend(pages)
-        return pages
+    def fork(self, slot: Hashable, pages: Sequence[int]) -> None:
+        """Append existing *live* pages to ``slot``'s table, sharing them
+        (copy-on-write): each forked page's refcount is incremented, and any
+        holder must :meth:`cow` before writing into it."""
+        table = self.tables.setdefault(slot, [])
+        for p in pages:
+            if self.refcount.get(p, 0) < 1 or p == NULL_PAGE:
+                raise ValueError(f"cannot fork dead/null page {p}")
+            if p in table:
+                raise ValueError(f"slot {slot} already holds page {p}")
+            self.refcount[p] += 1
+            table.append(p)
+        self.n_pages_forked += len(pages)
 
-    def table_row(self, slot: int, pages_per_slot: int) -> List[int]:
+    def cow(self, slot: Hashable, idx: int) -> Optional[Tuple[int, int]]:
+        """Detach table entry ``idx`` of ``slot`` before a write.
+
+        Returns ``(old, new)`` page ids when the page was shared (the caller
+        must copy the physical contents ``old -> new``), or ``None`` when the
+        page was private already.  Raises ``MemoryError`` when no free page
+        is available for the copy.
+        """
+        table = self.tables[slot]
+        old = table[idx]
+        if self.refcount.get(old, 0) <= 1:
+            return None
+        if not self._free:
+            raise MemoryError(
+                f"KV pool exhausted: no free page for copy-on-write of "
+                f"page {old} (slot {slot})"
+            )
+        new = self._free.popleft()
+        table[idx] = new
+        self.refcount[old] -= 1
+        self.refcount[new] = 1
+        self.n_pages_allocated += 1
+        self.n_cow_copies += 1
+        return old, new
+
+    def free(self, slot: Hashable) -> List[int]:
+        """Evict ``slot``: decrement refcounts; pages reaching zero return
+        to the free list for reuse.  Returns the *released* pages (shared
+        pages another table still holds are not released)."""
+        released: List[int] = []
+        for p in self.tables.pop(slot, []):
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                del self.refcount[p]
+                released.append(p)
+        self._free.extend(released)
+        return released
+
+    def table_row(self, slot: Hashable, pages_per_slot: int) -> List[int]:
         """Fixed-width table row (padded with the null page)."""
         t = self.tables.get(slot, [])
         if len(t) > pages_per_slot:
@@ -142,6 +214,15 @@ def init_pool(cfg: ModelConfig, n_pages: int, page_size: int, dtype) -> Tree:
     )
 
 
+def page_nbytes(pool: Tree) -> int:
+    """Bytes one page id holds across every cache entry and layer period
+    (the unit of the modeled decode-traffic accounting)."""
+    return sum(
+        leaf.dtype.itemsize * leaf.shape[0] * int(np.prod(leaf.shape[2:]))
+        for leaf in jax.tree.leaves(pool)
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("page_size",))
 def gather_pages(pool: Tree, tables: jnp.ndarray, *, page_size: int) -> Tree:
     """(B, P) page tables -> dense caches (n_periods, B, P*page_size, KV, hd)."""
@@ -157,17 +238,42 @@ def gather_pages(pool: Tree, tables: jnp.ndarray, *, page_size: int) -> Tree:
 @functools.partial(jax.jit, static_argnames=("page_size",))
 def scatter_prefill(pool: Tree, dense: Tree, page_ids: jnp.ndarray, *,
                     page_size: int) -> Tree:
-    """Write a batch-1 prefill cache (np, 1, S_pad, KV, hd) into its pages.
+    """Write prefill caches into their pages.
 
-    ``page_ids``: (S_pad / page_size,) distinct page ids.
+    ``dense``: (np, n, S_pad, KV, hd) — a batch of ``n`` same-bucket prefills;
+    ``page_ids``: (n, S_pad / page_size) page ids per row — (S_pad/page_size,)
+    for the single-prompt case.  Rows padded with the null page write junk
+    into the null page only (never over live data).
     """
-    n = page_ids.shape[0]
+    if page_ids.ndim == 1:
+        page_ids = page_ids[None]
+    n, n_pg = page_ids.shape
 
     def put(pg, dn):
-        chunks = dn[:, 0].reshape(pg.shape[0], n, page_size, *pg.shape[3:])
+        chunks = dn.reshape(pg.shape[0], n, n_pg, page_size, *pg.shape[3:])
         return pg.at[:, page_ids].set(chunks)
 
     return jax.tree.map(put, pool, dense)
+
+
+@functools.partial(jax.jit, static_argnames=("pg_lo", "n_pg", "page_size"))
+def scatter_pages(pool: Tree, dense: Tree, page_ids: jnp.ndarray, *,
+                  pg_lo: int, n_pg: int, page_size: int) -> Tree:
+    """Write pages ``[pg_lo, pg_lo + n_pg)`` of a single slot's dense view
+    (np, 1, P*page_size, KV, hd) back into the pool (the chunk-prefill
+    commit).  ``page_ids``: (n_pg,) destination pages."""
+
+    def put(pg, dn):
+        chunks = dn[:, 0].reshape(pg.shape[0], -1, page_size, *pg.shape[3:])
+        return pg.at[:, page_ids].set(chunks[:, pg_lo:pg_lo + n_pg])
+
+    return jax.tree.map(put, pool, dense)
+
+
+@jax.jit
+def copy_page(pool: Tree, src: jnp.ndarray, dst: jnp.ndarray) -> Tree:
+    """Physical copy-on-write: duplicate page ``src`` into page ``dst``."""
+    return jax.tree.map(lambda pg: pg.at[:, dst].set(pg[:, src]), pool)
 
 
 @functools.partial(jax.jit, static_argnames=("page_size",))

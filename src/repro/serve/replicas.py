@@ -171,6 +171,11 @@ class ReplicaSet:
                 "n_migrations", "n_restore_snapshot", "n_restore_replay",
                 "replayed_tokens", "restored_bytes",
                 "n_snapshots", "snapshot_bytes",
+                # modeled decode traffic + prefix-sharing accounting
+                # (harvested from each engine's counters)
+                "decode_rounds", "kv_bytes_dense", "kv_bytes_paged",
+                "shared_prefix_tokens", "n_prefix_hits", "n_pages_shared",
+                "n_pages_allocated", "n_pages_forked", "n_cow_pages",
             )
         }
 
@@ -212,6 +217,21 @@ class ReplicaSet:
                     self.alive.add(ev.rank)
                     self.acct["n_revives"] += 1
                     self._emit(ServeEvent(t, "revive", replica=ev.rank), out)
+
+        # 2.5 chunked prefills: each pending prompt advances one page-aligned
+        # chunk, interleaved with the decode rounds below (finished prompts
+        # emit their first token here)
+        for r in sorted(self.alive):
+            for rs, tok, done in self.engines[r].step_prefills(t):
+                self.acct["n_tokens"] += 1
+                self._emit(
+                    ServeEvent(t, "token", req=rs.rid, replica=r, token=tok),
+                    out,
+                )
+                if done:
+                    self.registry.drop(rs.rid)
+                    self._emit(ServeEvent(t, "complete", req=rs.rid,
+                                          replica=r), out)
 
         # 3. admissions (fresh requests and migrants, least-loaded first)
         for r in sorted(self.alive,
@@ -258,6 +278,7 @@ class ReplicaSet:
         # *held* for peers; snapshots of its own requests held elsewhere
         # survive and drive the snapshot-path migration
         self.registry.lose_holder(r)
+        self._harvest(self.engines[r])
         migrants = self.engines[r].kill()
         self.engines[r] = None
         self.alive.discard(r)
@@ -276,13 +297,37 @@ class ReplicaSet:
             budget = self.ecfg.max_slots
         else:
             budget = self.ecfg.max_prefills_per_step
+
+        group: List = []  # bound same-bucket full prefills, flushed as one
+
+        def emit_prefilled(rs, tok) -> None:
+            self._emit(ServeEvent(t, "admit", req=rs.rid, replica=r), out)
+            if tok is None:  # chunked: the first token arrives later
+                return
+            self.acct["n_tokens"] += 1
+            self._emit(ServeEvent(t, "token", req=rs.rid, replica=r,
+                                  token=tok), out)
+            if rs.done:  # max_new_tokens == 1: done at the prefill
+                self.registry.drop(rs.rid)
+                self._emit(ServeEvent(t, "complete", req=rs.rid,
+                                      replica=r), out)
+
+        def flush() -> None:
+            if not group:
+                return
+            toks = eng.prefill_bound([(s, rs) for s, rs, _ in group], t)
+            for (_, rs, _), tok in zip(group, toks):
+                emit_prefilled(rs, tok)
+            group.clear()
+
         admitted = 0
         while self.queue and admitted < budget:
             rs = self.queue[0]
-            if not eng.can_admit(rs):
-                break
-            self.queue.pop(0)
             if rs.emitted:  # migrated / re-queued: restore, don't restart
+                flush()
+                if not eng.can_admit(rs):
+                    break
+                self.queue.pop(0)
                 snap = self.registry.get(rs.rid)
                 path, replayed = eng.admit_restored(rs, snap, t)
                 key = "n_restore_snapshot" if path == "snapshot" else \
@@ -298,16 +343,28 @@ class ReplicaSet:
                     nbytes=snap.nbytes if snap is not None else 0,
                 ), out)
             else:
-                tok = eng.admit_new(rs, t)
-                self.acct["n_tokens"] += 1
-                self._emit(ServeEvent(t, "admit", req=rs.rid, replica=r), out)
-                self._emit(ServeEvent(t, "token", req=rs.rid, replica=r,
-                                      token=tok), out)
-                if rs.done:  # max_new_tokens == 1: done at the prefill
-                    self.registry.drop(rs.rid)
-                    self._emit(ServeEvent(t, "complete", req=rs.rid,
-                                          replica=r), out)
+                bound = eng.try_bind(rs, t)
+                if bound is None:
+                    break
+                self.queue.pop(0)
+                slot, plan, is_complex = bound
+                bucket = eng.prefill_bucket(rs)
+                if is_complex:
+                    # forked-prefix / chunked prompts run individually
+                    flush()
+                    tok = eng.start_prefill(slot, rs, plan, t)
+                    emit_prefilled(rs, tok)
+                else:
+                    if group and group[0][2] != bucket:
+                        flush()  # bucket changed: new batched forward
+                    group.append((slot, rs, bucket))
             admitted += 1
+        flush()
+
+    def _harvest(self, eng) -> None:
+        """Fold an engine's modeled-traffic / sharing counters into acct."""
+        for k, v in eng.drain_stats().items():
+            self.acct[k] += v
 
     # ------------------------------------------------------------------
     def run(self, workload: Sequence[Request], max_steps: int = 10_000
@@ -326,6 +383,8 @@ class ReplicaSet:
                     pending.discard(ev.req)
             step_wall.append(time.perf_counter() - t0)
             t += 1
+        for r in sorted(self.alive):
+            self._harvest(self.engines[r])
         return ServeResult(
             states=dict(self.requests),
             accounting=dict(self.acct),

@@ -42,6 +42,7 @@ class WorkloadSpec:
     mean_interarrival_steps: float = 1.0
     prompt_len: Tuple[int, int] = (4, 24)   # inclusive [lo, hi]
     new_tokens: Tuple[int, int] = (4, 32)   # inclusive [lo, hi]
+    shared_prefix: int = 0  # common prompt prefix length (COW page sharing)
 
     def to_json(self) -> dict:
         return {
@@ -50,6 +51,7 @@ class WorkloadSpec:
             "mean_interarrival_steps": self.mean_interarrival_steps,
             "prompt_len": list(self.prompt_len),
             "new_tokens": list(self.new_tokens),
+            "shared_prefix": self.shared_prefix,
         }
 
     @classmethod
@@ -60,19 +62,33 @@ class WorkloadSpec:
             mean_interarrival_steps=float(d["mean_interarrival_steps"]),
             prompt_len=tuple(d["prompt_len"]),
             new_tokens=tuple(d["new_tokens"]),
+            shared_prefix=int(d.get("shared_prefix", 0)),
         )
 
 
 def build_workload(spec: WorkloadSpec) -> List[Request]:
-    """Requests in arrival order, a pure function of the spec."""
+    """Requests in arrival order, a pure function of the spec.
+
+    ``shared_prefix > 0`` prepends one common seeded token run to every
+    prompt (the "same system prompt" workload the COW prefix sharing
+    dedups); ``prompt_len`` then bounds the per-request unique tail.  The
+    prefix draw is skipped entirely at 0 so legacy specs consume the exact
+    same RNG stream (golden traces replay unchanged).
+    """
     rng = np.random.default_rng(spec.seed)
+    prefix: Tuple[int, ...] = ()
+    if spec.shared_prefix > 0:
+        prefix = tuple(
+            int(x)
+            for x in rng.integers(0, spec.vocab_size, size=spec.shared_prefix)
+        )
     t = 0.0
     out: List[Request] = []
     for rid in range(spec.n_requests):
         t += rng.exponential(spec.mean_interarrival_steps)
         plen = int(rng.integers(spec.prompt_len[0], spec.prompt_len[1] + 1))
         gen = int(rng.integers(spec.new_tokens[0], spec.new_tokens[1] + 1))
-        prompt = tuple(
+        prompt = prefix + tuple(
             int(x) for x in rng.integers(0, spec.vocab_size, size=plen)
         )
         out.append(Request(rid, int(t), prompt, gen))

@@ -114,9 +114,19 @@ def run_from_header(header: ServeTraceHeader,
     return result, rset.events
 
 
-def replay_serve_trace(path, replay_record: Optional[str] = None) -> List[str]:
-    """Re-simulate ``path`` and return mismatch descriptions (empty = exact)."""
+def replay_serve_trace(path, replay_record: Optional[str] = None,
+                       paged_kernel: bool = False) -> List[str]:
+    """Re-simulate ``path`` and return mismatch descriptions (empty = exact).
+
+    ``paged_kernel=True`` replays with the page-table-walking flash-decode
+    kernel regardless of what the trace recorded — the CI serve-smoke uses
+    this to pin that swapping the decode data path never changes a single
+    event or token.
+    """
     trace = load_serve_trace(path)
+    if paged_kernel:
+        trace.header.engine = dict(trace.header.engine,
+                                   use_paged_kernel=True)
     result, events = run_from_header(trace.header, record_path=replay_record)
     return verify_serve_replay(
         trace, events, accounting=result.accounting,
@@ -141,10 +151,15 @@ def header_from_args(args) -> ServeTraceHeader:
         mean_interarrival_steps=args.mean_interarrival,
         prompt_len=(args.prompt_min, args.prompt_max),
         new_tokens=(args.gen_min, args.gen_max),
+        shared_prefix=args.shared_prefix,
     )
     ecfg = EngineConfig(
         max_slots=args.slots, page_size=args.page_size,
         pages_per_slot=args.pages_per_slot,
+        max_prefills_per_step=args.max_prefills,
+        use_paged_kernel=args.paged_kernel,
+        prefill_chunk_pages=args.chunk_pages,
+        prefix_sharing=args.prefix_sharing or args.shared_prefix > 0,
     )
     return ServeTraceHeader(
         config=args.config, reduced=args.reduced, dtype="float32",
@@ -181,6 +196,18 @@ def main(argv=None) -> int:
     ap.add_argument("--transfer-steps", type=int, default=1)
     ap.add_argument("--snapshot-cadence", type=int, default=2)
     ap.add_argument("--no-snapshots", action="store_true")
+    ap.add_argument("--paged-kernel", action="store_true",
+                    help="page-table-walking flash-decode (on replay: "
+                         "override the recorded engine config)")
+    ap.add_argument("--max-prefills", type=int, default=1,
+                    help="batched-prefill admission budget per step")
+    ap.add_argument("--chunk-pages", type=int, default=0,
+                    help="chunk prompts longer than this many pages")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="COW page sharing for common prompt prefixes")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="shared prompt-prefix tokens in the workload "
+                         "(implies --prefix-sharing)")
     ap.add_argument("--record", default=None, metavar="PATH")
     ap.add_argument("--replay", default=None, metavar="PATH")
     ap.add_argument("--replay-record", default=None, metavar="PATH",
@@ -188,13 +215,16 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     if args.replay:
-        problems = replay_serve_trace(args.replay, args.replay_record)
+        problems = replay_serve_trace(
+            args.replay, args.replay_record, paged_kernel=args.paged_kernel
+        )
         if problems:
             print(f"serve replay DIVERGED from {args.replay}:")
             for p in problems:
                 print(f"  {p}")
             return 1
-        print(f"serve replay of {args.replay} is bit-exact")
+        kernel = " (paged kernel)" if args.paged_kernel else ""
+        print(f"serve replay of {args.replay} is bit-exact{kernel}")
         return 0
 
     header = header_from_args(args)

@@ -273,3 +273,86 @@ def test_decode_attention_ragged_matches_scalar_rows():
         np.testing.assert_allclose(
             np.asarray(o[i:i + 1]), np.asarray(row), atol=2e-5
         )
+
+
+# ---------------------------------------------------------------------------
+# paged flash decode (page-table-walking serving kernel)
+# ---------------------------------------------------------------------------
+
+
+def _random_paged_layout(rng, B, P, n_pages):
+    """Distinct random live pages per slot (null page 0 never handed out)."""
+    perm = rng.permutation(np.arange(1, n_pages))
+    return np.asarray(perm[: B * P].reshape(B, P), np.int32)
+
+
+@pytest.mark.parametrize("seed", [0, 7, 1234])
+def test_paged_decode_bitwise_matches_dense_gather(seed):
+    """The page-table walk must be BITWISE identical to gathering the pages
+    dense and running flash_decode with block_k == page_size — any random
+    physical layout, any ragged lengths.  This is the zero-copy contract:
+    swapping the decode data path can never change logits."""
+    rng = np.random.default_rng(seed)
+    B, H, KV, hd, ps, P = 3, 4, 2, 32, 8, 6
+    n_pages = 1 + 2 * B * P
+    q = jnp.asarray(rng.normal(size=(B, 1, H, hd)), jnp.float32)
+    k_pages = jnp.asarray(rng.normal(size=(n_pages, ps, KV, hd)), jnp.float32)
+    v_pages = jnp.asarray(rng.normal(size=(n_pages, ps, KV, hd)), jnp.float32)
+    tables = _random_paged_layout(rng, B, P, n_pages)
+    lens = jnp.asarray(rng.integers(0, P * ps + 1, size=B), jnp.int32)
+
+    o_paged = ops.paged_flash_decode(
+        q, k_pages, v_pages, jnp.asarray(tables), lens
+    )
+    kd = k_pages[tables].reshape(B, P * ps, KV, hd)
+    vd = v_pages[tables].reshape(B, P * ps, KV, hd)
+    o_dense = ops.flash_decode(q, kd, vd, lens, block_k=ps)
+    assert bool(jnp.all(o_paged == o_dense)), "paged != dense bitwise"
+
+
+def test_paged_decode_layout_invariance():
+    """Two different physical page layouts holding the same logical rows
+    produce bit-identical outputs."""
+    rng = np.random.default_rng(3)
+    B, H, KV, hd, ps, P = 2, 4, 2, 16, 4, 4
+    n_pages = 1 + 3 * B * P
+    q = jnp.asarray(rng.normal(size=(B, 1, H, hd)), jnp.float32)
+    rows = rng.normal(size=(2, B, P * ps, KV, hd)).astype(np.float32)
+    lens = jnp.asarray([5, P * ps], jnp.int32)
+
+    outs = []
+    for layout_seed in (0, 99):
+        lrng = np.random.default_rng(layout_seed)
+        tables = _random_paged_layout(lrng, B, P, n_pages)
+        k_pages = np.asarray(lrng.normal(size=(n_pages, ps, KV, hd)),
+                             np.float32)  # junk in unused pages
+        v_pages = np.asarray(lrng.normal(size=(n_pages, ps, KV, hd)),
+                             np.float32)
+        for b in range(B):
+            for pi in range(P):
+                k_pages[tables[b, pi]] = rows[0, b, pi * ps:(pi + 1) * ps]
+                v_pages[tables[b, pi]] = rows[1, b, pi * ps:(pi + 1) * ps]
+        outs.append(ops.paged_flash_decode(
+            q, jnp.asarray(k_pages), jnp.asarray(v_pages),
+            jnp.asarray(tables), lens,
+        ))
+    assert bool(jnp.all(outs[0] == outs[1]))
+
+
+def test_paged_decode_null_lanes_are_zero():
+    """Inactive slots (null tables, length 0) emit exactly zero — same as
+    the dense kernel's empty-accumulator finish."""
+    rng = np.random.default_rng(1)
+    B, H, KV, hd, ps, P = 2, 2, 1, 16, 4, 3
+    n_pages = 1 + B * P
+    q = jnp.asarray(rng.normal(size=(B, 1, H, hd)), jnp.float32)
+    k_pages = jnp.asarray(rng.normal(size=(n_pages, ps, KV, hd)), jnp.float32)
+    v_pages = jnp.asarray(rng.normal(size=(n_pages, ps, KV, hd)), jnp.float32)
+    tables = _random_paged_layout(rng, B, P, n_pages)
+    tables[1] = 0  # slot 1 inactive
+    lens = jnp.asarray([P * ps, 0], jnp.int32)
+    o = ops.paged_flash_decode(
+        q, k_pages, v_pages, jnp.asarray(tables), lens
+    )
+    assert bool(jnp.all(o[1] == 0.0))
+    assert bool(jnp.all(jnp.isfinite(o)))

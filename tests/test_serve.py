@@ -199,6 +199,95 @@ def test_random_page_layouts_are_bit_identical(setup, baseline, layout_seed):
 
 
 # ---------------------------------------------------------------------------
+# zero-copy paged decode, batched/chunked prefill, COW prefix sharing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("layout_seed", [None, 7])
+def test_paged_kernel_streams_bit_identical(setup, baseline, layout_seed):
+    """The page-table-walking flash-decode kernel replaces the dense
+    gather/scatter round-trip without changing a single token — over the
+    default and a shuffled physical page layout."""
+    _, ref = baseline
+    ecfg = dataclasses.replace(ECFG, use_paged_kernel=True)
+    _, paged = run_set(setup, ecfg=ecfg, layout_seed=layout_seed)
+    assert paged.streams() == ref.streams()
+    acct = paged.accounting
+    assert acct["decode_rounds"] > 0
+    # the walk touches only the pages each slot covers, never B * P
+    assert 0 < acct["kv_bytes_paged"] < acct["kv_bytes_dense"]
+
+
+def test_batched_prefill_streams_bit_identical(setup, baseline):
+    """Admitting several same-bucket prompts as one bucketed forward call
+    changes scheduling (fewer steps), never tokens."""
+    _, ref = baseline
+    ecfg = dataclasses.replace(ECFG, max_prefills_per_step=3)
+    _, batched = run_set(setup, ecfg=ecfg)
+    assert batched.streams() == ref.streams()
+    assert batched.n_steps <= ref.n_steps
+
+
+def test_chunked_prefill_streams_bit_identical(setup, baseline):
+    """Splitting long prompts into page-aligned chunks interleaved with
+    decode rounds keeps every stream identical (TTFT shifts, tokens don't)."""
+    _, ref = baseline
+    ecfg = dataclasses.replace(ECFG, prefill_chunk_pages=1)
+    _, chunked = run_set(setup, ecfg=ecfg)
+    assert chunked.streams() == ref.streams()
+
+
+SHARE_ECFG = dataclasses.replace(ECFG, pages_per_slot=10)
+SHARE_SPEC = dataclasses.replace(SPEC, shared_prefix=6)
+
+
+def test_prefix_sharing_streams_bit_identical(setup):
+    """COW prefix sharing forks pages and skips prefill compute for the
+    shared span — token streams match the unshared run exactly."""
+    _, ref = run_set(setup, ecfg=SHARE_ECFG, spec=SHARE_SPEC)
+    cow = dataclasses.replace(SHARE_ECFG, prefix_sharing=True)
+    _, shared = run_set(setup, ecfg=cow, spec=SHARE_SPEC)
+    assert shared.streams() == ref.streams()
+    acct = shared.accounting
+    assert acct["n_prefix_hits"] > 0
+    assert acct["n_pages_forked"] > 0
+    # shared_prefix=6 is not page-aligned (ps=4): the forked partial page
+    # must detach via write-triggered COW
+    assert acct["n_cow_pages"] > 0
+    assert acct["shared_prefix_tokens"] > 0
+
+
+@pytest.mark.parametrize("snapshots", [True, False])
+def test_prefix_sharing_failover_never_corrupts_siblings(setup, snapshots):
+    """Kill a replica while slots share forked prefix pages: migrated
+    requests and the surviving siblings both finish bit-identically (via
+    the KV-snapshot path and the re-prefill path)."""
+    _, ref = run_set(setup, ecfg=SHARE_ECFG, spec=SHARE_SPEC)
+    cow = dataclasses.replace(SHARE_ECFG, prefix_sharing=True)
+    _, killed = run_set(
+        setup, ecfg=cow, spec=SHARE_SPEC, n_replicas=2,
+        injectors=[kill_at(5, 0)], snapshots=snapshots, snapshot_cadence=1,
+    )
+    assert killed.accounting["n_kills"] == 1
+    assert killed.accounting["n_migrations"] >= 1
+    assert killed.streams() == ref.streams()
+    assert all(rs.done for rs in killed.states.values())
+
+
+def test_all_serve_paths_compose(setup, baseline):
+    """Paged kernel + batched + chunked prefill together still reproduce
+    the baseline streams."""
+    _, ref = baseline
+    ecfg = dataclasses.replace(
+        ECFG, use_paged_kernel=True, max_prefills_per_step=2,
+        prefill_chunk_pages=2,
+    )
+    _, combo = run_set(setup, ecfg=ecfg, n_replicas=2,
+                       injectors=[kill_at(6, 1)], snapshot_cadence=2)
+    assert combo.streams() == ref.streams()
+
+
+# ---------------------------------------------------------------------------
 # failover determinism — the acceptance criterion
 # ---------------------------------------------------------------------------
 
@@ -383,6 +472,19 @@ def test_golden_serve_trace_replays_bit_exactly():
     from repro.serve.run import replay_serve_trace
 
     problems = replay_serve_trace("tests/data/golden_trace_serve.jsonl")
+    assert problems == [], "\n".join(problems)
+
+
+@pytest.mark.chaos
+def test_golden_serve_trace_replays_with_paged_kernel():
+    """The committed golden trace (recorded on the dense path) must replay
+    bit-exactly with the page-table-walking kernel swapped in — the
+    engine-level pin of the zero-copy contract."""
+    from repro.serve.run import replay_serve_trace
+
+    problems = replay_serve_trace(
+        "tests/data/golden_trace_serve.jsonl", paged_kernel=True
+    )
     assert problems == [], "\n".join(problems)
 
 

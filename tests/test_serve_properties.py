@@ -1,9 +1,12 @@
 """Hypothesis invariants for the paged-KV page allocator.
 
 The pool-safety properties the serve engine's failover story rests on:
-pages are never shared by two live slots, eviction never frees a live page
-(only the evicted slot's own pages return to the free list), the null page
-is never allocated, and pages are conserved through any alloc/free/reuse
+without forking, pages are never shared by two live slots; with
+copy-on-write prefix sharing, a page's refcount always equals the number of
+tables holding it, ``cow`` detaches a private copy without touching the
+shared page, eviction decrements instead of freeing (a page returns to the
+free list only when its last holder lets go), the null page is never
+allocated, and pages are conserved through any alloc/fork/cow/free/reuse
 sequence.
 """
 from tests.conftest import require_hypothesis
@@ -99,3 +102,141 @@ def test_shuffled_layouts_allocate_distinct_valid_pages(seed):
     assert sorted(got) == list(range(1, N_PAGES))
     with pytest.raises(MemoryError):
         alloc.ensure(1, 1)
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write prefix sharing
+# ---------------------------------------------------------------------------
+
+cow_ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("ensure"), st.integers(0, N_SLOTS - 1),
+                  st.integers(1, 3 * PAGE_SIZE)),
+        st.tuples(st.just("free"), st.integers(0, N_SLOTS - 1),
+                  st.just(0)),
+        st.tuples(st.just("fork"), st.integers(0, N_SLOTS - 1),
+                  st.integers(0, N_SLOTS - 1)),
+        st.tuples(st.just("cow"), st.integers(0, N_SLOTS - 1),
+                  st.integers(0, 31)),
+    ),
+    min_size=1, max_size=50,
+)
+
+
+def check_cow_invariants(alloc: PageAllocator, shadow):
+    # 1. a page's refcount equals the number of tables holding it — exactly
+    occ = {}
+    for t in alloc.tables.values():
+        for p in t:
+            occ[p] = occ.get(p, 0) + 1
+    assert occ == alloc.refcount, "refcount != table occurrences"
+    # 2. the allocator's tables match the shadow model page-for-page
+    assert {s: t for s, t in alloc.tables.items() if t} == {
+        s: t for s, t in shadow.items() if t
+    }
+    # 3. the null page is never handed out or forked
+    assert NULL_PAGE not in occ
+    assert NULL_PAGE not in alloc._free
+    # 4. conservation: distinct live pages + free == all allocatable pages
+    live = set(occ)
+    assert len(live) + alloc.free_count == N_PAGES - 1
+    assert live.isdisjoint(alloc._free)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=cow_ops, layout_seed=st.integers(0, 2**16))
+def test_cow_allocator_invariants(ops, layout_seed):
+    alloc = PageAllocator(
+        N_PAGES, PAGE_SIZE, rng=np.random.default_rng(layout_seed)
+    )
+    shadow = {}  # slot -> exact page list (reference model)
+    for kind, a, b in ops:
+        if kind == "ensure":
+            slot, n_tokens = a, b
+            need = pages_needed(n_tokens, PAGE_SIZE)
+            grow = max(need - len(shadow.get(slot, [])), 0)
+            if grow > alloc.free_count:
+                with pytest.raises(MemoryError):
+                    alloc.ensure(slot, n_tokens)
+            else:
+                new = alloc.ensure(slot, n_tokens)
+                assert len(new) == grow and NULL_PAGE not in new
+                shadow.setdefault(slot, []).extend(new)
+        elif kind == "free":
+            slot = a
+            mine = shadow.pop(slot, [])
+            held_elsewhere = {p for t in shadow.values() for p in t}
+            released = alloc.free(slot)
+            # eviction decrements: a page still held by a sibling (or the
+            # prefix registry) is NOT released to the free list
+            assert set(released) == {
+                p for p in mine if p not in held_elsewhere
+            }
+        elif kind == "fork":
+            dst, src = a, b
+            if dst == src:
+                continue
+            pages = [
+                p for p in shadow.get(src, [])
+                if p not in shadow.get(dst, [])
+            ][:2]
+            if not pages:
+                continue
+            alloc.fork(dst, pages)
+            shadow.setdefault(dst, []).extend(pages)
+        elif kind == "cow":
+            slot, idx = a, b
+            table = shadow.get(slot, [])
+            if not table:
+                continue
+            idx %= len(table)
+            page = table[idx]
+            n_holders = sum(
+                p == page for t in shadow.values() for p in t
+            )
+            if n_holders <= 1:
+                # private page: copy-on-write is a no-op
+                assert alloc.cow(slot, idx) is None
+            elif alloc.free_count == 0:
+                with pytest.raises(MemoryError):
+                    alloc.cow(slot, idx)
+            else:
+                old, new = alloc.cow(slot, idx)
+                # the copy is fresh and private; the shared page stays in
+                # every sibling table untouched
+                assert old == page
+                assert new not in (page, NULL_PAGE)
+                assert alloc.refcount[new] == 1
+                assert alloc.refcount[old] == n_holders - 1
+                table[idx] = new
+        check_cow_invariants(alloc, shadow)
+
+
+@settings(max_examples=40, deadline=None)
+@given(layout_seed=st.integers(0, 2**16), n_sharers=st.integers(1, 3))
+def test_fork_evict_conservation(layout_seed, n_sharers):
+    """Any kill/evict order over slots sharing a prefix conserves pages and
+    never frees a page a sibling still reads."""
+    alloc = PageAllocator(
+        N_PAGES, PAGE_SIZE, rng=np.random.default_rng(layout_seed)
+    )
+    prefix = alloc.ensure(0, 2 * PAGE_SIZE)
+    for s in range(1, n_sharers + 1):
+        alloc.fork(s, prefix)
+        alloc.ensure(s, 3 * PAGE_SIZE)
+    for p in prefix:
+        assert alloc.refcount[p] == n_sharers + 1
+    # evict in an arbitrary-but-deterministic order; prefix pages release
+    # only at the last holder
+    order = list(range(n_sharers + 1))
+    rng = np.random.default_rng(layout_seed)
+    rng.shuffle(order)
+    for i, s in enumerate(order):
+        released = alloc.free(s)
+        remaining = alloc.live_pages()
+        assert set(released).isdisjoint(remaining)
+        if i < len(order) - 1:
+            live_prefix = [p for p in prefix if p in remaining]
+            assert live_prefix == prefix  # all sharers read them until last
+    assert alloc.free_count == N_PAGES - 1
+    assert not alloc.refcount
