@@ -12,10 +12,17 @@ page-table-walking flash-decode kernel (no dense gather);
 on copy-on-write page sharing, so shared prompt pages are forked instead of
 recomputed.  Either way the token streams are identical to the plain run.
 
+``--overload`` switches to the overload demo: a bursty, long-tail,
+priority-class workload against an undersized page pool with
+``admission="priority"`` + evict-and-replay preemption, plus a traffic
+spike riding the chaos stream — preempted streams still come back
+token-identical (see docs/serving.md).
+
     PYTHONPATH=src python examples/serve_batched.py
     PYTHONPATH=src python examples/serve_batched.py --chaos pod
     PYTHONPATH=src python examples/serve_batched.py --paged-kernel
     PYTHONPATH=src python examples/serve_batched.py --shared-prefix 12
+    PYTHONPATH=src python examples/serve_batched.py --overload
 """
 import argparse
 import time
@@ -44,6 +51,9 @@ def main():
                     help="zero-copy decode via the page-table-walking kernel")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="common prompt prefix tokens (enables COW sharing)")
+    ap.add_argument("--overload", action="store_true",
+                    help="bursty priority workload + undersized pool with "
+                         "shedding, preemption, and a traffic spike")
     args = ap.parse_args()
 
     cfg = reduced(get_config("qwen3-0.6b"), dtype="float32")
@@ -53,24 +63,54 @@ def main():
     flags = build_flags(cfg, par, mesh)
     params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
 
-    spec = WorkloadSpec(n_requests=args.requests, vocab_size=cfg.vocab_size,
-                        seed=1, prompt_len=(4, 16), new_tokens=(4, 16),
-                        shared_prefix=args.shared_prefix)
+    if args.overload:
+        # the bench overload shape (benchmarks/serve_bench.py) at demo
+        # size: long-tail batch work admitted during lulls holds pages when
+        # the next burst's interactive traffic lands — preemption evicts it
+        spec = WorkloadSpec(
+            n_requests=max(args.requests, 96), vocab_size=cfg.vocab_size,
+            seed=4, mean_interarrival_steps=1.8,
+            prompt_len=(4, 24), new_tokens=(2, 40),
+            shared_prefix=16, n_prefix_groups=4,
+            arrival="bursty", burst_factor=8.0, burst_period=120,
+            burst_duty=0.2, length_dist="longtail",
+            priority_classes=((2, 0.2, 30), (1, 0.3, 90), (0, 0.5, 0)),
+        )
+    else:
+        spec = WorkloadSpec(n_requests=args.requests,
+                            vocab_size=cfg.vocab_size,
+                            seed=1, prompt_len=(4, 16), new_tokens=(4, 16),
+                            shared_prefix=args.shared_prefix)
     workload = build_workload(spec)
     chaos = (
         {"kind": "pod", "fail_every_steps": 8, "heal_steps": 4,
          "ranks_per_pod": 1, "transfer_steps": 1}
         if args.chaos == "pod" else {"kind": "none"}
     )
-    ecfg = EngineConfig(
-        max_slots=4, page_size=8,
-        pages_per_slot=4 + -(-args.shared_prefix // 8),
-        use_paged_kernel=args.paged_kernel,
-        prefix_sharing=args.shared_prefix > 0,
-    )
+    if args.overload:  # a traffic spike rides the chaos stream
+        spike = {"kind": "spike", "mean_interval_steps": 60,
+                 "duration_steps": 12, "magnitude": 3.0}
+        chaos = (spike if chaos["kind"] == "none"
+                 else {"kind": "multi", "specs": [chaos, spike]})
+    if args.overload:
+        ecfg = EngineConfig(
+            max_slots=6, page_size=8, pages_per_slot=10, n_pages=34,
+            admission="priority", preemption=True,
+            max_prefills_per_step=2,
+            use_paged_kernel=args.paged_kernel,
+            prefix_sharing=True,
+        )
+    else:
+        ecfg = EngineConfig(
+            max_slots=4, page_size=8,
+            pages_per_slot=4 + -(-args.shared_prefix // 8),
+            use_paged_kernel=args.paged_kernel,
+            prefix_sharing=args.shared_prefix > 0,
+        )
     rset = ReplicaSet(
         cfg, params, rules, flags, ecfg,
-        n_replicas=2, injectors=injectors_from_spec(chaos), chaos_seed=7,
+        n_replicas=1 if args.overload else 2,
+        injectors=injectors_from_spec(chaos), chaos_seed=7,
     )
 
     t0 = time.time()
@@ -95,6 +135,14 @@ def main():
             f"  paged kernel: {acct['kv_bytes_paged'] / 1e6:.1f} MB modeled "
             f"KV traffic vs {acct['kv_bytes_dense'] / 1e6:.1f} MB for the "
             f"dense gather ({acct['decode_rounds']} decode rounds)"
+        )
+    if args.overload:
+        n_good = sum(rs.good for rs in result.states.values())
+        print(
+            f"  overload: {acct['n_spikes']} traffic spikes, "
+            f"{acct['n_shed']} shed, {acct['n_preemptions']} preemptions "
+            f"({acct['preempted_tokens']} tokens evicted+replayed), "
+            f"goodput {n_good}/{acct['n_requests']}"
         )
     if args.shared_prefix:
         print(

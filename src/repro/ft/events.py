@@ -19,6 +19,12 @@ Kinds:
                              healed and finished its state transfer, so the
                              rank re-enters the data-parallel group (elastic
                              resize).  ``rank``-level, no ``device``.
+  traffic_spike / traffic_calm — a cluster-wide arrival-rate surge:
+                             requests arrive ``magnitude``× faster than the
+                             workload's nominal rate while active.  Overload
+                             is chaos like any other — the serve engine's
+                             preemption/shedding behavior under a spike is
+                             pinned by golden traces exactly like crashes.
 """
 from __future__ import annotations
 
@@ -33,16 +39,18 @@ NET_DEGRADE = "net_degrade"
 NET_RESTORE = "net_restore"
 NODE_HEAL = "heal"
 RANK_REJOIN = "rejoin"
+TRAFFIC_SPIKE = "traffic_spike"
+TRAFFIC_CALM = "traffic_calm"
 
 EVENT_KINDS = (
     FAIL, RECOVER, STRAGGLE, STRAGGLE_END, NET_DEGRADE, NET_RESTORE,
-    NODE_HEAL, RANK_REJOIN,
+    NODE_HEAL, RANK_REJOIN, TRAFFIC_SPIKE, TRAFFIC_CALM,
 )
 
 # Kinds that *cause* chaos (replayed from a trace); the rest are derived by
 # the engine's expiry/membership bookkeeping and recomputed identically on
 # replay.
-CAUSE_KINDS = frozenset({FAIL, STRAGGLE, NET_DEGRADE, NODE_HEAL})
+CAUSE_KINDS = frozenset({FAIL, STRAGGLE, NET_DEGRADE, NODE_HEAL, TRAFFIC_SPIKE})
 
 
 @dataclass(frozen=True)

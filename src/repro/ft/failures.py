@@ -35,6 +35,8 @@ from repro.ft.events import (
     RECOVER,
     STRAGGLE,
     STRAGGLE_END,
+    TRAFFIC_CALM,
+    TRAFFIC_SPIKE,
     FailureEvent,
 )
 from repro.ft.injectors import (
@@ -80,6 +82,7 @@ class ChaosStepOutcome:
     events: Tuple[FailureEvent, ...]      # events emitted at this step
     device_times: Dict[Device, float]     # healthy devices only; stragglers slow
     net_inflation: float = 1.0            # recovery-traffic multiplier (>= 1)
+    arrival_mult: float = 1.0             # traffic-spike arrival-rate factor
 
 
 class ChaosEngine:
@@ -165,6 +168,9 @@ class ChaosEngine:
         elif ev.kind == NET_DEGRADE:
             st.net_degraded_until = ev.step + max(ev.duration_steps, 1)
             st.net_inflation = max(ev.magnitude, 1.0)
+        elif ev.kind == TRAFFIC_SPIKE:
+            st.spike_until = ev.step + max(ev.duration_steps, 1)
+            st.spike_mult = max(ev.magnitude, 1.0)
         elif ev.kind == NODE_HEAL:
             # repaired/replaced hardware: the device is no longer failed, but
             # needs ``duration_steps`` of state transfer before its rank can
@@ -188,6 +194,10 @@ class ChaosEngine:
             out.append(FailureEvent(step, NET_RESTORE, None, source="engine"))
             st.net_degraded_until = -1
             st.net_inflation = 1.0
+        if 0 <= st.spike_until <= step:
+            out.append(FailureEvent(step, TRAFFIC_CALM, None, source="engine"))
+            st.spike_until = -1
+            st.spike_mult = 1.0
         return out
 
     def _membership_transitions(self, step: int) -> List[FailureEvent]:
@@ -248,6 +258,7 @@ class ChaosEngine:
             events=tuple(emitted),
             device_times=device_times,
             net_inflation=inflation,
+            arrival_mult=st.spike_mult if st.spike_active(step) else 1.0,
         )
         if self.recorder is not None:
             self.recorder.record(emitted)

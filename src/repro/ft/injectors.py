@@ -18,6 +18,8 @@ Built-ins:
   * :class:`DomainOutageWithHealInjector` — a whole failure domain lost until
     repaired/replaced hardware *heals* it; drives the elastic DP
     drop → heal → rejoin machinery.
+  * :class:`TrafficSpikeInjector` — arrival-rate surges (serve-side
+    overload expressed as chaos; drives preemption/shedding golden traces).
   * :class:`ScheduledInjector` — deterministic pre-programmed events
     (tests / examples / trace replay).
 """
@@ -33,6 +35,7 @@ from repro.ft.events import (
     NET_DEGRADE,
     NODE_HEAL,
     STRAGGLE,
+    TRAFFIC_SPIKE,
     FailureEvent,
 )
 
@@ -50,6 +53,9 @@ class GridState:
     straggling_until: Dict[Device, Tuple[int, float]] = field(default_factory=dict)
     net_degraded_until: int = -1
     net_inflation: float = 1.0
+    # traffic spike: arrival-rate surge (serve-side overload chaos)
+    spike_until: int = -1
+    spike_mult: float = 1.0
     # elastic DP membership (engine-owned; only mutated when elastic mode on)
     detached: Set[int] = field(default_factory=set)
     heal_ready: Dict[Device, int] = field(default_factory=dict)
@@ -71,6 +77,9 @@ class GridState:
 
     def net_active(self, step: int) -> bool:
         return step < self.net_degraded_until
+
+    def spike_active(self, step: int) -> bool:
+        return step < self.spike_until
 
     def slowdown(self, dev: Device) -> float:
         entry = self.straggling_until.get(dev)
@@ -475,6 +484,54 @@ class NetworkDegradationInjector(Injector):
         d = super().describe()
         d.update(mean_interval_s=self.mean_interval_s,
                  duration_s=self.duration_s, inflation=self.inflation)
+        return d
+
+
+# ---------------------------------------------------------------------------
+# Traffic spikes — overload expressed as chaos
+# ---------------------------------------------------------------------------
+
+
+class TrafficSpikeInjector(Injector):
+    """Bursty arrival-rate surges: overload as an injectable event stream.
+
+    While a spike is active, consumers that admit external work (the serve
+    :class:`~repro.serve.replicas.ReplicaSet`) advance their arrival clock
+    ``magnitude``× faster than the workload's nominal rate — ``magnitude``
+    nominal time-units of queued arrivals land per engine step, piling
+    page pressure onto the admission path.  Spikes ride the same Poisson /
+    duration / derived-end lifecycle as network brownouts, so recorded
+    traces replay them bit-exactly and golden traces pin the engine's
+    preemption and shedding decisions under overload.
+    """
+
+    name = "traffic-spike"
+
+    def __init__(self, mean_interval_s: float, duration_s: float,
+                 magnitude: float = 4.0):
+        super().__init__()
+        if magnitude < 1.0:
+            raise ValueError(f"spike magnitude must be >= 1, got {magnitude}")
+        self.mean_interval_s = mean_interval_s
+        self.duration_s = duration_s
+        self.magnitude = magnitude
+
+    def emit(self, step: int, state: GridState) -> List[FailureEvent]:
+        if state.spike_active(step):
+            return []
+        lam = state.step_time_s / self.mean_interval_s
+        if self.rng.random() >= min(lam, 1.0):
+            return []
+        dur = max(int(round(self.duration_s / state.step_time_s)), 1)
+        return [
+            FailureEvent(step, TRAFFIC_SPIKE, None, duration_steps=dur,
+                         magnitude=self.magnitude, source=self.name)
+        ]
+
+    def describe(self) -> dict:
+        d = super().describe()
+        d.update(mean_interval_s=self.mean_interval_s,
+                 duration_s=self.duration_s, magnitude=self.magnitude)
         return d
 
 

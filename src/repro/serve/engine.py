@@ -97,18 +97,24 @@ class EngineConfig:
     page_size: int = 16         # tokens per KV page
     pages_per_slot: int = 8     # page-table width -> max_len per request
     n_pages: int = 0            # physical pages incl. null; 0 -> full reserve
-    admission: str = "continuous"   # "continuous" | "lockstep" (baseline)
+    admission: str = "continuous"   # "continuous" | "lockstep" | "priority"
     max_prefills_per_step: int = 1  # continuous admission budget per step
     use_paged_kernel: bool = False  # page-table-walking flash-decode
     kernel_interpret: bool = True   # Pallas interpret mode (CPU); False on TPU
     prefill_chunk_pages: int = 0    # chunk prompts longer than this (0 = off)
     prefix_sharing: bool = False    # COW page sharing for common prefixes
+    preemption: bool = False        # evict-and-replay under page pressure
 
     def __post_init__(self):
-        if self.admission not in ("continuous", "lockstep"):
+        if self.admission not in ("continuous", "lockstep", "priority"):
             raise ValueError(f"unknown admission policy {self.admission!r}")
         if self.prefill_chunk_pages < 0:
             raise ValueError("prefill_chunk_pages must be >= 0")
+        if self.preemption and self.admission != "priority":
+            raise ValueError(
+                "preemption picks victims by priority class — it requires "
+                "admission='priority'"
+            )
 
     @property
     def max_len(self) -> int:
@@ -252,10 +258,15 @@ class ServeEngine:
         self._registry: Dict[Tuple[int, ...], Tuple[str, List[int]]] = {}
         self._reg_counter = 0
         self._page_nbytes = page_nbytes(self.pool)
+        # admission-plan cache: (rid, state fingerprint) -> plan-or-None, so
+        # a can_admit probe and the bind that follows it plan once, not twice
+        self._planned: Optional[Tuple[int, Tuple[int, int, int],
+                                      Optional[AdmitPlan]]] = None
         self.stats: Dict[str, int] = {
             k: 0 for k in (
                 "decode_rounds", "kv_bytes_dense", "kv_bytes_paged",
                 "shared_prefix_tokens", "n_prefix_hits", "n_pages_shared",
+                "n_admission_plans", "n_preemptions",
             )
         }
 
@@ -272,6 +283,7 @@ class ServeEngine:
 
     def plan_admission(self, rs: RequestState) -> AdmitPlan:
         """Fork-aware page plan for a fresh request (deterministic)."""
+        self.stats["n_admission_plans"] += 1
         total = pages_needed(rs.req.total_len, self.ecfg.page_size)
         ps = self.ecfg.page_size
         S = len(rs.req.prompt)
@@ -291,20 +303,42 @@ class ServeEngine:
                 )
         return AdmitPlan(need=total)
 
+    def _fingerprint(self) -> Tuple[int, int, int]:
+        """Capacity-relevant state a cached admission plan depends on."""
+        return (self.alloc.free_count, self.n_active, len(self._registry))
+
     def _admissible(self, rs: RequestState) -> Optional[AdmitPlan]:
         """Capacity check; returns the admission plan when the request fits
-        (possibly after releasing registry-only prefix pages), else None."""
+        (possibly after releasing registry-only prefix pages), else None.
+
+        The result is cached against ``(rid, capacity fingerprint)`` so the
+        ``can_admit`` probe and the bind that follows share one planning
+        pass (see :meth:`try_bind` / :meth:`try_admit_restored`).
+        """
         if rs.req.total_len > self.ecfg.max_len:
             raise ValueError(
                 f"request {rs.rid} needs {rs.req.total_len} positions "
                 f"> max_len {self.ecfg.max_len}"
             )
         if self.free_slot() is None:
-            return None
-        plan = self.plan_admission(rs)
-        if self.alloc.free_count < plan.need:
-            self._release_prefixes(plan.need, protect=plan.donor)
-        return plan if self.alloc.free_count >= plan.need else None
+            plan = None
+        else:
+            plan = self.plan_admission(rs)
+            if self.alloc.free_count < plan.need:
+                self._release_prefixes(plan.need, protect=plan.donor)
+            if self.alloc.free_count < plan.need:
+                plan = None
+        self._planned = (rs.rid, self._fingerprint(), plan)
+        return plan
+
+    def _take_plan(self, rs: RequestState) -> Optional[AdmitPlan]:
+        """Cached admission plan for ``rs`` if still valid, else replan."""
+        if self._planned is not None:
+            rid, fp, plan = self._planned
+            if rid == rs.rid and fp == self._fingerprint():
+                self._planned = None
+                return plan
+        return self._admissible(rs)
 
     def can_admit(self, rs: RequestState) -> bool:
         return self._admissible(rs) is not None
@@ -330,7 +364,7 @@ class ServeEngine:
         ``complex`` marks prompts that must go through the chunk machinery
         (forked prefix or longer than the prefill chunk) instead of the
         batched full-prefill path."""
-        plan = self._admissible(rs)
+        plan = self._take_plan(rs)
         if plan is None:
             return None
         slot = self._bind(rs, plan)
@@ -570,6 +604,88 @@ class ServeEngine:
         old, new = self.alloc.cow(slot, idx)
         self.pool = copy_page(self.pool, jnp.int32(old), jnp.int32(new))
         self._tables[slot][idx] = new
+
+    # -- evict-and-replay preemption ----------------------------------
+    def plan_preemption(self, rs: RequestState, step: int
+                        ) -> Optional[List[int]]:
+        """Victim slots whose eviction lets ``rs`` admit, or None.
+
+        Deterministic policy: only slots running *strictly lower-priority*
+        requests are candidates (a preempt chain can never cycle), and only
+        ones whose delay cannot cost goodput — best-effort requests with no
+        deadline, or requests already past theirs (evicting a request still
+        inside its SLO window would just trade one deadline miss for
+        another).  Victims are taken lowest priority class first, youngest
+        (highest rid) within a class — the least-progressed work is the
+        cheapest to replay.  The dry-run uses
+        :meth:`PageAllocator.releasable` so COW-shared pages a surviving
+        sibling or the prefix registry still holds are never counted as
+        reclaimable capacity.
+        """
+        def evictable(s: RequestState) -> bool:
+            if s.req.priority >= rs.req.priority:
+                return False
+            return (
+                s.req.deadline_steps <= 0
+                or step > s.req.arrival_step + s.req.deadline_steps
+            )
+
+        cands = sorted(
+            (
+                i for i, s in enumerate(self.slots)
+                if s is not None and evictable(s)
+            ),
+            key=lambda i: (self.slots[i].req.priority, -self.slots[i].rid),
+        )
+        if not cands:
+            return None
+        need = self.plan_admission(rs).need
+        victims: List[int] = []
+        for v in cands:
+            have_slot = self.free_slot() is not None or victims
+            if have_slot and (
+                self.alloc.free_count + self.alloc.releasable(victims)
+                >= need
+            ):
+                break
+            victims.append(v)
+        enough = self.free_slot() is not None or victims
+        if not enough:
+            return None
+        if self.alloc.free_count + self.alloc.releasable(victims) < need:
+            return None  # even evicting every candidate can't fit rs
+        return victims if victims else None
+
+    def preempt(self, slot: int, step: int) -> RequestState:
+        """Evict-and-replay preemption of one slot under page pressure.
+
+        The victim's pages are *decremented* through the normal refcount
+        machinery (COW siblings and the prefix registry keep theirs), its
+        pending chunked prefill (if any) is cancelled, and its request
+        record is handed back for re-queueing.  A victim that has emitted
+        tokens re-admits later through the restore paths (KV snapshot +
+        teacher-forced tail, or deterministic re-prefill + full replay) —
+        bit-identical to an unpreempted run; one that hasn't is simply
+        re-admitted fresh.
+        """
+        rs = self.slots[slot]
+        assert rs is not None, f"preempting empty slot {slot}"
+        self._pending.pop(slot, None)
+        self._evict(slot)
+        rs.n_preemptions += 1
+        self.stats["n_preemptions"] += 1
+        return rs
+
+    def try_admit_restored(self, rs: RequestState, snapshot, step: int
+                           ) -> Optional[Tuple[str, int]]:
+        """Capacity-checked restore admission in one planning pass.
+
+        Returns ``(path, replayed)`` like :meth:`admit_restored`, or None
+        when the request doesn't fit (the plan is cached, so a retry after
+        preemption replans only if capacity actually changed)."""
+        if self._take_plan(rs) is None:
+            return None
+        return self.admit_restored(rs, snapshot, step)
 
     def admit_restored(self, rs: RequestState, snapshot, step: int
                        ) -> Tuple[str, int]:

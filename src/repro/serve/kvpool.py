@@ -165,6 +165,22 @@ class PageAllocator:
         self.n_cow_copies += 1
         return old, new
 
+    def releasable(self, slots: Sequence[Hashable]) -> int:
+        """Dry-run of evicting ``slots`` together: how many pages would
+        actually return to the free list.  Shared pages count only when
+        *every* holder outside ``slots`` has let go — the preemption planner
+        uses this so evicting COW-sharing victims never over-promises
+        capacity (a forked prefix page held by the registry or a surviving
+        sibling frees nothing)."""
+        rc = dict(self.refcount)
+        freed = 0
+        for s in slots:
+            for p in self.tables.get(s, ()):
+                rc[p] -= 1
+                if rc[p] == 0:
+                    freed += 1
+        return freed
+
     def free(self, slot: Hashable) -> List[int]:
         """Evict ``slot``: decrement refcounts; pages reaching zero return
         to the free list for reuse.  Returns the *released* pages (shared

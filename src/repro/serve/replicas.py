@@ -19,6 +19,18 @@ teacher-forced replay of tokens emitted after it) when one survives, else
 by full deterministic re-prefill.  Either way the continued stream is
 bit-identical to the unkilled run (see ``serve/engine.py``'s determinism
 contract).
+
+Overload is first-class chaos: a ``TrafficSpikeInjector`` event multiplies
+the arrival clock (``run`` releases requests whose nominal arrival step the
+accelerated clock has passed), so a surge compresses the same workload into
+fewer engine steps — deterministically, so overload golden traces replay
+bit-exactly.  Under ``admission="priority"`` the router queue is kept
+stably sorted by priority class, never-started requests whose deadline
+already expired are shed at the head, and with ``preemption=True`` a
+request that cannot fit may evict strictly lower-priority victims
+(youngest first); victims re-queue at the front and re-admit through the
+same restore paths as failover migrants, so their streams stay
+token-identical to an unpreempted run.
 """
 from __future__ import annotations
 
@@ -31,7 +43,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.ft.events import FAIL, RANK_REJOIN
+from repro.ft.events import FAIL, RANK_REJOIN, TRAFFIC_SPIKE
 from repro.ft.failures import ChaosEngine
 from repro.ft.injectors import Injector
 from repro.models.model import ExecFlags
@@ -165,17 +177,24 @@ class ReplicaSet:
         self.requests: Dict[int, RequestState] = {}
         self.events: List[ServeEvent] = []
         self.recorder = recorder
+        # traffic-spike state: the multiplier the *previous* step's chaos
+        # left active, applied to the arrival clock before the next step
+        self._arrival_mult = 1.0
         self.acct: Dict[str, int] = {
             k: 0 for k in (
                 "n_requests", "n_tokens", "n_kills", "n_revives",
                 "n_migrations", "n_restore_snapshot", "n_restore_replay",
                 "replayed_tokens", "restored_bytes",
                 "n_snapshots", "snapshot_bytes",
+                # overload accounting: spikes seen, requests shed at the
+                # head, preemptions (engine counter) and tokens re-earned
+                "n_spikes", "n_shed", "n_preemptions", "preempted_tokens",
                 # modeled decode traffic + prefix-sharing accounting
                 # (harvested from each engine's counters)
                 "decode_rounds", "kv_bytes_dense", "kv_bytes_paged",
                 "shared_prefix_tokens", "n_prefix_hits", "n_pages_shared",
                 "n_pages_allocated", "n_pages_forked", "n_cow_pages",
+                "n_admission_plans",
             )
         }
 
@@ -204,8 +223,10 @@ class ReplicaSet:
             self.acct["n_requests"] += 1
             self._emit(ServeEvent(t, "arrive", req=req.rid), out)
 
-        # 2. chaos: kills and revivals
+        # 2. chaos: kills, revivals, and traffic spikes (the spike's rate
+        # multiplier reaches `run`'s arrival clock from the *next* step on)
         outcome = self.chaos.step(t)
+        self._arrival_mult = outcome.arrival_mult
         for ev in outcome.events:
             if ev.kind == FAIL and ev.device is not None:
                 r = ev.device[0]
@@ -217,6 +238,12 @@ class ReplicaSet:
                     self.alive.add(ev.rank)
                     self.acct["n_revives"] += 1
                     self._emit(ServeEvent(t, "revive", replica=ev.rank), out)
+            elif ev.kind == TRAFFIC_SPIKE:
+                self.acct["n_spikes"] += 1
+                self._emit(ServeEvent(
+                    t, "spike", magnitude=ev.magnitude,
+                    duration=max(ev.duration_steps, 1),
+                ), out)
 
         # 2.5 chunked prefills: each pending prompt advances one page-aligned
         # chunk, interleaved with the decode rounds below (finished prompts
@@ -233,7 +260,12 @@ class ReplicaSet:
                     self._emit(ServeEvent(t, "complete", req=rs.rid,
                                           replica=r), out)
 
-        # 3. admissions (fresh requests and migrants, least-loaded first)
+        # 3. admissions (fresh requests and migrants, least-loaded first).
+        # Priority admission keeps the queue stably sorted each step: FIFO
+        # within a class, higher classes first; migrants and preempted
+        # victims re-queued at the front stay at the front of their class.
+        if self.ecfg.admission == "priority":
+            self.queue.sort(key=lambda rs: -rs.req.priority)
         for r in sorted(self.alive,
                         key=lambda r: (self.engines[r].n_active, r)):
             self._admit_into(r, t, out)
@@ -320,16 +352,49 @@ class ReplicaSet:
                 emit_prefilled(rs, tok)
             group.clear()
 
+        def preempt_for(rs) -> bool:
+            """Evict strictly-lower-priority victims so ``rs`` fits.  The
+            victims re-queue at the front (right behind the head) and
+            re-admit later through the restore paths — token-identical."""
+            if not self.ecfg.preemption:
+                return False
+            victims = eng.plan_preemption(rs, t)
+            if victims is None:
+                return False
+            flush()
+            evicted = [eng.preempt(v, t) for v in victims]
+            for v_rs in evicted:
+                self.acct["preempted_tokens"] += len(v_rs.emitted)
+                self._emit(ServeEvent(t, "preempt", req=v_rs.rid,
+                                      replica=r), out)
+            self.queue[1:1] = evicted
+            return True
+
         admitted = 0
         while self.queue and admitted < budget:
             rs = self.queue[0]
+            if (
+                self.ecfg.admission == "priority"
+                and not rs.emitted and rs.req.deadline_steps > 0
+                and t > rs.req.arrival_step + rs.req.deadline_steps
+            ):
+                # load shedding: a never-started request past its deadline
+                # can no longer be good — drop it instead of burning pages
+                self.queue.pop(0)
+                rs.shed = True
+                self.acct["n_shed"] += 1
+                self._emit(ServeEvent(t, "shed", req=rs.rid), out)
+                continue  # shedding consumes no admission budget
             if rs.emitted:  # migrated / re-queued: restore, don't restart
                 flush()
-                if not eng.can_admit(rs):
+                snap = self.registry.get(rs.rid)
+                res = eng.try_admit_restored(rs, snap, t)
+                if res is None and preempt_for(rs):
+                    res = eng.try_admit_restored(rs, snap, t)
+                if res is None:
                     break
                 self.queue.pop(0)
-                snap = self.registry.get(rs.rid)
-                path, replayed = eng.admit_restored(rs, snap, t)
+                path, replayed = res
                 key = "n_restore_snapshot" if path == "snapshot" else \
                     "n_restore_replay"
                 self.acct[key] += 1
@@ -344,6 +409,8 @@ class ReplicaSet:
                 ), out)
             else:
                 bound = eng.try_bind(rs, t)
+                if bound is None and preempt_for(rs):
+                    bound = eng.try_bind(rs, t)
                 if bound is None:
                     break
                 self.queue.pop(0)
@@ -370,18 +437,27 @@ class ReplicaSet:
     def run(self, workload: Sequence[Request], max_steps: int = 10_000
             ) -> ServeResult:
         check_workload_fits(workload, self.ecfg)
-        by_step: Dict[int, List[Request]] = {}
-        for req in workload:
-            by_step.setdefault(req.arrival_step, []).append(req)
+        # open-loop release along an *accelerated* clock: each step the
+        # clock advances by the traffic-spike multiplier the previous
+        # step's chaos left active (1.0 when calm — then clock == t and
+        # this releases exactly the per-step arrivals the legacy loop did)
+        wl = sorted(workload, key=lambda req: (req.arrival_step, req.rid))
         step_wall: List[float] = []
         t = 0
+        clock = 0.0
+        nxt = 0
         pending = {req.rid for req in workload}
         while pending and t < max_steps:
             t0 = time.perf_counter()
-            for ev in self.step(t, by_step.get(t, ())):
-                if ev.kind == "complete":
+            arrivals: List[Request] = []
+            while nxt < len(wl) and wl[nxt].arrival_step <= clock:
+                arrivals.append(wl[nxt])
+                nxt += 1
+            for ev in self.step(t, arrivals):
+                if ev.kind in ("complete", "shed"):
                     pending.discard(ev.req)
             step_wall.append(time.perf_counter() - t0)
+            clock += self._arrival_mult
             t += 1
         for r in sorted(self.alive):
             self._harvest(self.engines[r])

@@ -26,8 +26,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ParallelConfig, get_config, reduced
-from repro.ft.injectors import Injector, PodOutageInjector, ScheduledInjector
-from repro.ft.events import FAIL, FailureEvent
+from repro.ft.injectors import (
+    Injector,
+    PodOutageInjector,
+    ScheduledInjector,
+    TrafficSpikeInjector,
+)
+from repro.ft.events import FAIL, TRAFFIC_SPIKE, FailureEvent
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import build_flags, build_rules
 from repro.models.params import init_params
@@ -56,12 +61,30 @@ def injectors_from_spec(spec: dict) -> List[Injector]:
             ranks_per_pod=int(spec.get("ranks_per_pod", 1)),
             transfer_steps=int(spec.get("transfer_steps", 1)),
         )]
+    if kind == "spike":
+        return [TrafficSpikeInjector(
+            mean_interval_s=float(spec["mean_interval_steps"]),
+            duration_s=float(spec["duration_steps"]),
+            magnitude=float(spec.get("magnitude", 4.0)),
+        )]
     if kind == "scripted":
-        return [ScheduledInjector([
+        events = [
             FailureEvent(step=int(s), kind=FAIL, device=(int(r), 0),
                          duration_steps=int(d), source="scripted")
-            for s, r, d in spec["kills"]
-        ])]
+            for s, r, d in spec.get("kills", ())
+        ]
+        events += [
+            FailureEvent(step=int(s), kind=TRAFFIC_SPIKE, device=None,
+                         duration_steps=int(d), magnitude=float(m),
+                         source="scripted")
+            for s, d, m in spec.get("spikes", ())
+        ]
+        return [ScheduledInjector(events)]
+    if kind == "multi":  # composed chaos, e.g. pod outages + spikes
+        out: List[Injector] = []
+        for sub in spec["specs"]:
+            out.extend(injectors_from_spec(sub))
+        return out
     raise ValueError(f"unknown chaos spec kind {kind!r}")
 
 
@@ -134,16 +157,41 @@ def replay_serve_trace(path, replay_record: Optional[str] = None,
     )
 
 
-def header_from_args(args) -> ServeTraceHeader:
-    if args.chaos == "pod":
-        chaos = {
+def parse_priority_classes(s: str) -> tuple:
+    """``"prio:weight:deadline,..."`` -> WorkloadSpec.priority_classes."""
+    if not s:
+        return ()
+    out = []
+    for part in s.split(","):
+        p, w, d = part.split(":")
+        out.append((int(p), float(w), int(d)))
+    return tuple(out)
+
+
+def chaos_spec_from_args(args) -> dict:
+    specs: List[dict] = []
+    if args.chaos in ("pod", "pod+spike"):
+        specs.append({
             "kind": "pod", "fail_every_steps": args.fail_every,
             "heal_steps": args.heal_steps,
             "ranks_per_pod": args.ranks_per_pod,
             "transfer_steps": args.transfer_steps,
-        }
-    else:
-        chaos = {"kind": "none"}
+        })
+    if args.chaos in ("spike", "pod+spike"):
+        specs.append({
+            "kind": "spike", "mean_interval_steps": args.spike_every,
+            "duration_steps": args.spike_duration,
+            "magnitude": args.spike_magnitude,
+        })
+    if not specs:
+        return {"kind": "none"}
+    if len(specs) == 1:
+        return specs[0]
+    return {"kind": "multi", "specs": specs}
+
+
+def header_from_args(args) -> ServeTraceHeader:
+    chaos = chaos_spec_from_args(args)
     cfg = get_config(args.config)
     vocab = reduced(cfg).vocab_size if args.reduced else cfg.vocab_size
     spec = WorkloadSpec(
@@ -152,14 +200,24 @@ def header_from_args(args) -> ServeTraceHeader:
         prompt_len=(args.prompt_min, args.prompt_max),
         new_tokens=(args.gen_min, args.gen_max),
         shared_prefix=args.shared_prefix,
+        arrival=args.arrival,
+        burst_factor=args.burst_factor,
+        burst_period=args.burst_period,
+        burst_duty=args.burst_duty,
+        length_dist=args.length_dist,
+        n_prefix_groups=args.prefix_groups,
+        priority_classes=parse_priority_classes(args.priority_classes),
     )
     ecfg = EngineConfig(
         max_slots=args.slots, page_size=args.page_size,
         pages_per_slot=args.pages_per_slot,
+        n_pages=args.n_pages,
+        admission=args.admission,
         max_prefills_per_step=args.max_prefills,
         use_paged_kernel=args.paged_kernel,
         prefill_chunk_pages=args.chunk_pages,
         prefix_sharing=args.prefix_sharing or args.shared_prefix > 0,
+        preemption=args.preempt,
     )
     return ServeTraceHeader(
         config=args.config, reduced=args.reduced, dtype="float32",
@@ -189,11 +247,17 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-max", type=int, default=20)
     ap.add_argument("--gen-min", type=int, default=4)
     ap.add_argument("--gen-max", type=int, default=24)
-    ap.add_argument("--chaos", default="pod", choices=["none", "pod"])
+    ap.add_argument("--chaos", default="pod",
+                    choices=["none", "pod", "spike", "pod+spike"])
     ap.add_argument("--fail-every", type=float, default=12.0,
                     help="mean steps between pod outages")
     ap.add_argument("--heal-steps", type=float, default=6.0)
     ap.add_argument("--transfer-steps", type=int, default=1)
+    ap.add_argument("--spike-every", type=float, default=48.0,
+                    help="mean steps between traffic spikes")
+    ap.add_argument("--spike-duration", type=float, default=12.0)
+    ap.add_argument("--spike-magnitude", type=float, default=4.0,
+                    help="arrival-rate multiplier while a spike is active")
     ap.add_argument("--snapshot-cadence", type=int, default=2)
     ap.add_argument("--no-snapshots", action="store_true")
     ap.add_argument("--paged-kernel", action="store_true",
@@ -208,6 +272,26 @@ def main(argv=None) -> int:
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="shared prompt-prefix tokens in the workload "
                          "(implies --prefix-sharing)")
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="physical KV pages (0 = full reserve)")
+    ap.add_argument("--admission", default="continuous",
+                    choices=["continuous", "lockstep", "priority"])
+    ap.add_argument("--preempt", action="store_true",
+                    help="evict-and-replay preemption (needs "
+                         "--admission priority)")
+    ap.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "bursty", "diurnal"])
+    ap.add_argument("--burst-factor", type=float, default=4.0)
+    ap.add_argument("--burst-period", type=int, default=64)
+    ap.add_argument("--burst-duty", type=float, default=0.25)
+    ap.add_argument("--length-dist", default="uniform",
+                    choices=["uniform", "longtail"])
+    ap.add_argument("--prefix-groups", type=int, default=0,
+                    help="distinct system-prompt populations (needs "
+                         "--shared-prefix)")
+    ap.add_argument("--priority-classes", default="",
+                    help="prio:weight:deadline[,...] request classes, e.g. "
+                         "'2:0.2:0,1:0.3:48,0:0.5:32'")
     ap.add_argument("--record", default=None, metavar="PATH")
     ap.add_argument("--replay", default=None, metavar="PATH")
     ap.add_argument("--replay-record", default=None, metavar="PATH",
@@ -237,7 +321,9 @@ def main(argv=None) -> int:
         f"kills={acct['n_kills']} migrations={acct['n_migrations']} "
         f"(snapshot={acct['n_restore_snapshot']} "
         f"replay={acct['n_restore_replay']}, "
-        f"replayed_tokens={acct['replayed_tokens']})"
+        f"replayed_tokens={acct['replayed_tokens']}); "
+        f"spikes={acct['n_spikes']} shed={acct['n_shed']} "
+        f"preemptions={acct['n_preemptions']}"
     )
     if args.record:
         print(f"trace recorded to {args.record}")

@@ -32,6 +32,9 @@ SERVE_TRACE_VERSION = 1
 
 EVENT_KINDS = (
     "arrive", "admit", "token", "complete", "kill", "revive", "migrate",
+    # overload machinery: evict-and-replay preemption, deadline shedding,
+    # and traffic-spike chaos — all pinned by the overload golden trace
+    "preempt", "shed", "spike",
 )
 
 
@@ -46,6 +49,8 @@ class ServeEvent:
     replayed: int = 0            # migrate: teacher-forced tokens
     nbytes: int = 0              # migrate: restored snapshot bytes
     n_inflight: int = 0          # kill: migrated request count
+    magnitude: float = 0.0       # spike: arrival-rate multiplier
+    duration: int = 0            # spike: steps the surge lasts
 
     def __post_init__(self):
         if self.kind not in EVENT_KINDS:
@@ -67,6 +72,10 @@ class ServeEvent:
             d["nbytes"] = self.nbytes
         if self.n_inflight:
             d["n_inflight"] = self.n_inflight
+        if self.magnitude:
+            d["magnitude"] = self.magnitude
+        if self.duration:
+            d["duration"] = self.duration
         return d
 
     @classmethod
@@ -80,6 +89,8 @@ class ServeEvent:
             replayed=int(d.get("replayed", 0)),
             nbytes=int(d.get("nbytes", 0)),
             n_inflight=int(d.get("n_inflight", 0)),
+            magnitude=float(d.get("magnitude", 0.0)),
+            duration=int(d.get("duration", 0)),
         )
 
 

@@ -1,0 +1,61 @@
+"""The operator guide stays in lock-step with the code it documents.
+
+``docs/serving.md`` must mention every public ``EngineConfig`` and
+``WorkloadSpec`` field by its backticked name — adding a knob without
+documenting it fails here, as does documenting a knob that no longer
+exists (stale backticked ``field (--flag)`` table rows).
+"""
+import dataclasses
+import pathlib
+import re
+
+from repro.serve.engine import EngineConfig
+from repro.serve.request import WorkloadSpec
+
+DOC = pathlib.Path(__file__).resolve().parents[1] / "docs" / "serving.md"
+
+
+def _documented_names():
+    text = DOC.read_text()
+    return set(re.findall(r"`([A-Za-z_][A-Za-z0-9_]*)`", text)), text
+
+
+def test_every_engine_config_field_is_documented():
+    names, _ = _documented_names()
+    fields = {f.name for f in dataclasses.fields(EngineConfig)}
+    missing = fields - names
+    assert not missing, (
+        f"EngineConfig fields missing from docs/serving.md: {sorted(missing)}"
+    )
+
+
+def test_every_workload_spec_field_is_documented():
+    names, _ = _documented_names()
+    fields = {f.name for f in dataclasses.fields(WorkloadSpec)}
+    missing = fields - names
+    assert not missing, (
+        f"WorkloadSpec fields missing from docs/serving.md: {sorted(missing)}"
+    )
+
+
+def test_documented_knob_rows_still_exist():
+    """Every `field` at the start of a knob-table row must still be a real
+    dataclass field — catches docs rotting after a rename."""
+    _, text = _documented_names()
+    fields = {f.name for f in dataclasses.fields(EngineConfig)}
+    fields |= {f.name for f in dataclasses.fields(WorkloadSpec)}
+    knob_sections = text.split("## Priority admission")[0]
+    rows = re.findall(r"^\| `([A-Za-z_][A-Za-z0-9_]*)`", knob_sections, re.M)
+    assert rows, "knob tables not found — did the doc headings move?"
+    stale = [r for r in rows if r not in fields]
+    assert not stale, f"stale knob rows in docs/serving.md: {stale}"
+
+
+def test_doc_mentions_every_serve_event_kind():
+    from repro.serve.trace import EVENT_KINDS
+
+    names, _ = _documented_names()
+    missing = set(EVENT_KINDS) - names
+    assert not missing, (
+        f"serve event kinds missing from docs/serving.md: {sorted(missing)}"
+    )

@@ -6,6 +6,7 @@ both restore paths (KV-page snapshot and deterministic re-prefill).
 """
 import dataclasses
 import json
+import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -415,6 +416,203 @@ def test_pod_aware_snapshot_placement(setup, baseline):
 
 
 # ---------------------------------------------------------------------------
+# overload: scaled workloads, priority admission, shedding, preemption
+# ---------------------------------------------------------------------------
+
+OVERLOAD_SPEC = dataclasses.replace(
+    SPEC, n_requests=20, mean_interarrival_steps=0.8,
+    prompt_len=(3, 10), new_tokens=(3, 8),
+    priority_classes=((2, 0.25, 0), (1, 0.35, 40), (0, 0.4, 0)),
+)
+# pool small enough that admissions contend for pages (full reserve is
+# 1 + 3*6 = 19): preemption and shedding actually fire
+TIGHT_ECFG = dataclasses.replace(
+    ECFG, n_pages=12, admission="priority", preemption=True,
+)
+
+
+def test_scaled_workload_generator_regimes():
+    """Bursty/diurnal arrivals, long-tail lengths, prefix populations and
+    priority classes are deterministic, in-bounds, and leave the legacy
+    spec's JSON (and hence committed trace headers) byte-stable."""
+    legacy = SPEC.to_json()
+    assert "arrival" not in legacy and "priority_classes" not in legacy
+    scaled = dataclasses.replace(
+        SPEC, n_requests=64, arrival="bursty", burst_factor=8.0,
+        burst_period=32, burst_duty=0.25, length_dist="longtail",
+        prompt_len=(3, 10), new_tokens=(3, 8),
+        shared_prefix=4, n_prefix_groups=3,
+        priority_classes=((1, 0.5, 16), (0, 0.5, 0)),
+    )
+    a, b = build_workload(scaled), build_workload(scaled)
+    assert a == b
+    assert WorkloadSpec.from_json(scaled.to_json()) == scaled
+    steps = [r.arrival_step for r in a]
+    assert steps == sorted(steps)
+    prefixes = {r.prompt[:4] for r in a}
+    assert 1 < len(prefixes) <= 3
+    assert {r.priority for r in a} == {0, 1}
+    assert all(
+        r.deadline_steps == (16 if r.priority == 1 else 0) for r in a
+    )
+    for r in a:
+        assert 3 + 4 <= len(r.prompt) <= 10 + 4
+        assert 3 <= r.max_new_tokens <= 8
+    # bursty compresses the same request count into less nominal time
+    uniform = dataclasses.replace(scaled, arrival="poisson")
+    assert a[-1].arrival_step < build_workload(uniform)[-1].arrival_step
+    with pytest.raises(ValueError, match="n_prefix_groups"):
+        dataclasses.replace(SPEC, n_prefix_groups=2)
+    with pytest.raises(ValueError, match="arrival"):
+        dataclasses.replace(SPEC, arrival="nope")
+
+
+def test_engine_config_validates_preemption():
+    with pytest.raises(ValueError, match="priority"):
+        EngineConfig(preemption=True)
+    EngineConfig(admission="priority", preemption=True)  # ok
+
+
+def test_admission_plan_cache_plans_once(setup):
+    """A can_admit probe and the bind that follows share one planning pass;
+    the cache invalidates when capacity actually changes."""
+    from repro.serve.engine import ServeEngine
+    from repro.serve.request import Request, RequestState
+
+    cfg, params, rules, flags = setup
+    eng = ServeEngine(cfg, params, rules, flags, ECFG)
+    rs = RequestState(Request(0, 0, (1, 2, 3, 4), 4))
+    assert eng.can_admit(rs)
+    assert eng.stats["n_admission_plans"] == 1
+    assert eng.try_bind(rs, 0) is not None  # cache hit: no second plan
+    assert eng.stats["n_admission_plans"] == 1
+    rs2 = RequestState(Request(1, 0, (5, 6, 7), 4))
+    assert eng.can_admit(rs2)
+    assert eng.stats["n_admission_plans"] == 2
+    eng.prefill_bound([(eng.slots.index(rs), rs)], 0)  # capacity unchanged
+    assert eng.try_bind(rs2, 0) is not None
+    assert eng.stats["n_admission_plans"] == 2
+
+
+def test_priority_admission_reorders_not_tokens(setup):
+    """Priority admission serves high classes first (better TTFT under
+    contention) without changing a single emitted token."""
+    _, ref = run_set(setup, spec=OVERLOAD_SPEC)  # continuous, full pool
+    prio = dataclasses.replace(ECFG, admission="priority")
+    _, out = run_set(setup, ecfg=prio, spec=OVERLOAD_SPEC)
+    assert out.streams() == ref.streams()
+    # among requests queued at the same time, class 2 never waits longer
+    # than the class-0 request right next to it in arrival order
+    by_prio = {}
+    for rs in out.states.values():
+        by_prio.setdefault(rs.req.priority, []).append(rs.ttft_steps)
+    assert np.mean(by_prio[2]) <= np.mean(by_prio[0])
+
+
+def test_preemption_streams_bit_identical(setup):
+    """Evict-and-replay preemption under page pressure: victims re-queue,
+    re-admit through the restore paths, and every stream matches the
+    uncontended run token-for-token."""
+    _, ref = run_set(setup, spec=OVERLOAD_SPEC)
+    rset, out = run_set(setup, ecfg=TIGHT_ECFG, spec=OVERLOAD_SPEC)
+    acct = out.accounting
+    assert acct["n_preemptions"] >= 1
+    assert acct["preempted_tokens"] >= 1
+    # single replica -> no surviving snapshot holder: preempted requests
+    # re-admit via deterministic re-prefill + teacher-forced replay
+    assert acct["n_restore_replay"] >= 1
+    assert out.streams() == ref.streams()
+    assert all(rs.done for rs in out.states.values())
+    preempted = [rs for rs in out.states.values() if rs.n_preemptions]
+    assert preempted
+    # conservation: every page returned once the run drained
+    eng = rset.engines[0]
+    assert eng.alloc.free_count == TIGHT_ECFG.resolved_n_pages - 1
+
+
+def test_preemption_snapshot_path_bit_identical(setup):
+    """With a second replica holding KV snapshots, preempted requests
+    restore pages + teacher-force only the post-snapshot tail.  Two
+    active replicas double capacity, so the burst is harsher here."""
+    spec = dataclasses.replace(
+        OVERLOAD_SPEC, n_requests=32, mean_interarrival_steps=0.4,
+    )
+    _, ref = run_set(setup, spec=spec)
+    _, out = run_set(
+        setup, ecfg=TIGHT_ECFG, spec=spec, n_replicas=2,
+        snapshot_cadence=1,
+    )
+    acct = out.accounting
+    assert acct["n_preemptions"] >= 1
+    assert acct["n_restore_snapshot"] >= 1
+    assert out.streams() == ref.streams()
+
+
+def test_preemption_only_evicts_lower_priority(setup):
+    """No victim ever outranks (or ties) the request it was evicted for —
+    checked from the event stream: every preempt burst is followed by the
+    admission of a strictly higher-priority request."""
+    rset, out = run_set(setup, ecfg=TIGHT_ECFG, spec=OVERLOAD_SPEC)
+    prio = {rs.req.rid: rs.req.priority for rs in out.states.values()}
+    events = rset.events
+    for i, ev in enumerate(events):
+        if ev.kind != "preempt":
+            continue
+        beneficiary = next(
+            e for e in events[i:]
+            if e.kind in ("admit", "migrate") and e.step == ev.step
+            and e.req != ev.req
+        )
+        assert prio[beneficiary.req] > prio[ev.req], (
+            f"step {ev.step}: victim {ev.req} (prio {prio[ev.req]}) evicted "
+            f"for {beneficiary.req} (prio {prio[beneficiary.req]})"
+        )
+
+
+def test_shedding_drops_only_hopeless_requests(setup):
+    """Load shedding drops only never-started requests already past their
+    deadline; everything that was served matches the uncontended streams."""
+    spec = dataclasses.replace(
+        OVERLOAD_SPEC, n_requests=24, mean_interarrival_steps=0.3,
+        priority_classes=((2, 0.3, 0), (1, 0.3, 10), (0, 0.4, 8)),
+    )
+    _, ref = run_set(setup, spec=spec)
+    shed_cfg = dataclasses.replace(ECFG, n_pages=10, admission="priority")
+    _, out = run_set(setup, ecfg=shed_cfg, spec=spec)
+    acct = out.accounting
+    assert acct["n_shed"] >= 1
+    shed = [rs for rs in out.states.values() if rs.shed]
+    assert shed
+    for rs in shed:
+        assert not rs.emitted and not rs.done and not rs.good
+    served = {rid: rs.emitted for rid, rs in out.states.items()
+              if not rs.shed}
+    for rid, stream in served.items():
+        assert stream == ref.states[rid].emitted, f"req {rid}"
+
+
+def test_traffic_spike_accelerates_arrivals(setup):
+    """A scripted traffic spike multiplies the arrival clock: the same
+    workload lands in fewer engine steps, a spike event is traced, and the
+    tokens are untouched."""
+    spike = ScheduledInjector([
+        FailureEvent(step=2, kind="traffic_spike", duration_steps=8,
+                     magnitude=4.0, source="scripted"),
+    ])
+    _, calm = run_set(setup, spec=OVERLOAD_SPEC)
+    rset, surged = run_set(setup, spec=OVERLOAD_SPEC, injectors=[spike])
+    assert surged.accounting["n_spikes"] == 1
+    spikes = [ev for ev in rset.events if ev.kind == "spike"]
+    assert spikes and spikes[0].magnitude == 4.0 and spikes[0].duration == 8
+    last_arrival = max(
+        ev.step for ev in rset.events if ev.kind == "arrive"
+    )
+    calm_last = max(r.arrival_step for r in build_workload(OVERLOAD_SPEC))
+    assert last_arrival < calm_last
+    assert surged.streams() == calm.streams()
+
+
+# ---------------------------------------------------------------------------
 # serve traces
 # ---------------------------------------------------------------------------
 
@@ -486,6 +684,47 @@ def test_golden_serve_trace_replays_with_paged_kernel():
         "tests/data/golden_trace_serve.jsonl", paged_kernel=True
     )
     assert problems == [], "\n".join(problems)
+
+
+@pytest.mark.chaos
+def test_golden_overload_trace_replays_bit_exactly():
+    """The committed overload trace — bursty arrivals, two traffic spikes,
+    a pod kill, priority shedding, and an evict-and-replay preemption —
+    must replay bit-exactly from its header alone."""
+    from repro.serve.run import replay_serve_trace
+    from repro.serve.trace import load_serve_trace
+
+    problems = replay_serve_trace("tests/data/golden_trace_overload.jsonl")
+    assert problems == [], "\n".join(problems)
+
+    # the trace must actually exercise the overload machinery
+    trace = load_serve_trace("tests/data/golden_trace_overload.jsonl")
+    kinds = {ev.kind for ev in trace.events}
+    assert {"spike", "preempt", "shed", "kill", "revive", "migrate"} <= kinds
+    assert trace.footer.accounting["n_preemptions"] >= 1
+    assert trace.footer.accounting["n_shed"] >= 1
+    assert trace.footer.accounting["n_spikes"] == 2
+
+
+@pytest.mark.chaos
+def test_golden_overload_trace_tamper_detected(tmp_path):
+    """Flipping a single preempt event in the overload trace must surface
+    as a replay divergence — the trace is tamper-evident, not advisory."""
+    from repro.serve.run import replay_serve_trace
+
+    lines = (
+        pathlib.Path("tests/data/golden_trace_overload.jsonl")
+        .read_text().splitlines()
+    )
+    idx, d = next(
+        (i, json.loads(ln)) for i, ln in enumerate(lines)
+        if json.loads(ln).get("kind") == "preempt"
+    )
+    d["kind"] = "shed"
+    lines[idx] = json.dumps(d)
+    bad = tmp_path / "tampered_overload.jsonl"
+    bad.write_text("\n".join(lines) + "\n")
+    assert replay_serve_trace(str(bad)) != []
 
 
 def test_verify_serve_replay_reports_accounting_drift(setup, tmp_path):

@@ -240,3 +240,91 @@ def test_fork_evict_conservation(layout_seed, n_sharers):
             assert live_prefix == prefix  # all sharers read them until last
     assert alloc.free_count == N_PAGES - 1
     assert not alloc.refcount
+
+
+# ---------------------------------------------------------------------------
+# evict-and-replay preemption
+# ---------------------------------------------------------------------------
+
+
+def _build_cow_state(alloc, ops):
+    """Replay a cow_ops program (ignoring cow for simplicity) to reach an
+    arbitrary reachable allocator state; returns the shadow tables."""
+    shadow = {}
+    for kind, a, b in ops:
+        if kind == "ensure":
+            need = pages_needed(b, PAGE_SIZE)
+            grow = max(need - len(shadow.get(a, [])), 0)
+            if grow <= alloc.free_count:
+                shadow.setdefault(a, []).extend(alloc.ensure(a, b))
+        elif kind == "free":
+            shadow.pop(a, None)
+            alloc.free(a)
+        elif kind == "fork":
+            dst, src = a, b
+            if dst == src:
+                continue
+            pages = [
+                p for p in shadow.get(src, [])
+                if p not in shadow.get(dst, [])
+            ][:2]
+            if pages:
+                alloc.fork(dst, pages)
+                shadow.setdefault(dst, []).extend(pages)
+    return shadow
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    ops=cow_ops,
+    layout_seed=st.integers(0, 2**16),
+    victims=st.sets(st.integers(0, N_SLOTS - 1), max_size=N_SLOTS),
+)
+def test_releasable_matches_actual_free(ops, layout_seed, victims):
+    """The preemption planner's dry-run (`releasable`) must promise exactly
+    the pages that evicting those victims actually returns — no more (the
+    plan would over-commit and the bind would MemoryError) and no less
+    (preemption would fire more often than needed)."""
+    alloc = PageAllocator(
+        N_PAGES, PAGE_SIZE, rng=np.random.default_rng(layout_seed)
+    )
+    _build_cow_state(alloc, ops)
+    promised = alloc.releasable(victims)
+    free_before = alloc.free_count
+    actually = sum(len(alloc.free(s)) for s in victims)
+    assert promised == actually
+    assert alloc.free_count == free_before + actually
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    ops=cow_ops,
+    layout_seed=st.integers(0, 2**16),
+    victims=st.sets(st.integers(0, N_SLOTS - 1), max_size=N_SLOTS - 1),
+)
+def test_preemption_never_touches_survivor_pages(ops, layout_seed, victims):
+    """Evicting any victim set leaves every surviving slot's page table
+    byte-identical and its pages out of the free list — the allocator-level
+    guarantee behind token-identical resume of non-preempted streams."""
+    alloc = PageAllocator(
+        N_PAGES, PAGE_SIZE, rng=np.random.default_rng(layout_seed)
+    )
+    _build_cow_state(alloc, ops)
+    survivors = {
+        s: list(t) for s, t in alloc.tables.items()
+        if s not in victims and t
+    }
+    for s in victims:
+        released = alloc.free(s)
+        for keep, table in survivors.items():
+            assert alloc.tables[keep] == table, "survivor table mutated"
+            assert set(released).isdisjoint(table)
+    for table in survivors.values():
+        assert set(table).isdisjoint(alloc._free)
+    # conservation after the preemption burst
+    occ = {}
+    for t in alloc.tables.values():
+        for p in t:
+            occ[p] = occ.get(p, 0) + 1
+    assert occ == alloc.refcount
+    assert len(occ) + alloc.free_count == N_PAGES - 1
