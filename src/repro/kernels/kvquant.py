@@ -1,0 +1,57 @@
+"""Int8 KV-page quantization — per-page absmax scales.
+
+The paged KV pool can optionally hold int8 pages instead of model-dtype
+rows (``EngineConfig.kv_dtype="int8"``), halving ``kv_bytes_paged``
+again on top of the paged-vs-dense win.  Each physical page carries one
+f32 scale (absmax / 127 over the page's ``(page_size, KV, hd)`` rows);
+the compiled XLA decode walk dequantizes on fetch
+(``xla_paged.paged_flash_decode_xla`` with ``k_scale``/``v_scale``).
+
+Write path: a decode step dequantizes only the B touched pages, inserts
+the exact new K/V row, and requantizes those pages with fresh scales —
+so quantization error stays bounded per page and never compounds across
+the pool.  Prefill quantizes each freshly written page once.
+
+This trades the bitwise contract of the fp paths for a tolerance tier
+(see tests/test_kvquant.py); it is only reachable through the explicit
+``kv_dtype`` opt-in.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_pages(pages):
+    """Quantize ``(..., page_size, KV, hd)`` f32 pages to int8.
+
+    Returns ``(q, scale)`` with ``scale`` of shape ``(...,)`` — one
+    absmax/127 scale per page; all-zero pages get scale 1 so dequant is
+    exact zero.
+    """
+    pages = pages.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(pages), axis=(-3, -2, -1))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(
+        jnp.round(pages / scale[..., None, None, None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_pages(q, scale):
+    """Inverse of :func:`quantize_pages` (up to rounding)."""
+    return q.astype(jnp.float32) * scale[..., None, None, None]
+
+
+def insert_row_q8(pool, scales, pids, offs, row):
+    """Insert one exact K/V row per slot into an int8 pool.
+
+    ``pool``: ``(n_pages, page_size, KV, hd)`` int8; ``scales``:
+    ``(n_pages,)`` f32; ``pids``/``offs``: ``(B,)`` target page / in-page
+    offset per slot; ``row``: ``(B, KV, hd)`` the new row.  Only the B
+    touched pages are dequantized, updated, and requantized.
+    """
+    B = pids.shape[0]
+    pages = dequantize_pages(pool[pids], scales[pids])       # (B, ps, KV, hd)
+    pages = pages.at[jnp.arange(B), offs].set(row.astype(jnp.float32))
+    q, sc = quantize_pages(pages)
+    return pool.at[pids].set(q), scales.at[pids].set(sc)

@@ -1,0 +1,107 @@
+"""Compiled paged flash decode — a pure-XLA page-table walk.
+
+The Pallas paged kernel (``kernels/paged_decode.py``) only *executes* on a
+real TPU; on the CPU backend it runs under ``interpret=True``, which
+re-enters Python for every grid step and turns the flagship zero-copy
+decode path into a multiple-× slowdown.  This module is the compiled
+fallback: the same page-table-walking online-softmax decode expressed in
+plain ``jax.numpy`` so it lowers natively on every backend.
+
+Structure: a ``lax.fori_loop`` over the page-table columns plays the role
+of the kernel's sequential innermost grid axis.  Each step fetches the
+``B`` physical pages named by ``tables[:, ki]`` (one dynamic-index gather
+per step — never a dense ``(B, P * page_size)`` copy of the whole window),
+scores them against the query, and folds them into the ``(m, l, acc)``
+carry with *exactly* the accumulator algebra of
+``flash_decode._kernel``: the same f32 casts, the same
+elementwise-multiply + sum-over-``hd`` score, the same ``NEG_INF`` length
+mask, the same ``exp``/rescale order, and the same
+``pl.when(k_start < cur_len)`` skip gate (expressed as a ``where`` select
+on the carry — the gate matters: a fully-masked page would otherwise
+contribute ``exp(NEG_INF - NEG_INF) == 1`` to ``l``).
+
+The loop's trip count is data-dependent: it stops after
+``ceil(max(cur_len) / page_size)`` columns, because any page at or past
+every lane's length is fully masked and leaves the carry bit-for-bit
+untouched (that is precisely what the skip gate guarantees), so walking
+it would be a no-op.  This is the paged path's structural advantage over
+the dense round — the dense ``gather_pages + flash_decode`` always pays
+for all ``P * page_size`` allocated positions, while the walk's cost
+scales with the *live* context.  Truncation is bitwise-free by
+construction, and the contract with both the interpret-mode Pallas
+kernel and the dense ``gather_pages + flash_decode(block_k=page_size)``
+path is pinned by tests/test_kernels.py.
+
+Optionally the pool may hold int8-quantized pages with per-page f32
+scales (``k_scale``/``v_scale`` of shape ``(n_pages,)``): pages are
+dequantized on fetch, after which the accumulator math is unchanged.
+That path trades bitwise equality for a quantization tolerance and is
+only reachable through the explicit ``EngineConfig.kv_dtype`` opt-in.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode import NEG_INF
+
+
+def paged_flash_decode_xla(
+    q: jnp.ndarray,        # (B, 1, H, hd)
+    k_pages: jnp.ndarray,  # (n_pages, page_size, KV, hd) physical pool
+    v_pages: jnp.ndarray,
+    tables: jnp.ndarray,   # (B, P) int32 page tables (0 = null page)
+    cur_len,               # (B,) or scalar int32 — valid positions per slot
+    *,
+    k_scale: jnp.ndarray | None = None,  # (n_pages,) f32 per-page scales
+    v_scale: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    B, _, H, hd = q.shape
+    _, ps, KV, _ = k_pages.shape
+    assert H % KV == 0
+    g = H // KV
+    P = tables.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    lens = jnp.broadcast_to(
+        jnp.asarray(cur_len, jnp.int32).reshape(-1), (B,)
+    )
+    tables = jnp.asarray(tables, jnp.int32)
+    qf = q[:, 0].astype(jnp.float32)                       # (B, H, hd)
+
+    def step(ki, carry):
+        m, l, acc = carry
+        pids = tables[:, ki]                               # (B,)
+        k = k_pages[pids].astype(jnp.float32)              # (B, ps, KV, hd)
+        v = v_pages[pids].astype(jnp.float32)
+        if k_scale is not None:
+            k = k * k_scale[pids][:, None, None, None]
+            v = v * v_scale[pids][:, None, None, None]
+        k = jnp.repeat(k, g, axis=2)                       # (B, ps, H, hd)
+        v = jnp.repeat(v, g, axis=2)
+        s = jnp.sum(k * qf[:, None, :, :], axis=-1) * scale   # (B, ps, H)
+        pos = ki * ps + jax.lax.broadcasted_iota(jnp.int32, (ps,), 0)
+        s = jnp.where(pos[None, :, None] < lens[:, None, None], s, NEG_INF)
+        m_cur = jnp.maximum(m, jnp.max(s, axis=1))         # (B, H)
+        alpha = jnp.exp(m - m_cur)
+        p = jnp.exp(s - m_cur[:, None, :])                 # (B, ps, H)
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[..., None] + jnp.sum(p[..., None] * v, axis=1)
+        live = (ki * ps < lens)[:, None]                   # (B, 1)
+        m = jnp.where(live, m_cur, m)
+        l = jnp.where(live, l_new, l)
+        acc = jnp.where(live[..., None], acc_new, acc)
+        return (m, l, acc)
+
+    init = (
+        jnp.full((B, H), NEG_INF, jnp.float32),
+        jnp.zeros((B, H), jnp.float32),
+        jnp.zeros((B, H, hd), jnp.float32),
+    )
+    # stop at the last page any lane still covers — everything past it is
+    # fully masked and would leave the carry bit-for-bit unchanged
+    n_live = jnp.minimum((jnp.max(lens) + ps - 1) // ps, P).astype(jnp.int32)
+    m, l, acc = jax.lax.fori_loop(0, n_live, step, init)
+    denom = jnp.maximum(l, 1e-30)
+    return (acc / denom[..., None]).astype(q.dtype)[:, None]

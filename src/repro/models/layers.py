@@ -16,7 +16,8 @@ from repro.configs.base import ModelConfig
 from repro.core.lowrank import lowrank_linear
 from repro.core.recompute import ffn_recompute, maybe_remat
 from repro.core.skipconn import cast_grad, grad_gate
-from repro.kernels.paged_decode import paged_flash_decode
+from repro.kernels import kvquant
+from repro.kernels import ops as kernel_ops
 from repro.parallel.sharding import ShardingRules, constrain
 
 
@@ -186,7 +187,7 @@ def attention_block(
     history: bool = False,
     page_tables=None,
     page_size: Optional[int] = None,
-    kernel_interpret: bool = True,
+    kernel_impl: Optional[str] = None,
 ):
     """Pre-norm MHA sublayer with residual; returns (y, new_cache).
 
@@ -217,13 +218,34 @@ def attention_block(
             page_tables, (cur_len // page_size)[:, None], axis=1
         )[:, 0]
         offs = cur_len % page_size
-        k_pages = cache["k"].at[pids, offs].set(k[:, 0].astype(cache["k"].dtype))
-        v_pages = cache["v"].at[pids, offs].set(v[:, 0].astype(cache["v"].dtype))
-        new_cache = {"k": k_pages, "v": v_pages}
-        o = paged_flash_decode(
-            q, k_pages, v_pages, page_tables, cur_len + 1,
-            interpret=kernel_interpret,
-        )
+        if "k_scale" in cache:
+            # int8 pool: dequantize only the B touched pages, insert the
+            # exact new row, requantize with fresh per-page scales; decode
+            # reads the quantized pages through the compiled XLA walk
+            k_pages, k_scale = kvquant.insert_row_q8(
+                cache["k"], cache["k_scale"], pids, offs, k[:, 0]
+            )
+            v_pages, v_scale = kvquant.insert_row_q8(
+                cache["v"], cache["v_scale"], pids, offs, v[:, 0]
+            )
+            new_cache = {"k": k_pages, "v": v_pages,
+                         "k_scale": k_scale, "v_scale": v_scale}
+            o = kernel_ops.paged_dispatch(
+                q, k_pages, v_pages, page_tables, cur_len + 1,
+                impl=kernel_impl, k_scale=k_scale, v_scale=v_scale,
+            )
+        else:
+            k_pages = cache["k"].at[pids, offs].set(
+                k[:, 0].astype(cache["k"].dtype)
+            )
+            v_pages = cache["v"].at[pids, offs].set(
+                v[:, 0].astype(cache["v"].dtype)
+            )
+            new_cache = {"k": k_pages, "v": v_pages}
+            o = kernel_ops.paged_dispatch(
+                q, k_pages, v_pages, page_tables, cur_len + 1,
+                impl=kernel_impl,
+            )
     elif cache is not None:
         if cur_len is None:
             raise ValueError("decode/prefill cache requires cur_len")

@@ -63,7 +63,7 @@ def _apply_block(
     prefill_history: bool = False,
     page_tables=None,
     page_size=None,
-    kernel_interpret: bool = True,
+    kernel_impl: Optional[str] = None,
 ):
     kind, is_moe = pos_kind
     lowrank_mode = ctx.lowrank_mode()
@@ -76,7 +76,7 @@ def _apply_block(
             cache=cache_l, cur_len=cur_len,
             attn_chunk=flags.attn_chunk, causal_slice=flags.causal_slice,
             history=prefill_history, page_tables=page_tables,
-            page_size=page_size, kernel_interpret=kernel_interpret,
+            page_size=page_size, kernel_impl=kernel_impl,
         )
     else:
         h, new_cache = ssm_block(
@@ -115,7 +115,7 @@ def run_trunk(
     prefill_history: bool = False,
     page_tables=None,
     page_size=None,
-    kernel_interpret: bool = True,
+    kernel_impl: Optional[str] = None,
 ):
     """Runs all layers. Returns (h, new_caches, aux_loss_sum).
 
@@ -156,7 +156,7 @@ def run_trunk(
                 None if cls is None else cls[p],
                 cfg, rules, ctx, flags, positions, cur_len,
                 prefill_history=prefill_history, page_tables=page_tables,
-                page_size=page_size, kernel_interpret=kernel_interpret,
+                page_size=page_size, kernel_impl=kernel_impl,
             )
             aux_tot = aux_tot + aux
             if new_cls is not None:
@@ -334,7 +334,7 @@ def forward_decode(
     *,
     page_tables=None,  # (B, P) int32: caches are physical page pools
     page_size: Optional[int] = None,
-    kernel_interpret: bool = True,
+    kernel_impl: Optional[str] = None,
 ):
     """One decode step: returns (new caches, (B, V) logits).
 
@@ -359,7 +359,7 @@ def forward_decode(
         params, None, h, cfg, rules, ctx, flags,
         positions=positions, caches=caches, cur_len=cur_len,
         page_tables=page_tables, page_size=page_size,
-        kernel_interpret=kernel_interpret,
+        kernel_impl=kernel_impl,
     )
     h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
     logits = logits_for_position(h[:, -1], _unembed(params), cfg.vocab_size)

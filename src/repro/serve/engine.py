@@ -51,6 +51,7 @@ migrated stream continues bit-identically.
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -59,6 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops as kernel_ops
 from repro.models.kvcache import cache_structs
 from repro.models.model import (
     ExecFlags,
@@ -80,6 +82,7 @@ from repro.serve.kvpool import (
     restore_slot_pages,
     scatter_pages,
     scatter_prefill,
+    scatter_prefill_q8,
     scatter_token,
 )
 from repro.serve.request import RequestState
@@ -100,7 +103,11 @@ class EngineConfig:
     admission: str = "continuous"   # "continuous" | "lockstep" | "priority"
     max_prefills_per_step: int = 1  # continuous admission budget per step
     use_paged_kernel: bool = False  # page-table-walking flash-decode
-    kernel_interpret: bool = True   # Pallas interpret mode (CPU); False on TPU
+    # kernel_interpret: None = backend-derived (compiled Pallas on TPU, the
+    # bitwise-equal compiled XLA walk elsewhere); True forces the interpret-
+    # mode Pallas kernel (debug / cross-impl pinning); False forces compiled
+    kernel_interpret: Optional[bool] = None
+    kv_dtype: str = ""              # "" = model dtype; "int8" = quantized pages
     prefill_chunk_pages: int = 0    # chunk prompts longer than this (0 = off)
     prefix_sharing: bool = False    # COW page sharing for common prefixes
     preemption: bool = False        # evict-and-replay under page pressure
@@ -115,6 +122,24 @@ class EngineConfig:
                 "preemption picks victims by priority class — it requires "
                 "admission='priority'"
             )
+        if self.kv_dtype not in ("", "int8"):
+            raise ValueError(f"unsupported kv_dtype {self.kv_dtype!r}")
+        if self.kv_dtype == "int8":
+            if not self.use_paged_kernel:
+                raise ValueError(
+                    "kv_dtype='int8' quantizes the paged pool — it requires "
+                    "use_paged_kernel=True"
+                )
+            if self.kernel_interpret:
+                raise ValueError(
+                    "kv_dtype='int8' runs only on the compiled XLA decode "
+                    "walk; kernel_interpret=True is not supported"
+                )
+            if self.prefix_sharing or self.prefill_chunk_pages:
+                raise ValueError(
+                    "kv_dtype='int8' does not support prefix_sharing or "
+                    "chunked prefill (both need the dense gather view)"
+                )
 
     @property
     def max_len(self) -> int:
@@ -158,26 +183,34 @@ def _prefill_step(params, tokens, last_idx, *, cfg, rules, flags):
 
     ``tokens``: (n, S_pad) same-bucket batch; ``last_idx`` a scalar (n == 1)
     or an (n,) vector of per-row last-prompt positions.  Returns (dense
-    caches (np, n, S_pad, KV, hd), logits at ``last_idx``).
+    caches (np, n, S_pad, KV, hd), greedy first tokens at ``last_idx``) —
+    the argmax runs inside this jit (fused sampling epilogue), so no
+    separate ``greedy_token`` dispatch follows.
     """
     dt = params["embed"].dtype
     cs = cache_structs(cfg, tokens.shape[0], tokens.shape[1], dt)
-    return forward_prefill(
+    dense, logits = forward_prefill(
         params, {"tokens": tokens}, cfg, rules, flags, cs, logit_pos=last_idx
     )
+    return dense, greedy_token(logits, cfg)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "rules", "flags"))
 def _chunk_prefill_step(params, caches, tokens, off, logit_idx, *, cfg, rules,
                         flags):
-    """One prompt chunk against a slot's gathered dense cache view."""
-    return forward_prefill_chunk(
+    """One prompt chunk against a slot's gathered dense cache view.
+
+    Returns (dense caches, greedy token at ``logit_idx``) — fused epilogue;
+    the token is only meaningful on the final chunk."""
+    caches, logits = forward_prefill_chunk(
         params, caches, {"tokens": tokens}, off, cfg, rules, flags, logit_idx
     )
+    return caches, greedy_token(logits, cfg)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("cfg", "rules", "flags", "page_size")
+    jax.jit, static_argnames=("cfg", "rules", "flags", "page_size"),
+    donate_argnames=("pool",),
 )
 def _decode_round(params, pool, tables, lens, tokens, *, cfg, rules, flags,
                   page_size):
@@ -185,27 +218,48 @@ def _decode_round(params, pool, tables, lens, tokens, *, cfg, rules, flags,
 
     Gathers the slot-major dense view, consumes one token per slot (writing
     its K/V at ``lens[b]``), scatters the new rows back to their pages, and
-    returns (new pool, (B, V) logits).
+    returns (new pool, (B,) greedy tokens).  The pool buffer is donated —
+    the scatter updates it in place instead of copying per round — and the
+    argmax is fused into the step.
     """
     dense = gather_pages(pool, tables, page_size=page_size)
     new_dense, logits = forward_decode(
         params, dense, tokens, lens, cfg, rules, flags
     )
     pool = scatter_token(pool, new_dense, tables, lens, page_size=page_size)
-    return pool, logits
+    return pool, greedy_token(logits, cfg)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg", "rules", "flags", "page_size", "interpret"),
+    static_argnames=("cfg", "rules", "flags", "page_size", "impl"),
+    donate_argnames=("pool",),
 )
 def _paged_decode_round(params, pool, tables, lens, tokens, *, cfg, rules,
-                        flags, page_size, interpret):
-    """One ragged decode round natively on the paged pool (zero-copy)."""
-    return forward_decode(
+                        flags, page_size, impl):
+    """One ragged decode round natively on the paged pool (zero-copy).
+
+    ``impl`` selects the kernel (``ops.resolve_paged_impl``): the Pallas
+    page walk ("pallas" / "pallas-interpret") or the bitwise-equal compiled
+    XLA walk ("xla").  Pool donated, argmax fused, as in ``_decode_round``.
+    """
+    pool, logits = forward_decode(
         params, pool, tokens, lens, cfg, rules, flags,
-        page_tables=tables, page_size=page_size, kernel_interpret=interpret,
+        page_tables=tables, page_size=page_size, kernel_impl=impl,
     )
+    return pool, greedy_token(logits, cfg)
+
+
+def resolve_kernel_impl(ecfg: EngineConfig) -> str:
+    """The decode implementation this config runs on this backend:
+    ``""`` (dense gather path), ``"pallas"``, ``"pallas-interpret"`` or
+    ``"xla"`` — logged into bench output and trace headers so the choice
+    is explicit rather than a silent default."""
+    if not ecfg.use_paged_kernel:
+        return ""
+    if ecfg.kv_dtype == "int8":
+        return "xla"
+    return kernel_ops.resolve_paged_impl(ecfg.kernel_interpret)
 
 
 def _lcp(a: Sequence[int], b: Sequence[int]) -> int:
@@ -242,7 +296,14 @@ class ServeEngine:
         self.flags = flags
         self.ecfg = ecfg
         dt = params["embed"].dtype
-        self.pool = init_pool(cfg, ecfg.resolved_n_pages, ecfg.page_size, dt)
+        self.pool = init_pool(
+            cfg, ecfg.resolved_n_pages, ecfg.page_size, dt,
+            kv_dtype=ecfg.kv_dtype,
+        )
+        # resolved decode implementation (logged into bench/trace headers):
+        # int8 pages always take the compiled XLA walk; otherwise backend-
+        # derived with kernel_interpret as the explicit override
+        self.kernel_impl = resolve_kernel_impl(ecfg)
         self.alloc = PageAllocator(
             ecfg.resolved_n_pages, ecfg.page_size, rng=alloc_rng
         )
@@ -269,6 +330,11 @@ class ServeEngine:
                 "n_admission_plans", "n_preemptions",
             )
         }
+        # synchronized wall time spent in decode rounds (the data path the
+        # serve bench compares); a float side channel, deliberately NOT in
+        # ``stats`` — trace footers pin the integer accounting bit-exactly
+        # and wall time is not reproducible
+        self.decode_wall_s: float = 0.0
 
     # -- capacity ------------------------------------------------------
     @property
@@ -428,8 +494,7 @@ class ServeEngine:
             # keep the historical batch-1 call (scalar last_idx) so legacy
             # golden traces replay bit-identically
             slot, rs = pairs[0]
-            logits = self._prefill_into(slot, rs)
-            toks = np.asarray(greedy_token(logits, self.cfg))
+            toks = np.asarray(self._prefill_into(slot, rs))
         else:
             S_pad = n_pg * ps
             toks_in = np.zeros((n, S_pad), np.int32)
@@ -441,16 +506,14 @@ class ServeEngine:
                 toks_in[i, :S] = rs.req.prompt
                 last[i] = S - 1
                 page_ids[i] = self.alloc.tables[slot][:n_pg]
-            dense, logits = _prefill_step(
+            dense, toks = _prefill_step(
                 self.params, jnp.asarray(toks_in), jnp.asarray(last),
                 cfg=self.cfg, rules=self.rules, flags=self.flags,
             )
-            self.pool = scatter_prefill(
-                self.pool, dense, jnp.asarray(page_ids), page_size=ps
-            )
+            self.pool = self._scatter_prefill(dense, jnp.asarray(page_ids))
             for slot, rs in pairs:
                 self._lens[slot] = len(rs.req.prompt)
-            toks = np.asarray(greedy_token(logits, self.cfg))
+            toks = np.asarray(toks)
         out = []
         for i, (slot, rs) in enumerate(pairs):
             tok = int(toks[i])
@@ -461,26 +524,36 @@ class ServeEngine:
             out.append(tok)
         return out
 
+    def _scatter_prefill(self, dense, page_ids):
+        """Write prefill caches into their pages — quantizing each freshly
+        written page when the pool is int8."""
+        if self.ecfg.kv_dtype == "int8":
+            return scatter_prefill_q8(
+                self.pool, dense, page_ids, page_size=self.ecfg.page_size
+            )
+        return scatter_prefill(
+            self.pool, dense, page_ids, page_size=self.ecfg.page_size
+        )
+
     def _prefill_into(self, slot: int, rs: RequestState):
         """Run the padded batch-1 prefill and scatter the prompt K/V into
         pages (also the deterministic re-prefill used by failover restore —
-        never forked/chunked, whatever the original admission path was)."""
+        never forked/chunked, whatever the original admission path was).
+        Returns the (1,) greedy first token from the fused epilogue."""
         S = len(rs.req.prompt)
         ps = self.ecfg.page_size
         n_pg = pages_needed(S, ps)
         S_pad = n_pg * ps
         toks = np.zeros((1, S_pad), np.int32)
         toks[0, :S] = rs.req.prompt
-        dense, logits = _prefill_step(
+        dense, tok = _prefill_step(
             self.params, jnp.asarray(toks), jnp.int32(S - 1),
             cfg=self.cfg, rules=self.rules, flags=self.flags,
         )
         page_ids = jnp.asarray(self.alloc.tables[slot][:n_pg], jnp.int32)
-        self.pool = scatter_prefill(
-            self.pool, dense, page_ids, page_size=ps
-        )
+        self.pool = self._scatter_prefill(dense, page_ids)
         self._lens[slot] = S
-        return logits
+        return tok
 
     # -- chunked prefill ----------------------------------------------
     def _advance_prefill(self, slot: int, step: int) -> Optional[int]:
@@ -510,7 +583,7 @@ class ServeEngine:
         dense = gather_pages(
             self.pool, jnp.asarray(self._tables[slot][None]), page_size=ps
         )
-        dense, logits = _chunk_prefill_step(
+        dense, tok = _chunk_prefill_step(
             self.params, dense, jnp.asarray(toks), jnp.int32(off),
             jnp.int32(true_c - 1),
             cfg=self.cfg, rules=self.rules, flags=self.flags,
@@ -529,7 +602,7 @@ class ServeEngine:
         del self._pending[slot]
         self._lens[slot] = S
         self._register_prefix(slot)
-        return int(greedy_token(logits[0], self.cfg))
+        return int(tok[0])
 
     def step_prefills(self, step: int) -> List[Tuple[RequestState, int, bool]]:
         """Advance every pending chunked prefill one chunk.  Returns
@@ -707,8 +780,7 @@ class ServeEngine:
             path = "snapshot"
             rs.restored_bytes += snapshot.nbytes
         else:
-            logits = self._prefill_into(slot, rs)
-            t0 = int(greedy_token(logits[0], self.cfg))
+            t0 = int(self._prefill_into(slot, rs)[0])
             if t0 != rs.emitted[0]:
                 raise AssertionError(
                     f"re-prefill of request {rs.rid} diverged: emitted "
@@ -742,13 +814,16 @@ class ServeEngine:
 
     # -- decode --------------------------------------------------------
     def _decode(self, tables, lens, toks):
-        """Dispatch one decode round to the configured data path."""
+        """Dispatch one decode round to the configured data path.
+
+        Returns (new pool, (B,) sampled tokens) — sampling is fused into
+        the jitted round, and the old pool buffer is donated to it."""
         if self.ecfg.use_paged_kernel:
             return _paged_decode_round(
                 self.params, self.pool, tables, lens, toks,
                 cfg=self.cfg, rules=self.rules, flags=self.flags,
                 page_size=self.ecfg.page_size,
-                interpret=self.ecfg.kernel_interpret,
+                impl=self.kernel_impl,
             )
         return _decode_round(
             self.params, self.pool, tables, lens, toks,
@@ -786,7 +861,8 @@ class ServeEngine:
             tables = tables.copy()
             for i in self._pending:
                 tables[i] = NULL_PAGE
-        self.pool, logits = self._decode(
+        t0 = time.perf_counter()
+        self.pool, sampled = self._decode(
             jnp.asarray(tables), jnp.asarray(self._lens), jnp.asarray(toks),
         )
         # modeled KV traffic: the dense gather streams every table entry of
@@ -798,7 +874,11 @@ class ServeEngine:
         self.stats["kv_bytes_paged"] += self._page_nbytes * sum(
             pages_needed(int(self._lens[i]) + 1, ps) for i in active
         )
-        new_toks = np.asarray(greedy_token(logits, self.cfg))
+        # materializing the sampled tokens synchronizes on the round, so
+        # this clocks the decode data path itself (dispatch + device),
+        # free of the per-step scheduler work around it
+        new_toks = np.asarray(sampled)
+        self.decode_wall_s += time.perf_counter() - t0
         out = []
         for i in active:
             rs = self.slots[i]

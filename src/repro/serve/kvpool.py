@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels import kvquant
 from repro.models.kvcache import cache_structs
 from repro.models.params import block_layout
 
@@ -218,16 +219,38 @@ def check_attention_only(cfg: ModelConfig) -> None:
         )
 
 
-def init_pool(cfg: ModelConfig, n_pages: int, page_size: int, dtype) -> Tree:
-    """Zeroed physical pages for every cache entry of ``cfg``."""
+def init_pool(cfg: ModelConfig, n_pages: int, page_size: int, dtype, *,
+              kv_dtype: str = "") -> Tree:
+    """Zeroed physical pages for every cache entry of ``cfg``.
+
+    ``kv_dtype="int8"`` stores quantized pages: the ``k``/``v`` leaves
+    become int8 and each cache entry gains ``k_scale``/``v_scale`` leaves
+    of shape ``(n_periods, n_pages)`` — one f32 absmax scale per physical
+    page (see ``kernels/kvquant.py``).  The scales live *inside* the pool
+    tree so the generic page machinery (``copy_page``, snapshot gather /
+    restore, buffer donation) carries them along untouched.
+    """
     check_attention_only(cfg)
+    if kv_dtype not in ("", "int8"):
+        raise ValueError(f"unsupported kv_dtype {kv_dtype!r}")
     structs = cache_structs(cfg, 1, page_size, dtype)
-    return jax.tree.map(
+    pool = jax.tree.map(
         lambda s: jnp.zeros(
-            (s.shape[0], n_pages, page_size) + s.shape[3:], s.dtype
+            (s.shape[0], n_pages, page_size) + s.shape[3:],
+            jnp.int8 if kv_dtype == "int8" else s.dtype,
         ),
         structs,
     )
+    if kv_dtype == "int8":
+        pool = tuple(
+            {
+                **entry,
+                "k_scale": jnp.ones(entry["k"].shape[:2], jnp.float32),
+                "v_scale": jnp.ones(entry["v"].shape[:2], jnp.float32),
+            }
+            for entry in pool
+        )
+    return pool
 
 
 def page_nbytes(pool: Tree) -> int:
@@ -270,6 +293,31 @@ def scatter_prefill(pool: Tree, dense: Tree, page_ids: jnp.ndarray, *,
         return pg.at[:, page_ids].set(chunks)
 
     return jax.tree.map(put, pool, dense)
+
+
+@functools.partial(jax.jit, static_argnames=("page_size",))
+def scatter_prefill_q8(pool: Tree, dense: Tree, page_ids: jnp.ndarray, *,
+                       page_size: int) -> Tree:
+    """:func:`scatter_prefill` for an int8 pool: each freshly written page
+    is quantized once (absmax/127 scale) as it lands.  ``dense`` stays the
+    exact fp prefill cache — first-token logits are computed before
+    quantization, so admission tokens match the fp paths bitwise."""
+    if page_ids.ndim == 1:
+        page_ids = page_ids[None]
+    n, n_pg = page_ids.shape
+    out = []
+    for entry, dn in zip(pool, dense):
+        e = dict(entry)
+        for name in ("k", "v"):
+            pg, sc = entry[name], entry[name + "_scale"]
+            chunks = dn[name].reshape(
+                pg.shape[0], n, n_pg, page_size, *pg.shape[3:]
+            )
+            q, s = kvquant.quantize_pages(chunks)
+            e[name] = pg.at[:, page_ids].set(q)
+            e[name + "_scale"] = sc.at[:, page_ids].set(s)
+        out.append(e)
+    return tuple(out)
 
 
 @functools.partial(jax.jit, static_argnames=("pg_lo", "n_pg", "page_size"))

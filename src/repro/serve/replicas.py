@@ -124,6 +124,9 @@ class ServeResult:
     accounting: Dict[str, int]
     n_steps: int
     step_wall: List[float] = field(default_factory=list)
+    # synchronized wall spent inside decode rounds, summed over engines —
+    # kept out of ``accounting`` (trace footers pin those ints bit-exactly)
+    decode_wall_s: float = 0.0
 
     def streams(self) -> Dict[int, List[int]]:
         return {rid: list(rs.emitted) for rid, rs in self.states.items()}
@@ -180,6 +183,7 @@ class ReplicaSet:
         # traffic-spike state: the multiplier the *previous* step's chaos
         # left active, applied to the arrival clock before the next step
         self._arrival_mult = 1.0
+        self._decode_wall = 0.0
         self.acct: Dict[str, int] = {
             k: 0 for k in (
                 "n_requests", "n_tokens", "n_kills", "n_revives",
@@ -432,6 +436,8 @@ class ReplicaSet:
         """Fold an engine's modeled-traffic / sharing counters into acct."""
         for k, v in eng.drain_stats().items():
             self.acct[k] += v
+        self._decode_wall += eng.decode_wall_s
+        eng.decode_wall_s = 0.0
 
     # ------------------------------------------------------------------
     def run(self, workload: Sequence[Request], max_steps: int = 10_000
@@ -466,4 +472,5 @@ class ReplicaSet:
             accounting=dict(self.acct),
             n_steps=t,
             step_wall=step_wall,
+            decode_wall_s=self._decode_wall,
         )

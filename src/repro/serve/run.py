@@ -36,7 +36,7 @@ from repro.ft.events import FAIL, TRAFFIC_SPIKE, FailureEvent
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import build_flags, build_rules
 from repro.models.params import init_params
-from repro.serve.engine import EngineConfig
+from repro.serve.engine import EngineConfig, resolve_kernel_impl
 from repro.serve.replicas import ReplicaSet, ServeResult, check_workload_fits
 from repro.serve.request import WorkloadSpec, build_workload
 from repro.serve.trace import (
@@ -128,6 +128,10 @@ def run_from_header(header: ServeTraceHeader,
                     record_path: Optional[str] = None) -> Tuple[ServeResult, List]:
     recorder = ServeTraceRecorder(record_path) if record_path else None
     rset, workload = build_replica_set(header, recorder=recorder)
+    # stamp the decode implementation this run resolves to (informational —
+    # replays on another backend may resolve differently and must still be
+    # bit-exact; that cross-impl contract is pinned by tests/CI)
+    header.kernel_impl = resolve_kernel_impl(EngineConfig(**header.engine))
     if recorder is not None:  # header only once the setup validated
         recorder.write_header(header)
     result = rset.run(workload)
@@ -138,18 +142,24 @@ def run_from_header(header: ServeTraceHeader,
 
 
 def replay_serve_trace(path, replay_record: Optional[str] = None,
-                       paged_kernel: bool = False) -> List[str]:
+                       paged_kernel: bool = False,
+                       kernel_interpret: Optional[bool] = None) -> List[str]:
     """Re-simulate ``path`` and return mismatch descriptions (empty = exact).
 
     ``paged_kernel=True`` replays with the page-table-walking flash-decode
     kernel regardless of what the trace recorded — the CI serve-smoke uses
     this to pin that swapping the decode data path never changes a single
-    event or token.
+    event or token.  ``kernel_interpret`` (tri-state) likewise overrides
+    the implementation choice: True pins the interpret-mode Pallas kernel,
+    False the compiled path — both must replay identically.
     """
     trace = load_serve_trace(path)
     if paged_kernel:
         trace.header.engine = dict(trace.header.engine,
                                    use_paged_kernel=True)
+    if kernel_interpret is not None:
+        trace.header.engine = dict(trace.header.engine,
+                                   kernel_interpret=kernel_interpret)
     result, events = run_from_header(trace.header, record_path=replay_record)
     return verify_serve_replay(
         trace, events, accounting=result.accounting,
@@ -215,6 +225,8 @@ def header_from_args(args) -> ServeTraceHeader:
         admission=args.admission,
         max_prefills_per_step=args.max_prefills,
         use_paged_kernel=args.paged_kernel,
+        kernel_interpret=True if args.kernel_interpret else None,
+        kv_dtype=args.kv_dtype,
         prefill_chunk_pages=args.chunk_pages,
         prefix_sharing=args.prefix_sharing or args.shared_prefix > 0,
         preemption=args.preempt,
@@ -263,6 +275,13 @@ def main(argv=None) -> int:
     ap.add_argument("--paged-kernel", action="store_true",
                     help="page-table-walking flash-decode (on replay: "
                          "override the recorded engine config)")
+    ap.add_argument("--kernel-interpret", action="store_true",
+                    help="force the interpret-mode Pallas paged kernel "
+                         "instead of the backend-derived compiled path "
+                         "(on replay: override the recorded engine config)")
+    ap.add_argument("--kv-dtype", default="", choices=["", "int8"],
+                    help="paged KV pool dtype: int8 quantizes pages with "
+                         "per-page scales (needs --paged-kernel)")
     ap.add_argument("--max-prefills", type=int, default=1,
                     help="batched-prefill admission budget per step")
     ap.add_argument("--chunk-pages", type=int, default=0,
@@ -300,7 +319,8 @@ def main(argv=None) -> int:
 
     if args.replay:
         problems = replay_serve_trace(
-            args.replay, args.replay_record, paged_kernel=args.paged_kernel
+            args.replay, args.replay_record, paged_kernel=args.paged_kernel,
+            kernel_interpret=True if args.kernel_interpret else None,
         )
         if problems:
             print(f"serve replay DIVERGED from {args.replay}:")

@@ -108,10 +108,17 @@ class ServeTraceHeader:
     snapshots: bool = True
     snapshot_cadence: int = 1
     layout_seed: int = 0
+    # informational: the paged-decode implementation resolved at record
+    # time ("pallas" | "pallas-interpret" | "xla" | "" for the dense path).
+    # Deliberately OUTSIDE the ``engine`` dict (which must round-trip
+    # through EngineConfig(**engine)) and not compared on replay — the
+    # bitwise contract between implementations is what lets a trace
+    # recorded on one backend replay on another.
+    kernel_impl: str = ""
     version: int = SERVE_TRACE_VERSION
 
     def to_json(self) -> dict:
-        return {
+        d = {
             "type": "header", "version": self.version,
             "config": self.config, "reduced": self.reduced,
             "dtype": self.dtype, "seed": self.seed,
@@ -123,6 +130,9 @@ class ServeTraceHeader:
             "engine": self.engine, "workload": self.workload,
             "chaos": self.chaos,
         }
+        if self.kernel_impl:
+            d["kernel_impl"] = self.kernel_impl
+        return d
 
     @classmethod
     def from_json(cls, d: dict) -> "ServeTraceHeader":
@@ -134,6 +144,7 @@ class ServeTraceHeader:
             snapshots=bool(d.get("snapshots", True)),
             snapshot_cadence=int(d.get("snapshot_cadence", 1)),
             layout_seed=int(d.get("layout_seed", 0)),
+            kernel_impl=str(d.get("kernel_impl", "")),
             engine=dict(d["engine"]), workload=dict(d["workload"]),
             chaos=dict(d.get("chaos", {})),
             version=int(d.get("version", 1)),

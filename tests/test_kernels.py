@@ -356,3 +356,11 @@ def test_paged_decode_null_lanes_are_zero():
     )
     assert bool(jnp.all(o[1] == 0.0))
     assert bool(jnp.all(jnp.isfinite(o)))
+
+
+# ---------------------------------------------------------------------------
+# NOTE: the backend-gated implementation-selection and cross-implementation
+# bitwise tests live in tests/test_kernel_impls.py — that tier must run
+# even without the [test] extra this module skips on.
+# ---------------------------------------------------------------------------
+
