@@ -83,4 +83,7 @@ def run(steps: int = 250, seed: int = 0, verbose: bool = True):
 
 
 if __name__ == "__main__":
+    from repro import obs
+
+    obs.logging_setup()
     run()

@@ -36,12 +36,14 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import logging
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ParallelConfig, get_config, reduced
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import build_flags, build_rules
@@ -51,9 +53,7 @@ from repro.serve.replicas import ReplicaSet
 from repro.serve.request import WorkloadSpec, build_workload
 from repro.serve.run import injectors_from_spec
 
-
-def _pctl(xs, q):
-    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else None
+_log = logging.getLogger("repro.bench.serve")
 
 
 def run_mode(cfg, params, rules, flags, ecfg, workload, *, n_replicas=1,
@@ -92,25 +92,25 @@ def run_mode(cfg, params, rules, flags, ecfg, workload, *, n_replicas=1,
         "decode_wall_s": result.decode_wall_s,
         "tok_s": acct["n_tokens"] / wall,
         "tok_per_step": acct["n_tokens"] / result.n_steps,
-        # sample counts ride next to the percentiles: _pctl returns None on
-        # an empty sample set, and CI fails loudly when a count is zero
-        # instead of silently comparing against null percentiles
+        # sample counts ride next to the percentiles: obs.percentile returns
+        # None on an empty sample set, and CI fails loudly when a count is
+        # zero instead of silently comparing against null percentiles
         "ttft_samples": len(ttft_steps),
         "tpot_samples": len(tpot_steps),
         "ttft_wall_samples": len(ttft_wall),
         "tpot_wall_samples": len(tpot_wall),
-        "ttft_steps_p50": _pctl(ttft_steps, 50),
-        "ttft_steps_p95": _pctl(ttft_steps, 95),
-        "ttft_steps_p99": _pctl(ttft_steps, 99),
-        "tpot_steps_p50": _pctl(tpot_steps, 50),
-        "tpot_steps_p95": _pctl(tpot_steps, 95),
-        "tpot_steps_p99": _pctl(tpot_steps, 99),
-        "ttft_wall_ms_p50": _pctl([x * 1e3 for x in ttft_wall], 50),
-        "ttft_wall_ms_p95": _pctl([x * 1e3 for x in ttft_wall], 95),
-        "ttft_wall_ms_p99": _pctl([x * 1e3 for x in ttft_wall], 99),
-        "tpot_wall_ms_p50": _pctl([x * 1e3 for x in tpot_wall], 50),
-        "tpot_wall_ms_p95": _pctl([x * 1e3 for x in tpot_wall], 95),
-        "tpot_wall_ms_p99": _pctl([x * 1e3 for x in tpot_wall], 99),
+        "ttft_steps_p50": obs.percentile(ttft_steps, 50),
+        "ttft_steps_p95": obs.percentile(ttft_steps, 95),
+        "ttft_steps_p99": obs.percentile(ttft_steps, 99),
+        "tpot_steps_p50": obs.percentile(tpot_steps, 50),
+        "tpot_steps_p95": obs.percentile(tpot_steps, 95),
+        "tpot_steps_p99": obs.percentile(tpot_steps, 99),
+        "ttft_wall_ms_p50": obs.percentile([x * 1e3 for x in ttft_wall], 50),
+        "ttft_wall_ms_p95": obs.percentile([x * 1e3 for x in ttft_wall], 95),
+        "ttft_wall_ms_p99": obs.percentile([x * 1e3 for x in ttft_wall], 99),
+        "tpot_wall_ms_p50": obs.percentile([x * 1e3 for x in tpot_wall], 50),
+        "tpot_wall_ms_p95": obs.percentile([x * 1e3 for x in tpot_wall], 95),
+        "tpot_wall_ms_p99": obs.percentile([x * 1e3 for x in tpot_wall], 99),
         "n_kills": acct["n_kills"],
         "n_migrations": acct["n_migrations"],
         "n_restore_snapshot": acct["n_restore_snapshot"],
@@ -333,7 +333,12 @@ def main():
                          "(default: --seed)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (fewer requests, no chaos mode)")
+    ap.add_argument("--obs-out", default=None,
+                    help="write obs telemetry (JSONL + PATH.prom + run "
+                         "report) for the whole bench; see "
+                         "docs/observability.md")
     args = ap.parse_args()
+    obs.logging_setup()
     if args.smoke:
         args.requests = min(args.requests, 10)
         # the smoke overload is a pinned deterministic scenario (like a
@@ -413,44 +418,55 @@ def main():
     }
     with open(args.out, "w") as fh:
         json.dump(out, fh, indent=2)
-    print(
-        f"lockstep {lockstep['tok_s']:.1f} tok/s "
-        f"({lockstep['engine_steps']} steps) vs continuous "
-        f"{continuous['tok_s']:.1f} tok/s ({continuous['engine_steps']} "
-        f"steps): {out['speedup_tok_s']:.2f}x"
-        + (
-            f"; with failures {chaos['tok_s']:.1f} tok/s, "
-            f"{chaos['n_kills']} kills, {chaos['n_migrations']} migrations"
+    _log.info(
+        "lockstep %.1f tok/s (%d steps) vs continuous %.1f tok/s "
+        "(%d steps): %.2fx%s",
+        lockstep["tok_s"], lockstep["engine_steps"],
+        continuous["tok_s"], continuous["engine_steps"],
+        out["speedup_tok_s"],
+        (
+            "; with failures %.1f tok/s, %d kills, %d migrations"
+            % (chaos["tok_s"], chaos["n_kills"], chaos["n_migrations"])
             if chaos else ""
-        )
+        ),
     )
-    print(
-        f"paged decode [{paged['kernel_impl']}]: "
-        f"{paged['bytes_reduction']:.1f}x fewer modeled KV "
-        f"bytes/step ({paged['kv_bytes_per_round_dense']/1e6:.2f} MB -> "
-        f"{paged['kv_bytes_per_round_paged']/1e6:.2f} MB), wall "
-        f"{paged['wall_speedup_paged']:.2f}x, tokens_equal="
-        f"{paged['tokens_equal']}"
+    _log.info(
+        "paged decode [%s]: %.1fx fewer modeled KV bytes/step "
+        "(%.2f MB -> %.2f MB), wall %.2fx, tokens_equal=%s",
+        paged["kernel_impl"], paged["bytes_reduction"],
+        paged["kv_bytes_per_round_dense"] / 1e6,
+        paged["kv_bytes_per_round_paged"] / 1e6,
+        paged["wall_speedup_paged"], paged["tokens_equal"],
     )
-    print(
-        f"prefix sharing: {sharing['n_prefix_hits']} hits, "
-        f"{sharing['n_pages_shared']}/{sharing['prompt_pages_total']} prompt "
-        f"pages shared ({sharing['pages_saved_frac']:.0%}), "
-        f"{sharing['n_cow_pages']} COW copies, tokens_equal="
-        f"{sharing['tokens_equal']}"
+    _log.info(
+        "prefix sharing: %d hits, %d/%d prompt pages shared (%.0f%%), "
+        "%d COW copies, tokens_equal=%s",
+        sharing["n_prefix_hits"], sharing["n_pages_shared"],
+        sharing["prompt_pages_total"], 100 * sharing["pages_saved_frac"],
+        sharing["n_cow_pages"], sharing["tokens_equal"],
     )
     om = overload["modes"]
-    print(
-        f"overload ({args.overload_requests} reqs): goodput "
-        f"fcfs {om['fcfs']['goodput_frac']:.0%} "
-        f"(ttft p99 {om['fcfs']['ttft_steps_p99']:.0f} steps) vs shed "
-        f"{om['shed']['goodput_frac']:.0%} "
-        f"({om['shed']['n_shed']} shed) vs preempt "
-        f"{om['preempt']['goodput_frac']:.0%} "
-        f"({om['preempt']['n_preemptions']} preemptions, ttft p99 "
-        f"{om['preempt']['ttft_steps_p99']:.0f} steps)"
+    _log.info(
+        "overload (%d reqs): goodput fcfs %.0f%% (ttft p99 %.0f steps) "
+        "vs shed %.0f%% (%d shed) vs preempt %.0f%% (%d preemptions, "
+        "ttft p99 %.0f steps)",
+        args.overload_requests,
+        100 * om["fcfs"]["goodput_frac"], om["fcfs"]["ttft_steps_p99"],
+        100 * om["shed"]["goodput_frac"], om["shed"]["n_shed"],
+        100 * om["preempt"]["goodput_frac"],
+        om["preempt"]["n_preemptions"], om["preempt"]["ttft_steps_p99"],
     )
-    print(f"wrote {args.out}")
+    _log.info("wrote %s", args.out)
+    if args.obs_out:
+        import sys
+
+        dump_path = obs.dump(args.obs_out, meta={
+            "run": "serve_bench", "smoke": args.smoke,
+            "requests": args.requests,
+            "overload_requests": args.overload_requests,
+        })
+        _log.info("obs telemetry written to %s (+ .prom)", dump_path)
+        sys.stdout.write(obs.render_report_file(dump_path))
 
 
 if __name__ == "__main__":

@@ -393,6 +393,9 @@ def main():
     ap.add_argument("--snapshot-every", type=int, default=2)
     ap.add_argument("--steps", type=int, default=40)
     args = ap.parse_args()
+    from repro import obs
+
+    obs.logging_setup()
     if args.statexfer_bench:
         return run_statexfer_bench(
             steps=args.steps, snapshot_every=args.snapshot_every

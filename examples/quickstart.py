@@ -13,6 +13,9 @@ from repro.models.model import forward_decode, forward_prefill
 
 
 def main():
+    from repro import obs
+
+    obs.logging_setup()
     cfg = reduced(get_config("glm4-9b"), dtype="float32")
     shape = ShapeConfig("quickstart", 64, 8, "train")
     trainer = Trainer(cfg, shape, TrainConfig(steps=60, learning_rate=3e-3))

@@ -55,6 +55,9 @@ def main():
                     help="bursty priority workload + undersized pool with "
                          "shedding, preemption, and a traffic spike")
     args = ap.parse_args()
+    from repro import obs
+
+    obs.logging_setup()
 
     cfg = reduced(get_config("qwen3-0.6b"), dtype="float32")
     mesh = make_host_mesh()

@@ -82,6 +82,9 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/mecefo_example_ckpt")
     ap.add_argument("--trace", default="/tmp/mecefo_example_trace.jsonl")
     args = ap.parse_args()
+    from repro import obs
+
+    obs.logging_setup()
 
     cfg = get_config("llama-350m")
     if not args.full:

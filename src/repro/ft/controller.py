@@ -19,11 +19,11 @@ from typing import Any, Callable, Dict, Optional, Set, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.configs.base import MeCeFOConfig, ModelConfig
 from repro.core.ndb import NDBContext, NDBPlan, context_for, stage_of_layer
 
 
-@dataclass
 class RecoveryAccounting:
     """Bytes moved + stall estimates for the throughput model.
 
@@ -32,21 +32,40 @@ class RecoveryAccounting:
     ``measured_*`` fields are filled from real :class:`TransferReceipt`s
     when the statexfer subsystem executes the transfers — the wire-level
     payload actually moved, which the golden statexfer trace pins in CI.
+
+    Each field is backed by its own ``ft.recovery.*`` counter on the obs
+    registry (the field set itself is declared once, in
+    :mod:`repro.obs.catalog`).  Attribute reads/writes keep working
+    unchanged — ``acct.n_failovers += 1`` — but every consumer now reads
+    through the shared telemetry instruments, and the exporters see the
+    same integers the trace footers pin.
     """
 
-    peer_fetch_bytes: int = 0
-    ckpt_restore_bytes: int = 0
-    n_failovers: int = 0
-    n_recoveries: int = 0
-    n_rank_drops: int = 0
-    n_rejoins: int = 0
-    measured_transfer_bytes: int = 0
-    n_peer_restores: int = 0
-    n_ckpt_restores: int = 0
+    FIELDS = obs.FT_ACCOUNTING_KEYS
+
+    def __init__(self) -> None:
+        object.__setattr__(self, "_counters", {
+            k: obs.counter(f"ft.recovery.{k}") for k in self.FIELDS
+        })
+
+    def __getattr__(self, name: str):
+        counters = self.__dict__.get("_counters")
+        if counters is not None and name in counters:
+            return counters[name].value
+        raise AttributeError(name)
+
+    def __setattr__(self, name: str, value) -> None:
+        counters = self.__dict__.get("_counters")
+        if counters is not None and name in counters:
+            # ``acct.x += n`` arrives here as an absolute set; fold the
+            # delta into the monotonic counter (negative deltas are bugs)
+            counters[name].inc(value - counters[name].value)
+        else:
+            object.__setattr__(self, name, value)
 
     def as_dict(self) -> Dict[str, int]:
         """Integer totals for the chaos-trace footer (replay verification)."""
-        return dataclasses.asdict(self)
+        return {k: int(c.value) for k, c in self._counters.items()}
 
 
 @dataclass(frozen=True)
@@ -218,13 +237,16 @@ class FTController:
         doesn't churn failover accounting) and account recovery traffic under
         the current network inflation.  Returns (plan_changed, slow_devices).
         """
-        slow = self.straggler_devices(outcome.device_times)
-        plan = outcome.plan
-        if slow:
-            plan = dataclasses.replace(plan, failed=frozenset(plan.failed | slow))
-        changed = self.update_plan(
-            plan, traffic_multiplier=outcome.net_inflation
-        )
+        with obs.span("controller.apply_chaos"):
+            slow = self.straggler_devices(outcome.device_times)
+            plan = outcome.plan
+            if slow:
+                plan = dataclasses.replace(
+                    plan, failed=frozenset(plan.failed | slow)
+                )
+            changed = self.update_plan(
+                plan, traffic_multiplier=outcome.net_inflation
+            )
         return changed, slow
 
     def context(self) -> NDBContext:

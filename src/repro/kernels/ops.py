@@ -131,15 +131,29 @@ def resolve_paged_impl(interpret: Optional[bool] = None,
 
 
 _logged: set = set()
+_impl_counters: dict = {}
 
 
 def _log_choice(name: str, impl: str) -> None:
-    key = (name, impl)
-    if key not in _logged:
-        _logged.add(key)
-        _log.info(
-            "kernel %s -> %s (backend=%s)", name, impl, jax.default_backend()
-        )
+    """Record one kernel dispatch under its resolved implementation:
+    a ``kernels.impl_calls{kernel,impl}`` count per call, an INFO log
+    line once per (kernel, impl) pair."""
+    from repro import obs
+
+    with obs.span("kernel.select"):
+        key = (name, impl)
+        counter = _impl_counters.get(key)
+        if counter is None:
+            counter = _impl_counters[key] = obs.counter(
+                "kernels.impl_calls", labels={"kernel": name, "impl": impl}
+            )
+        counter.inc()
+        if key not in _logged:
+            _logged.add(key)
+            _log.info(
+                "kernel %s -> %s (backend=%s)",
+                name, impl, jax.default_backend(),
+            )
 
 
 def _pad_to(x, axis: int, multiple: int):

@@ -23,8 +23,9 @@ Usage:
 """
 import argparse
 import json
+import logging
+import sys
 import time
-import traceback
 
 import jax
 
@@ -37,6 +38,8 @@ from repro.configs.base import (
     list_configs,
     shape_applicable,
 )
+
+_log = logging.getLogger("repro.dryrun")
 
 ASSIGNED = [
     "glm4-9b",
@@ -103,7 +106,7 @@ def run_cell(
         with open(out_path) as f:
             cached = json.load(f)
         if verbose:
-            print(f"[cached] {tag}")
+            _log.info("[cached] %s", tag)
         return cached
 
     ok, reason = shape_applicable(cfg, shape)
@@ -112,7 +115,7 @@ def run_cell(
         with open(out_path, "w") as f:
             json.dump(rec, f, indent=2)
         if verbose:
-            print(f"[skip]   {tag}: {reason}")
+            _log.info("[skip]   %s: %s", tag, reason)
         return rec
 
     parallel = parallel or ParallelConfig()
@@ -219,7 +222,7 @@ def run_cell(
     with open(out_path, "w") as f:
         json.dump(rec, f, indent=2)
     if verbose:
-        print(f"[ok {compile_s:6.1f}s] {summarize(report)}", flush=True)
+        _log.info("[ok %6.1fs] %s", compile_s, summarize(report))
     return rec
 
 
@@ -234,13 +237,17 @@ def main() -> None:
     ap.add_argument("--list", action="store_true")
     args = ap.parse_args()
 
+    from repro import obs
+
+    obs.logging_setup()
+
     archs = [args.arch] if args.arch else ASSIGNED
     shapes = [args.shape] if args.shape else list(SHAPES)
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
     if args.list:
         for a in archs:
             for s in shapes:
-                print(a, s)
+                sys.stdout.write(f"{a} {s}\n")
         return
     failures = []
     for a in archs:
@@ -248,14 +255,15 @@ def main() -> None:
             for mp in meshes:
                 try:
                     run_cell(a, s, mp, ndb=args.ndb, out_dir=args.out, force=args.force)
-                except Exception as e:  # noqa: BLE001 — report and continue
-                    failures.append((a, s, mp, repr(e)))
-                    print(f"[FAIL] {a} {s} {'multi' if mp else 'single'}: {e}")
-                    traceback.print_exc()
+                except Exception:  # noqa: BLE001 — report and continue
+                    failures.append((a, s, mp))
+                    _log.exception(
+                        "[FAIL] %s %s %s", a, s, "multi" if mp else "single"
+                    )
     if failures:
-        print(f"\n{len(failures)} FAILURES")
+        _log.error("%d FAILURES", len(failures))
         raise SystemExit(1)
-    print("\nall cells compiled OK")
+    _log.info("all cells compiled OK")
 
 
 if __name__ == "__main__":

@@ -17,9 +17,12 @@ Everything is *per device* (the module is post-SPMD).
 """
 from __future__ import annotations
 
+import logging
 import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
+
+_log = logging.getLogger("repro.hlo")
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e5m2": 1, "f8e4m3fn": 1,
@@ -635,10 +638,17 @@ def breakdown(txt: str, top: int = 20):
 def print_breakdown(txt: str, top: int = 15) -> None:
     items = breakdown(txt)
     meta = lambda ins: (re.search(r'op_name="([^"]*)"', ins.attrs) or [None, ""])[1]
-    print("== TOP BYTES ==")
+    _log.info("== TOP BYTES ==")
     for b, cb, f, mult, ins, cn in sorted(items, reverse=True, key=lambda x: x[0])[:top]:
-        print(f"  {b/1e9:9.1f} GB x{mult:4d} {ins.opcode:22s} {ins.result_shapes[:1]} {meta(ins)[-70:]}")
-    print("== TOP COLLECTIVES ==")
+        _log.info(
+            "  %9.1f GB x%4d %-22s %s %s",
+            b / 1e9, mult, ins.opcode, ins.result_shapes[:1], meta(ins)[-70:],
+        )
+    _log.info("== TOP COLLECTIVES ==")
     for b, cb, f, mult, ins, cn in sorted(items, reverse=True, key=lambda x: x[1])[:top]:
         if cb:
-            print(f"  {cb/1e9:9.2f} GB x{mult:4d} {ins.opcode:22s} {ins.result_shapes[:1]} {meta(ins)[-70:]}")
+            _log.info(
+                "  %9.2f GB x%4d %-22s %s %s",
+                cb / 1e9, mult, ins.opcode, ins.result_shapes[:1],
+                meta(ins)[-70:],
+            )

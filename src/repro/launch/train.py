@@ -12,12 +12,14 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import logging
 import time
 from typing import Dict, List, Optional
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint.ckpt import CheckpointManager
 from repro.configs.base import (
     MeCeFOConfig,
@@ -49,6 +51,8 @@ from repro.ft.trace import (
 from repro.launch.mesh import make_host_mesh
 from repro.launch.state import init_state
 from repro.launch.steps import make_train_step
+
+_log = logging.getLogger("repro.train")
 
 
 class Trainer:
@@ -129,6 +133,8 @@ class Trainer:
         )
         self._step_cache: Dict = {}
         self.history: List[Dict] = []
+        self._obs_step_wall = obs.histogram("train.step.wall_s")
+        self._obs_steps = obs.counter("train.steps_total")
         self._refresh_proj = None
         self._logged_reshard = None
 
@@ -213,52 +219,56 @@ class Trainer:
     def run(self, steps: Optional[int] = None, log_every: int = 10):
         steps = steps or self.train_cfg.steps
         for i in range(steps):
-            t0 = time.time()
-            step_idx = int(self.state.step)
-            outcome = self.process.step(step_idx)
-            changed, slow = self.controller.apply_chaos(outcome)
-            if changed and self.mecefo.mode != "off":
-                pass  # static mode: next _get_step call compiles/caches
-            if self.xfer is not None:
-                self._run_state_transfers(step_idx)
+            with obs.span("trainer.step"):
+                t0 = time.time()
+                step_idx = int(self.state.step)
+                outcome = self.process.step(step_idx)
+                changed, slow = self.controller.apply_chaos(outcome)
+                if changed and self.mecefo.mode != "off":
+                    pass  # static mode: next _get_step call compiles/caches
+                if self.xfer is not None:
+                    with obs.span("trainer.state_transfers"):
+                        self._run_state_transfers(step_idx)
 
-            batch = make_batch(
-                self.cfg, self.shape, step_idx, source=self.source, seed=self.seed
-            )
-            key = self._step_key()
-            jitted = self._get_step(key)
-            with self.mesh:
-                if key[0] == "dynamic":
-                    keep, weight = plan_to_masks(
-                        self._mask_plan(), self.cfg, self.shape.global_batch
-                    )
-                    ndb = {"keep": keep, "example_weight": weight}
-                    self.state, metrics = jitted(self.state, batch, ndb)
-                else:
-                    self.state, metrics = jitted(self.state, batch)
-
-            # technique III: refresh V1 every tau steps (Alg. 3)
-            if (
-                self.mecefo.mode != "off"
-                and self.mecefo.lowrank_wgrad
-                and step_idx % self.mecefo.svd_period == 0
-            ):
+                batch = make_batch(
+                    self.cfg, self.shape, step_idx, source=self.source, seed=self.seed
+                )
+                key = self._step_key()
+                jitted = self._get_step(key)
                 with self.mesh:
-                    self.state = self.state._replace(
-                        proj=refresh_projections(
-                            self.state.params, self.cfg, self.mecefo.rank
+                    if key[0] == "dynamic":
+                        keep, weight = plan_to_masks(
+                            self._mask_plan(), self.cfg, self.shape.global_batch
                         )
-                    )
+                        ndb = {"keep": keep, "example_weight": weight}
+                        self.state, metrics = jitted(self.state, batch, ndb)
+                    else:
+                        self.state, metrics = jitted(self.state, batch)
 
-            if self.xfer is not None:
-                # hot-spare snapshot of the post-step state (async, double-
-                # buffered: only the thread launch blocks this loop)
-                self.xfer.on_step(self.state, step_idx, self.controller.plan)
+                # technique III: refresh V1 every tau steps (Alg. 3)
+                if (
+                    self.mecefo.mode != "off"
+                    and self.mecefo.lowrank_wgrad
+                    and step_idx % self.mecefo.svd_period == 0
+                ):
+                    with self.mesh:
+                        self.state = self.state._replace(
+                            proj=refresh_projections(
+                                self.state.params, self.cfg, self.mecefo.rank
+                            )
+                        )
 
-            if self.ckpt and step_idx and step_idx % self.train_cfg.checkpoint_every == 0:
-                self.ckpt.save_async(self.state, step_idx)
+                if self.xfer is not None:
+                    # hot-spare snapshot of the post-step state (async, double-
+                    # buffered: only the thread launch blocks this loop)
+                    self.xfer.on_step(self.state, step_idx, self.controller.plan)
 
-            dt = time.time() - t0
+                if self.ckpt and step_idx and step_idx % self.train_cfg.checkpoint_every == 0:
+                    self.ckpt.save_async(self.state, step_idx)
+
+                dt = time.time() - t0
+            self._obs_step_wall.observe(dt)
+            self._obs_steps.inc()
             self.controller.observe_step_time(dt)
             rec = {
                 "step": step_idx,
@@ -283,21 +293,20 @@ class Trainer:
                         f" measured={acc.measured_transfer_bytes/1e6:.1f}MB"
                         f" pending={sorted(self._pending_rejoin)}"
                     )
-                print(
-                    f"step {step_idx:5d} elastic resize: dp {len(rp.old_active)}"
-                    f"->{rp.dp_size} dropped={list(rp.dropped)} "
-                    f"rejoined={list(rp.rejoined)} "
-                    f"transfer={rp.transfer_bytes/1e6:.1f}MB ({rp.source})"
-                    f"{measured}",
-                    flush=True,
+                _log.info(
+                    "step %5d elastic resize: dp %d->%d dropped=%s "
+                    "rejoined=%s transfer=%.1fMB (%s)%s",
+                    step_idx, len(rp.old_active), rp.dp_size,
+                    list(rp.dropped), list(rp.rejoined),
+                    rp.transfer_bytes / 1e6, rp.source, measured,
                 )
             if log_every and i % log_every == 0:
-                print(
-                    f"step {rec['step']:5d} loss {rec['loss']:.4f} "
-                    f"gnorm {rec['grad_norm']:.3f} {dt*1e3:.0f}ms "
-                    f"failed={rec['failed']} slow={rec['stragglers']} "
-                    f"deg={rec['degraded_frac']:.2f} dp={rec['dp_size']}",
-                    flush=True,
+                _log.info(
+                    "step %5d loss %.4f gnorm %.3f %.0fms failed=%d "
+                    "slow=%d deg=%.2f dp=%d",
+                    rec["step"], rec["loss"], rec["grad_norm"], dt * 1e3,
+                    rec["failed"], rec["stragglers"], rec["degraded_frac"],
+                    rec["dp_size"],
                 )
         if self.ckpt:
             self.ckpt.wait()
@@ -368,7 +377,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--obs-out", metavar="PATH", default=None,
+        help="write run telemetry (metrics + span timeline) as JSONL to "
+             "PATH, the Prometheus exposition to PATH.prom, and render the "
+             "run report (see docs/observability.md)",
+    )
     args = ap.parse_args(argv)
+    obs.logging_setup()
 
     trace_mode, trace_path = args.trace or (None, None)
     if trace_mode not in (None, "record", "replay"):
@@ -412,39 +428,46 @@ def main(argv: Optional[List[str]] = None) -> int:
     )
     hist = trainer.run()
     acc = trainer.controller.accounting
-    print(
-        f"final loss {hist[-1]['loss']:.4f}  "
-        f"failovers={acc.n_failovers} "
-        f"recoveries={acc.n_recoveries} "
-        f"rank_drops={acc.n_rank_drops} rejoins={acc.n_rejoins} "
-        f"dp={trainer.controller.plan.dp_size()}/{trainer.controller.n_dp} "
-        f"peer_fetch={acc.peer_fetch_bytes/1e6:.1f}MB"
+    _log.info(
+        "final loss %.4f  failovers=%d recoveries=%d rank_drops=%d "
+        "rejoins=%d dp=%d/%d peer_fetch=%.1fMB",
+        hist[-1]["loss"], acc.n_failovers, acc.n_recoveries,
+        acc.n_rank_drops, acc.n_rejoins,
+        trainer.controller.plan.dp_size(), trainer.controller.n_dp,
+        acc.peer_fetch_bytes / 1e6,
     )
     if trainer.xfer is not None:
         tele = trainer.xfer.telemetry()
-        print(
-            f"statexfer: {tele['snapshot_cycles']:.0f} snapshot cycles "
-            f"({tele['snapshot_bytes']/1e6:.1f}MB replicated, "
-            f"{tele['snapshot_blocked_s']*1e3:.1f}ms blocked) "
-            f"restores peer={tele['n_peer_restores']:.0f} "
-            f"ckpt={tele['n_ckpt_restores']:.0f} "
-            f"measured={tele['measured_transfer_bytes']/1e6:.1f}MB "
-            f"in {tele['transfer_s']*1e3:.1f}ms"
+        _log.info(
+            "statexfer: %.0f snapshot cycles (%.1fMB replicated, %.1fms "
+            "blocked) restores peer=%.0f ckpt=%.0f measured=%.1fMB in %.1fms",
+            tele["snapshot_cycles"], tele["snapshot_bytes"] / 1e6,
+            tele["snapshot_blocked_s"] * 1e3, tele["n_peer_restores"],
+            tele["n_ckpt_restores"], tele["measured_transfer_bytes"] / 1e6,
+            tele["transfer_s"] * 1e3,
         )
+    if args.obs_out:
+        import sys
+
+        dump_path = obs.dump(args.obs_out, meta={
+            "run": "train", "arch": args.arch, "steps": len(hist),
+            "mecefo": args.mecefo, "scenario": args.scenario,
+            "chaos": args.chaos, "statexfer": args.statexfer,
+        })
+        _log.info("obs telemetry written to %s (+ .prom)", dump_path)
+        sys.stdout.write(obs.render_report_file(dump_path))
     if trace_mode == "record":
-        print(f"chaos trace recorded to {trace_path} "
-              f"({len(trainer.process.events)} events)")
+        _log.info("chaos trace recorded to %s (%d events)",
+                  trace_path, len(trainer.process.events))
     if trace_mode == "replay":
         problems = trainer.verify_replay()
         if problems:
-            print(f"REPLAY MISMATCH vs {trace_path}:")
+            _log.error("REPLAY MISMATCH vs %s:", trace_path)
             for p in problems:
-                print(f"  {p}")
+                _log.error("  %s", p)
             return 1
-        print(
-            f"REPLAY OK: {len(trainer.process.events)} events and "
-            f"accounting totals match {trace_path}"
-        )
+        _log.info("REPLAY OK: %d events and accounting totals match %s",
+                  len(trainer.process.events), trace_path)
     return 0
 
 

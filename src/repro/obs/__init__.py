@@ -1,0 +1,102 @@
+"""repro.obs — process-local telemetry: metrics, spans, exporters.
+
+The façade the rest of the repo imports::
+
+    from repro import obs
+
+    _decoded = obs.counter("serve.engine.decode_rounds")
+    with obs.span("engine.decode_round"):
+        ...
+    obs.dump("run_obs.jsonl", meta={"run": "serve-bench"})
+
+Everything here is a **pure side channel**: no instrument or span ever
+feeds a trace recorder or a footer, so golden traces replay bit-exactly
+with telemetry enabled (pinned by tests/test_obs_neutrality.py).
+"""
+from __future__ import annotations
+
+import logging
+import os
+import sys
+
+from repro.obs import catalog  # noqa: F401  (re-exported module)
+from repro.obs.catalog import (  # noqa: F401
+    ALLOC_STAT_KEYS,
+    CATALOG,
+    ENGINE_STAT_KEYS,
+    FT_ACCOUNTING_KEYS,
+    ROUTER_ACCT_KEYS,
+    SPANS,
+    MetricSpec,
+    declared_names,
+)
+from repro.obs.export import (  # noqa: F401
+    dump,
+    load_dump,
+    metric_records,
+    parse_prometheus_text,
+    prometheus_text,
+    span_records,
+)
+from repro.obs.registry import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    get_registry,
+    percentile,
+)
+from repro.obs.report import render_report, render_report_file  # noqa: F401
+from repro.obs.spans import Tracer, configure, get_tracer, span  # noqa: F401
+
+
+def counter(name, labels=None) -> Counter:
+    """New counter instrument registered on the default registry."""
+    return get_registry().counter(name, labels)
+
+
+def gauge(name, labels=None) -> Gauge:
+    return get_registry().gauge(name, labels)
+
+
+def histogram(name, labels=None) -> Histogram:
+    return get_registry().histogram(name, labels)
+
+
+def reset() -> None:
+    """Fresh default registry + tracer contents (run/test isolation)."""
+    get_registry().reset()
+    get_tracer().reset()
+
+
+_LOG_CONFIGURED = False
+
+
+def logging_setup(level=None, stream=None, force: bool = False) -> None:
+    """Configure the ``repro`` logger tree for CLI runs (idempotent).
+
+    Library modules log through ``logging.getLogger("repro.<name>")`` and
+    never touch handlers; every CLI entrypoint calls this once so those
+    records reach stderr.  ``REPRO_LOG`` overrides the level (e.g.
+    ``REPRO_LOG=DEBUG``).
+    """
+    global _LOG_CONFIGURED
+    if _LOG_CONFIGURED and not force:
+        return
+    if level is None:
+        level = os.environ.get("REPRO_LOG", "INFO")
+    if isinstance(level, str):
+        level = getattr(logging, level.upper(), logging.INFO)
+    root = logging.getLogger("repro")
+    root.setLevel(level)
+    if force:
+        for h in list(root.handlers):
+            root.removeHandler(h)
+    if not root.handlers:
+        handler = logging.StreamHandler(stream or sys.stderr)
+        handler.setFormatter(
+            logging.Formatter("%(levelname).1s %(name)s: %(message)s")
+        )
+        root.addHandler(handler)
+    root.propagate = False
+    _LOG_CONFIGURED = True

@@ -1,0 +1,7 @@
+"""CLI entrypoint: ``python -m repro.obs report RUN.jsonl``."""
+import sys
+
+from repro.obs.report import main
+
+if __name__ == "__main__":
+    sys.exit(main())

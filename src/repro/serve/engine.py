@@ -59,6 +59,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.kernels import ops as kernel_ops
 from repro.models.kvcache import cache_structs
@@ -323,12 +324,18 @@ class ServeEngine:
         # a can_admit probe and the bind that follows it plan once, not twice
         self._planned: Optional[Tuple[int, Tuple[int, int, int],
                                       Optional[AdmitPlan]]] = None
-        self.stats: Dict[str, int] = {
-            k: 0 for k in (
-                "decode_rounds", "kv_bytes_dense", "kv_bytes_paged",
-                "shared_prefix_tokens", "n_prefix_hits", "n_pages_shared",
-                "n_admission_plans", "n_preemptions",
-            )
+        # the stat key set is declared once, in repro.obs.catalog — the
+        # increment sites, this reset, drain_stats, and the docs all read
+        # the same declaration (pinned by tests/test_obs.py)
+        self.stats: Dict[str, int] = {k: 0 for k in obs.ENGINE_STAT_KEYS}
+        # engine-owned telemetry mirrors: drained stats accumulate onto
+        # these obs counters (export-only; the acct dicts that serve-trace
+        # footers pin never read them)
+        self._obs_stats = {
+            k: obs.counter(f"serve.engine.{k}") for k in obs.ENGINE_STAT_KEYS
+        }
+        self._obs_alloc = {
+            k: obs.counter(f"serve.alloc.{k}") for k in obs.ALLOC_STAT_KEYS
         }
         # synchronized wall time spent in decode rounds (the data path the
         # serve bench compares); a float side channel, deliberately NOT in
@@ -349,6 +356,10 @@ class ServeEngine:
 
     def plan_admission(self, rs: RequestState) -> AdmitPlan:
         """Fork-aware page plan for a fresh request (deterministic)."""
+        with obs.span("engine.admission"):
+            return self._plan_admission(rs)
+
+    def _plan_admission(self, rs: RequestState) -> AdmitPlan:
         self.stats["n_admission_plans"] += 1
         total = pages_needed(rs.req.total_len, self.ecfg.page_size)
         ps = self.ecfg.page_size
@@ -487,6 +498,11 @@ class ServeEngine:
         """Full prefill for bound slots — one bucketed forward for the whole
         group (the batched-prefill path; the callers group by equal
         page-aligned padded length)."""
+        with obs.span("engine.prefill"):
+            return self._prefill_bound(pairs, step)
+
+    def _prefill_bound(self, pairs: List[Tuple[int, RequestState]], step: int
+                       ) -> List[int]:
         ps = self.ecfg.page_size
         n = len(pairs)
         n_pg = pages_needed(len(pairs[0][1].req.prompt), ps)
@@ -612,7 +628,8 @@ class ServeEngine:
             if self._pending[slot].step >= step:
                 continue  # already advanced this step (fresh admission)
             rs = self.slots[slot]
-            tok = self._advance_prefill(slot, step)
+            with obs.span("engine.prefill"):
+                tok = self._advance_prefill(slot, step)
             if tok is None:
                 continue
             rs.record_token(tok, step)
@@ -743,8 +760,9 @@ class ServeEngine:
         """
         rs = self.slots[slot]
         assert rs is not None, f"preempting empty slot {slot}"
-        self._pending.pop(slot, None)
-        self._evict(slot)
+        with obs.span("engine.preempt"):
+            self._pending.pop(slot, None)
+            self._evict(slot)
         rs.n_preemptions += 1
         self.stats["n_preemptions"] += 1
         return rs
@@ -861,10 +879,14 @@ class ServeEngine:
             tables = tables.copy()
             for i in self._pending:
                 tables[i] = NULL_PAGE
-        t0 = time.perf_counter()
-        self.pool, sampled = self._decode(
-            jnp.asarray(tables), jnp.asarray(self._lens), jnp.asarray(toks),
-        )
+        with obs.span("engine.decode_round"):
+            t0 = time.perf_counter()
+            self.pool, sampled = self._decode(
+                jnp.asarray(tables), jnp.asarray(self._lens),
+                jnp.asarray(toks),
+            )
+            new_toks = np.asarray(sampled)
+            self.decode_wall_s += time.perf_counter() - t0
         # modeled KV traffic: the dense gather streams every table entry of
         # every slot; the paged walk streams only the pages covering each
         # active slot's valid length
@@ -874,11 +896,9 @@ class ServeEngine:
         self.stats["kv_bytes_paged"] += self._page_nbytes * sum(
             pages_needed(int(self._lens[i]) + 1, ps) for i in active
         )
-        # materializing the sampled tokens synchronizes on the round, so
-        # this clocks the decode data path itself (dispatch + device),
-        # free of the per-step scheduler work around it
-        new_toks = np.asarray(sampled)
-        self.decode_wall_s += time.perf_counter() - t0
+        # (the sampled-token materialization above synchronizes on the
+        # round, so decode_wall_s clocks the decode data path itself —
+        # dispatch + device — free of the per-step scheduler work)
         out = []
         for i in active:
             rs = self.slots[i]
@@ -904,6 +924,10 @@ class ServeEngine:
         out["n_pages_allocated"] = self.alloc.n_pages_allocated
         out["n_pages_forked"] = self.alloc.n_pages_forked
         out["n_cow_pages"] = self.alloc.n_cow_copies
+        for k, c in self._obs_stats.items():
+            c.inc(out[k])
+        for k, c in self._obs_alloc.items():
+            c.inc(out[k])
         for k in self.stats:
             self.stats[k] = 0
         self.alloc.n_pages_allocated = 0

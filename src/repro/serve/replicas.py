@@ -42,6 +42,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.ft.events import FAIL, RANK_REJOIN, TRAFFIC_SPIKE
 from repro.ft.failures import ChaosEngine
@@ -184,23 +185,24 @@ class ReplicaSet:
         # left active, applied to the arrival clock before the next step
         self._arrival_mult = 1.0
         self._decode_wall = 0.0
-        self.acct: Dict[str, int] = {
-            k: 0 for k in (
-                "n_requests", "n_tokens", "n_kills", "n_revives",
-                "n_migrations", "n_restore_snapshot", "n_restore_replay",
-                "replayed_tokens", "restored_bytes",
-                "n_snapshots", "snapshot_bytes",
-                # overload accounting: spikes seen, requests shed at the
-                # head, preemptions (engine counter) and tokens re-earned
-                "n_spikes", "n_shed", "n_preemptions", "preempted_tokens",
-                # modeled decode traffic + prefix-sharing accounting
-                # (harvested from each engine's counters)
-                "decode_rounds", "kv_bytes_dense", "kv_bytes_paged",
-                "shared_prefix_tokens", "n_prefix_hits", "n_pages_shared",
-                "n_pages_allocated", "n_pages_forked", "n_cow_pages",
-                "n_admission_plans",
-            )
+        # the acct key set is the catalog's router keys + everything each
+        # engine's drain_stats() hands back — one declaration, shared with
+        # the engine reset, the exporters, and the docs (serve-trace
+        # footers pin exactly these keys)
+        self.acct: Dict[str, int] = {k: 0 for k in obs.ROUTER_ACCT_KEYS}
+        # router-owned telemetry: the router-only counters mirror onto
+        # serve.router.* at run() end (engine-derived keys are exported by
+        # the engines themselves as serve.engine.* / serve.alloc.*), the
+        # latency distributions feed the TTFT/TPOT histograms, and the
+        # decode wall sum lands on serve.decode.wall_s
+        self._obs_router = {
+            k: obs.counter(f"serve.router.{k}")
+            for k in obs.catalog.ROUTER_ONLY_KEYS
         }
+        self._obs_ttft = obs.histogram("serve.ttft_steps")
+        self._obs_tpot = obs.histogram("serve.tpot_steps")
+        self._obs_decode_wall = obs.counter("serve.decode.wall_s")
+        self._obs_mirrored = {k: 0 for k in self._obs_router}
 
     def _fresh_engine(self, r: int) -> ServeEngine:
         rng = (
@@ -313,11 +315,12 @@ class ReplicaSet:
         # the dead replica's pages are gone, and so is every snapshot it
         # *held* for peers; snapshots of its own requests held elsewhere
         # survive and drive the snapshot-path migration
-        self.registry.lose_holder(r)
-        self._harvest(self.engines[r])
-        migrants = self.engines[r].kill()
-        self.engines[r] = None
-        self.alive.discard(r)
+        with obs.span("router.failover"):
+            self.registry.lose_holder(r)
+            self._harvest(self.engines[r])
+            migrants = self.engines[r].kill()
+            self.engines[r] = None
+            self.alive.discard(r)
         self.acct["n_kills"] += 1
         self._emit(ServeEvent(t, "kill", replica=r,
                               n_inflight=len(migrants)), out)
@@ -392,9 +395,10 @@ class ReplicaSet:
             if rs.emitted:  # migrated / re-queued: restore, don't restart
                 flush()
                 snap = self.registry.get(rs.rid)
-                res = eng.try_admit_restored(rs, snap, t)
-                if res is None and preempt_for(rs):
+                with obs.span("router.restore"):
                     res = eng.try_admit_restored(rs, snap, t)
+                    if res is None and preempt_for(rs):
+                        res = eng.try_admit_restored(rs, snap, t)
                 if res is None:
                     break
                 self.queue.pop(0)
@@ -439,6 +443,28 @@ class ReplicaSet:
         self._decode_wall += eng.decode_wall_s
         eng.decode_wall_s = 0.0
 
+    def _export_obs(self) -> None:
+        """Mirror router accounting + latency samples onto the registry.
+
+        Export-only: the acct dict (which serve-trace footers pin) is the
+        source of truth; deltas since the last mirror keep repeated calls
+        idempotent."""
+        for k, c in self._obs_router.items():
+            delta = self.acct[k] - self._obs_mirrored[k]
+            if delta:
+                c.inc(delta)
+                self._obs_mirrored[k] = self.acct[k]
+        self._obs_decode_wall.inc(self._decode_wall - self._obs_decode_wall.value)
+        for rid in sorted(self.requests):
+            rs = self.requests[rid]
+            if getattr(rs, "_obs_observed", False):
+                continue
+            rs._obs_observed = True
+            if rs.ttft_steps is not None:
+                self._obs_ttft.observe(rs.ttft_steps)
+            if rs.tpot_steps is not None:
+                self._obs_tpot.observe(rs.tpot_steps)
+
     # ------------------------------------------------------------------
     def run(self, workload: Sequence[Request], max_steps: int = 10_000
             ) -> ServeResult:
@@ -454,19 +480,21 @@ class ReplicaSet:
         nxt = 0
         pending = {req.rid for req in workload}
         while pending and t < max_steps:
-            t0 = time.perf_counter()
-            arrivals: List[Request] = []
-            while nxt < len(wl) and wl[nxt].arrival_step <= clock:
-                arrivals.append(wl[nxt])
-                nxt += 1
-            for ev in self.step(t, arrivals):
-                if ev.kind in ("complete", "shed"):
-                    pending.discard(ev.req)
-            step_wall.append(time.perf_counter() - t0)
+            with obs.span("router.step"):
+                t0 = time.perf_counter()
+                arrivals: List[Request] = []
+                while nxt < len(wl) and wl[nxt].arrival_step <= clock:
+                    arrivals.append(wl[nxt])
+                    nxt += 1
+                for ev in self.step(t, arrivals):
+                    if ev.kind in ("complete", "shed"):
+                        pending.discard(ev.req)
+                step_wall.append(time.perf_counter() - t0)
             clock += self._arrival_mult
             t += 1
         for r in sorted(self.alive):
             self._harvest(self.engines[r])
+        self._export_obs()
         return ServeResult(
             states=dict(self.requests),
             accounting=dict(self.acct),

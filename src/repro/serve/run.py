@@ -18,6 +18,7 @@ accounting match the recording.
 from __future__ import annotations
 
 import argparse
+import logging
 import sys
 from dataclasses import asdict
 from typing import List, Optional, Tuple
@@ -25,6 +26,7 @@ from typing import List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.base import ParallelConfig, get_config, reduced
 from repro.ft.injectors import (
     Injector,
@@ -47,6 +49,8 @@ from repro.serve.trace import (
 )
 
 DEFAULT_CONFIG = "qwen3-0.6b"
+
+_log = logging.getLogger("repro.serve")
 
 
 def injectors_from_spec(spec: dict) -> List[Injector]:
@@ -315,38 +319,54 @@ def main(argv=None) -> int:
     ap.add_argument("--replay", default=None, metavar="PATH")
     ap.add_argument("--replay-record", default=None, metavar="PATH",
                     help="also record the replayed run (diffable on drift)")
+    ap.add_argument("--obs-out", default=None, metavar="PATH",
+                    help="write run telemetry (metrics + span timeline) as "
+                         "JSONL to PATH, the Prometheus exposition to "
+                         "PATH.prom, and render the run report")
     args = ap.parse_args(argv)
+    obs.logging_setup()
+
+    def dump_obs(mode: str) -> None:
+        if not args.obs_out:
+            return
+        path = obs.dump(args.obs_out, meta={
+            "run": "serve", "mode": mode, "config": args.config,
+            "chaos": args.chaos, "admission": args.admission,
+        })
+        _log.info("obs telemetry written to %s (+ .prom)", path)
+        sys.stdout.write(obs.render_report_file(path))
 
     if args.replay:
         problems = replay_serve_trace(
             args.replay, args.replay_record, paged_kernel=args.paged_kernel,
             kernel_interpret=True if args.kernel_interpret else None,
         )
+        dump_obs("replay")
         if problems:
-            print(f"serve replay DIVERGED from {args.replay}:")
+            _log.error("serve replay DIVERGED from %s:", args.replay)
             for p in problems:
-                print(f"  {p}")
+                _log.error("  %s", p)
             return 1
         kernel = " (paged kernel)" if args.paged_kernel else ""
-        print(f"serve replay of {args.replay} is bit-exact{kernel}")
+        _log.info("serve replay of %s is bit-exact%s", args.replay, kernel)
         return 0
 
     header = header_from_args(args)
     result, _ = run_from_header(header, record_path=args.record)
     acct = result.accounting
     done = sum(1 for rs in result.states.values() if rs.done)
-    print(
-        f"served {done}/{acct['n_requests']} requests, "
-        f"{acct['n_tokens']} tokens in {result.n_steps} steps; "
-        f"kills={acct['n_kills']} migrations={acct['n_migrations']} "
-        f"(snapshot={acct['n_restore_snapshot']} "
-        f"replay={acct['n_restore_replay']}, "
-        f"replayed_tokens={acct['replayed_tokens']}); "
-        f"spikes={acct['n_spikes']} shed={acct['n_shed']} "
-        f"preemptions={acct['n_preemptions']}"
+    _log.info(
+        "served %d/%d requests, %d tokens in %d steps; kills=%d "
+        "migrations=%d (snapshot=%d replay=%d, replayed_tokens=%d); "
+        "spikes=%d shed=%d preemptions=%d",
+        done, acct["n_requests"], acct["n_tokens"], result.n_steps,
+        acct["n_kills"], acct["n_migrations"], acct["n_restore_snapshot"],
+        acct["n_restore_replay"], acct["replayed_tokens"], acct["n_spikes"],
+        acct["n_shed"], acct["n_preemptions"],
     )
+    dump_obs("run")
     if args.record:
-        print(f"trace recorded to {args.record}")
+        _log.info("trace recorded to %s", args.record)
     return 0
 
 

