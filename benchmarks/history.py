@@ -1,0 +1,88 @@
+"""Bench trajectory: append serve-bench headline numbers to a JSONL log.
+
+``BENCH_serve.json`` is overwritten by every bench run; this module keeps
+the *trajectory* — one compact record per run appended to
+``BENCH_history.jsonl`` so perf regressions show up as a time series
+instead of a lost diff.  CI's bench-smoke job appends its run (tagged
+with the commit SHA) and uploads the file as an artifact.
+
+    PYTHONPATH=src python benchmarks/history.py \
+        --bench BENCH_serve.json --history BENCH_history.jsonl \
+        --meta sha=$GITHUB_SHA --meta ci=1
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, Optional
+
+
+def headline(bench: Dict) -> Dict:
+    """The per-run record: the bench's headline numbers, nothing else."""
+    paged = bench.get("paged_decode") or {}
+    modes = (bench.get("overload") or {}).get("modes") or {}
+    engine = bench.get("engine") or {}
+    cont = bench.get("continuous") or {}
+    lock = bench.get("lockstep") or {}
+    return {
+        "type": "bench_history",
+        "bench": bench.get("bench"),
+        "config": bench.get("config"),
+        "backend": engine.get("backend"),
+        "kernel_impl_paged": engine.get("kernel_impl_paged"),
+        "tok_s_continuous": cont.get("tok_s"),
+        "tok_s_lockstep": lock.get("tok_s"),
+        "speedup_tok_s": bench.get("speedup_tok_s"),
+        "wall_speedup_paged": paged.get("wall_speedup_paged"),
+        "kv_bytes_per_round_paged": paged.get("kv_bytes_per_round_paged"),
+        "kv_bytes_per_round_dense": paged.get("kv_bytes_per_round_dense"),
+        "bytes_reduction": paged.get("bytes_reduction"),
+        "goodput_frac": {
+            mode: m.get("goodput_frac") for mode, m in sorted(modes.items())
+        },
+    }
+
+
+def append(bench_path, history_path, meta: Optional[Dict] = None) -> Dict:
+    """Append one headline record for ``bench_path``; returns the record."""
+    with Path(bench_path).open() as fh:
+        bench = json.load(fh)
+    rec = headline(bench)
+    if meta:
+        rec.update(meta)
+    history = Path(history_path)
+    with history.open("a") as fh:
+        fh.write(json.dumps(rec) + "\n")
+    return rec
+
+
+def load_history(history_path):
+    p = Path(history_path)
+    if not p.exists():
+        return []
+    with p.open() as fh:
+        return [json.loads(line) for line in fh if line.strip()]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", default="BENCH_serve.json",
+                    help="bench result to summarize")
+    ap.add_argument("--history", default="BENCH_history.jsonl",
+                    help="trajectory file to append to")
+    ap.add_argument("--meta", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="extra fields stamped onto the record (repeatable)")
+    args = ap.parse_args(argv)
+    meta = {}
+    for kv in args.meta:
+        k, _, v = kv.partition("=")
+        meta[k] = v
+    rec = append(args.bench, args.history, meta=meta)
+    print(json.dumps(rec))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

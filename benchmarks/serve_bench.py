@@ -348,6 +348,14 @@ def main():
         args.overload_requests = min(args.overload_requests, 150)
         if args.overload_seed is None:
             args.overload_seed = 4
+    bench_meta = {"run": "serve_bench", "smoke": args.smoke,
+                  "requests": args.requests,
+                  "overload_requests": args.overload_requests}
+    disarm = None
+    if args.obs_out:
+        # flush-on-death: a crashed/killed bench still emits partial metrics
+        disarm = obs.install_crash_flush(obs_path=args.obs_out,
+                                         meta=bench_meta)
 
     cfg = reduced(get_config("qwen3-0.6b"), dtype="float32")
     mesh = make_host_mesh()
@@ -460,11 +468,9 @@ def main():
     if args.obs_out:
         import sys
 
-        dump_path = obs.dump(args.obs_out, meta={
-            "run": "serve_bench", "smoke": args.smoke,
-            "requests": args.requests,
-            "overload_requests": args.overload_requests,
-        })
+        if disarm is not None:
+            disarm()
+        dump_path = obs.dump(args.obs_out, meta=bench_meta)
         _log.info("obs telemetry written to %s (+ .prom)", dump_path)
         sys.stdout.write(obs.render_report_file(dump_path))
 

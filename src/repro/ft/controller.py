@@ -22,6 +22,7 @@ import numpy as np
 from repro import obs
 from repro.configs.base import MeCeFOConfig, ModelConfig
 from repro.core.ndb import NDBContext, NDBPlan, context_for, stage_of_layer
+from repro.obs.incidents import TrainIncidents
 
 
 class RecoveryAccounting:
@@ -109,6 +110,12 @@ class FTController:
     # statexfer runtime; when set it replaces the parameter-count estimate
     # as the accounting basis (measured instead of modeled)
     state_nbytes: Optional[int] = None
+    # incident pipeline (pure side channel): every accounting increment
+    # below is mirrored onto exactly one incident, so per-key incident
+    # sums reconcile with the trace-footer accounting by construction
+    incidents: Optional[TrainIncidents] = field(
+        default_factory=TrainIncidents
+    )
     _step_times: list = field(default_factory=list)
 
     def __post_init__(self):
@@ -161,6 +168,10 @@ class FTController:
                 self.accounting.peer_fetch_bytes += fetch_bytes
             else:
                 self.accounting.ckpt_restore_bytes += fetch_bytes
+            if self.incidents is not None:
+                self.incidents.on_failover(
+                    dev, fetch_bytes, self.params_replicated
+                )
         for dev in recovered:
             if dev[0] in self.plan.detached:
                 # healed hardware of a detached rank: its state resync is the
@@ -170,9 +181,14 @@ class FTController:
             # original node refetches its stage from the neighbor (Alg. 1 l.10)
             self.accounting.n_recoveries += 1
             self.accounting.peer_fetch_bytes += fetch_bytes
+            if self.incidents is not None:
+                self.incidents.on_recovery(dev, fetch_bytes)
         old_dropped = self.plan.dropped_ranks()
         new_dropped = new_plan.dropped_ranks()
         self.accounting.n_rank_drops += len(new_dropped - old_dropped)
+        if self.incidents is not None:
+            for rank in sorted(new_dropped - old_dropped):
+                self.incidents.on_rank_drop(rank)
         rejoined = tuple(sorted(self.plan.detached - new_plan.detached))
         if rejoined:
             # a rejoining rank resyncs its FULL pipeline, not one stage
@@ -182,6 +198,11 @@ class FTController:
                 self.accounting.peer_fetch_bytes += full_state * len(rejoined)
             else:
                 self.accounting.ckpt_restore_bytes += full_state * len(rejoined)
+            if self.incidents is not None:
+                for rank in rejoined:
+                    self.incidents.on_rejoin(
+                        rank, full_state, self.params_replicated
+                    )
         if self.plan.detached != new_plan.detached:
             # a formal membership change (elastic resize) — transient derived
             # drops zero-weight their slice instead and emit no reshard
@@ -221,6 +242,8 @@ class FTController:
             self.accounting.n_peer_restores += 1
         elif receipt.source == "ckpt":
             self.accounting.n_ckpt_restores += 1
+        if self.incidents is not None:
+            self.incidents.on_receipt(receipt)
 
     def batch_shares(self) -> Dict[int, int]:
         """Current per-rank share of the global batch (sums to the global
@@ -239,6 +262,10 @@ class FTController:
         """
         with obs.span("controller.apply_chaos"):
             slow = self.straggler_devices(outcome.device_times)
+            # the incident clock must advance before update_plan: the
+            # attribution hooks below fire from inside it
+            if self.incidents is not None:
+                self.incidents.begin_step(outcome.step, slow)
             plan = outcome.plan
             if slow:
                 plan = dataclasses.replace(
@@ -247,6 +274,8 @@ class FTController:
             changed = self.update_plan(
                 plan, traffic_multiplier=outcome.net_inflation
             )
+            if self.incidents is not None:
+                self.incidents.end_step(outcome.events)
         return changed, slow
 
     def context(self) -> NDBContext:

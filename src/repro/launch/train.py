@@ -151,6 +151,10 @@ class Trainer:
             )
             # accounting basis becomes the measured state size
             self.controller.state_nbytes = tree_nbytes(self.state)
+            if self.controller.incidents is not None:
+                # rejoin incidents now close on the measured receipt,
+                # not on the planned-bytes attribution
+                self.controller.incidents.expect_receipts = True
 
     # ------------------------------------------------------------------
     def _mask_plan(self) -> NDBPlan:
@@ -270,6 +274,24 @@ class Trainer:
             self._obs_step_wall.observe(dt)
             self._obs_steps.inc()
             self.controller.observe_step_time(dt)
+            if self.controller.incidents is not None:
+                # one flight-recorder frame per step (wall_s/span_s/
+                # snap_blocked_s are unpinned; the rest replay bit-exactly)
+                self.controller.incidents.record_frame(
+                    step_idx,
+                    wall_s=dt,
+                    span_s=sum(
+                        t for *_, t in obs.get_tracer().timeline()
+                    ),
+                    goodput=self.controller.plan.dp_size(),
+                    dp_size=self.controller.plan.dp_size(),
+                    failed=len(self.controller.plan.failed),
+                    pending=len(self._pending_rejoin),
+                    snap_blocked_s=(
+                        self.xfer.telemetry()["snapshot_blocked_s"]
+                        if self.xfer is not None else None
+                    ),
+                )
             rec = {
                 "step": step_idx,
                 "loss": float(metrics["loss"]),
@@ -317,6 +339,9 @@ class Trainer:
                 total_steps=len(self.history),
                 accounting=self.controller.accounting.as_dict(),
             )
+        if self.controller.incidents is not None:
+            # recovery that never completed in-trace -> unclosed: true
+            self.controller.incidents.finalize(len(self.history))
         return self.history
 
     def verify_replay(self) -> List[str]:
@@ -383,6 +408,12 @@ def main(argv: Optional[List[str]] = None) -> int:
              "PATH, the Prometheus exposition to PATH.prom, and render the "
              "run report (see docs/observability.md)",
     )
+    ap.add_argument(
+        "--incidents-out", metavar="PATH", default=None,
+        help="write the incident log (flight-recorder windows + attributed "
+             "recovery costs) as JSONL to PATH; render with "
+             "'python -m repro.obs incidents PATH'",
+    )
     args = ap.parse_args(argv)
     obs.logging_setup()
 
@@ -426,7 +457,21 @@ def main(argv: Optional[List[str]] = None) -> int:
         statexfer=args.statexfer,
         snapshot_every=args.snapshot_every,
     )
+    run_meta = {
+        "run": "train", "arch": args.arch,
+        "mecefo": args.mecefo, "scenario": args.scenario,
+        "chaos": args.chaos, "statexfer": args.statexfer,
+    }
+    disarm = None
+    if args.obs_out or args.incidents_out:
+        # flush-on-death: a crashed/killed run still emits partial dumps
+        disarm = obs.install_crash_flush(
+            obs_path=args.obs_out, incidents_path=args.incidents_out,
+            incidents=trainer.controller.incidents, meta=run_meta,
+        )
     hist = trainer.run()
+    if disarm is not None:
+        disarm()
     acc = trainer.controller.accounting
     _log.info(
         "final loss %.4f  failovers=%d recoveries=%d rank_drops=%d "
@@ -449,13 +494,16 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.obs_out:
         import sys
 
-        dump_path = obs.dump(args.obs_out, meta={
-            "run": "train", "arch": args.arch, "steps": len(hist),
-            "mecefo": args.mecefo, "scenario": args.scenario,
-            "chaos": args.chaos, "statexfer": args.statexfer,
-        })
+        dump_path = obs.dump(args.obs_out, meta={**run_meta, "steps": len(hist)})
         _log.info("obs telemetry written to %s (+ .prom)", dump_path)
         sys.stdout.write(obs.render_report_file(dump_path))
+    if args.incidents_out and trainer.controller.incidents is not None:
+        inc_path = obs.write_incident_log(
+            args.incidents_out, trainer.controller.incidents.mgr,
+            meta={**run_meta, "steps": len(hist)},
+        )
+        _log.info("incident log written to %s (%d incidents)", inc_path,
+                  len(trainer.controller.incidents.mgr.incidents))
     if trace_mode == "record":
         _log.info("chaos trace recorded to %s (%d events)",
                   trace_path, len(trainer.process.events))

@@ -30,13 +30,41 @@ from repro.obs.catalog import (  # noqa: F401
     MetricSpec,
     declared_names,
 )
+from repro.obs.costmodel import (  # noqa: F401
+    COST_DIMS,
+    DETECTORS,
+    CostModel,
+    make_detectors,
+)
 from repro.obs.export import (  # noqa: F401
     dump,
+    install_crash_flush,
     load_dump,
     metric_records,
     parse_prometheus_text,
     prometheus_text,
     span_records,
+)
+from repro.obs.flight import (  # noqa: F401
+    UNPINNED_FRAME_FIELDS,
+    FlightRecorder,
+    pinned_frame,
+)
+from repro.obs.incidents import (  # noqa: F401
+    PINNED_INCIDENT_FIELDS,
+    SERVE_RECONCILE_KEYS,
+    TRAIN_RECONCILE_KEYS,
+    Incident,
+    IncidentManager,
+    ServeIncidents,
+    TrainIncidents,
+    footer_accounting,
+    load_incident_log,
+    pinned_incident,
+    reconcile,
+    render_incidents,
+    verify_incident_log,
+    write_incident_log,
 )
 from repro.obs.registry import (  # noqa: F401
     Counter,

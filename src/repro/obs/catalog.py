@@ -20,6 +20,9 @@ Metric names are dotted, ``<subsystem>.<family>.<field>``:
   counters) plus the TTFT/TPOT latency histograms.
 * ``train.*`` — trainer step timing.
 * ``kernels.*`` — kernel implementation selection.
+* ``incidents.*`` — the incident pipeline (``repro.obs.incidents``):
+  opened/closed incident counts, attributed recovery cost by
+  ``(kind, path)``, detector firings.
 
 Span names live in a *disjoint* namespace (``trainer.``, ``controller.``,
 ``snapshot.``, ``reshard.``, ``engine.``, ``router.``, ``kernel.``) so the
@@ -210,6 +213,32 @@ def _specs() -> Tuple[MetricSpec, ...]:
         MetricSpec("kernels.impl_calls", COUNTER,
                    "kernel dispatches by resolved implementation",
                    labels=("kernel", "impl")),
+        MetricSpec("incidents.opened", COUNTER,
+                   "incidents opened, by event kind", labels=("kind",)),
+        MetricSpec("incidents.closed", COUNTER,
+                   "incidents closed, by event kind and recovery path",
+                   labels=("kind", "path")),
+        MetricSpec("incidents.unclosed", COUNTER,
+                   "incidents still open at end of run (recovery never "
+                   "completed in-trace)", labels=("kind",)),
+        MetricSpec("incidents.lost_steps", COUNTER,
+                   "steps from incident open to recovery complete",
+                   labels=("kind", "path")),
+        MetricSpec("incidents.transfer_bytes", COUNTER,
+                   "recovery bytes attributed to closed incidents",
+                   unit="bytes", labels=("kind", "path")),
+        MetricSpec("incidents.replayed_tokens", COUNTER,
+                   "replayed + preempted tokens attributed to closed "
+                   "incidents", labels=("kind", "path")),
+        MetricSpec("incidents.wall_cost_s", COUNTER,
+                   "wall seconds spanned by closed incidents",
+                   unit="seconds", labels=("kind", "path")),
+        MetricSpec("incidents.cost_steps", HISTOGRAM,
+                   "lost-step distribution over closed incidents",
+                   buckets=TOKEN_STEP_BUCKETS, labels=("kind", "path")),
+        MetricSpec("incidents.detector_fired", COUNTER,
+                   "synthetic incidents opened by anomaly detectors",
+                   labels=("detector",)),
     ]
     return tuple(out)
 

@@ -8,11 +8,12 @@ runs over the exposition (well-formed lines, no duplicate series).
 """
 from __future__ import annotations
 
+import atexit
 import json
 import math
 import re
 from pathlib import Path
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.obs.catalog import HISTOGRAM, SPECS_BY_NAME
 from repro.obs.registry import MetricsRegistry, get_registry
@@ -72,6 +73,51 @@ def dump(path, reg: Optional[MetricsRegistry] = None,
 def load_dump(path) -> List[dict]:
     with Path(path).open() as fh:
         return [json.loads(line) for line in fh if line.strip()]
+
+
+def install_crash_flush(obs_path=None, incidents_path=None,
+                        incidents=None, meta: Optional[dict] = None
+                        ) -> Callable[[], None]:
+    """Flush-on-death: register an ``atexit`` hook so a run that crashes
+    or is killed mid-flight still emits its partial telemetry.
+
+    Writes the metrics JSONL + prom exposition to ``obs_path`` and (when
+    ``incidents`` — an IncidentManager or adapter holding ``.mgr`` — and
+    ``incidents_path`` are given) the incident log with still-open
+    incidents marked ``unclosed: true``.  Both dumps carry
+    ``{"partial": true}`` in their meta so a clean end-of-run dump is
+    distinguishable.  Returns a ``disarm()`` callable the run's normal
+    exit path must invoke after writing its own final dumps.
+    """
+    armed = {"on": True}
+
+    def _flush() -> None:
+        if not armed["on"]:
+            return
+        armed["on"] = False
+        m = dict(meta or {})
+        m["partial"] = True
+        if obs_path is not None:
+            try:
+                dump(obs_path, meta=m)
+            except Exception:  # a crash handler must never mask the crash
+                pass
+        if incidents_path is not None and incidents is not None:
+            try:
+                from repro.obs.incidents import write_incident_log
+                mgr = getattr(incidents, "mgr", incidents)
+                mgr.finalize(mgr.step)
+                write_incident_log(incidents_path, mgr, meta=m)
+            except Exception:
+                pass
+
+    atexit.register(_flush)
+
+    def disarm() -> None:
+        armed["on"] = False
+        atexit.unregister(_flush)
+
+    return disarm
 
 
 # -- Prometheus text exposition -------------------------------------------

@@ -161,15 +161,70 @@ def render_report_file(path) -> str:
     return render_report(load_dump(path))
 
 
+def _incidents_cmd(args) -> int:
+    """``obs incidents``: render, verify, and reconcile an incident log."""
+    import sys
+
+    from repro.obs.incidents import (
+        footer_accounting,
+        load_incident_log,
+        reconcile,
+        render_incidents,
+        verify_incident_log,
+    )
+
+    header, records, footer = load_incident_log(args.log)
+    sys.stdout.write(render_incidents(records, footer))
+    rc = 0
+    n_closed = sum(1 for r in records
+                   if r.get("close_step") is not None
+                   and not r.get("unclosed"))
+    if args.require_closed and n_closed < args.require_closed:
+        sys.stderr.write(
+            f"FAIL: {n_closed} closed incidents < required "
+            f"{args.require_closed}\n"
+        )
+        rc = 1
+    if args.trace:
+        totals = footer_accounting(args.trace)
+        if totals is None:
+            sys.stderr.write(f"FAIL: no footer accounting in {args.trace}\n")
+            rc = 1
+        else:
+            problems = reconcile(records, totals)
+            if problems:
+                for p in problems:
+                    sys.stderr.write(f"RECONCILE FAIL: {p}\n")
+                rc = 1
+            else:
+                sys.stdout.write(
+                    "reconcile OK: incident cost sums match the trace "
+                    "footer accounting\n"
+                )
+    if args.verify:
+        problems = verify_incident_log(args.verify, records)
+        if problems:
+            for p in problems:
+                sys.stderr.write(f"VERIFY FAIL: {p}\n")
+            rc = 1
+        else:
+            sys.stdout.write(
+                "verify OK: pinned incident projections match the golden "
+                "log\n"
+            )
+    return rc
+
+
 def main(argv: Optional[List[str]] = None) -> int:
-    """``python -m repro.obs report RUN.jsonl`` / ``... prom RUN.jsonl``."""
+    """``python -m repro.obs report RUN.jsonl`` / ``... prom RUN.jsonl``
+    / ``... incidents INCIDENTS.jsonl [--trace T] [--verify G]``."""
     import argparse
     import sys
 
     ap = argparse.ArgumentParser(
         prog="repro.obs", description=(
             "Render telemetry dumps written by --obs-out: a human-readable "
-            "run report, or the raw Prometheus exposition."
+            "run report, the raw Prometheus exposition, or an incident log."
         ),
     )
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -179,9 +234,29 @@ def main(argv: Optional[List[str]] = None) -> int:
         "prom", help="print (and validate) the Prometheus exposition"
     )
     p_prom.add_argument("dump", help="obs JSONL (reads its .prom sibling)")
+    p_inc = sub.add_parser(
+        "incidents",
+        help="render an incident log; optionally reconcile against a "
+             "trace footer and verify against a committed golden log",
+    )
+    p_inc.add_argument("log", help="incident JSONL from --incidents-out")
+    p_inc.add_argument(
+        "--trace", help="chaos/serve trace whose footer accounting the "
+        "incident cost sums must reconcile with"
+    )
+    p_inc.add_argument(
+        "--verify", help="golden incident log to compare pinned "
+        "projections against"
+    )
+    p_inc.add_argument(
+        "--require-closed", type=int, default=0,
+        help="fail unless at least N incidents closed"
+    )
     args = ap.parse_args(argv)
     if args.cmd == "report":
         sys.stdout.write(render_report_file(args.dump))
+    elif args.cmd == "incidents":
+        return _incidents_cmd(args)
     else:
         from pathlib import Path
 

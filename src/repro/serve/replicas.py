@@ -203,6 +203,9 @@ class ReplicaSet:
         self._obs_tpot = obs.histogram("serve.tpot_steps")
         self._obs_decode_wall = obs.counter("serve.decode.wall_s")
         self._obs_mirrored = {k: 0 for k in self._obs_router}
+        # incident pipeline (pure side channel): every failover/overload
+        # acct increment is mirrored onto exactly one incident
+        self.incidents = obs.ServeIncidents()
 
     def _fresh_engine(self, r: int) -> ServeEngine:
         rng = (
@@ -307,6 +310,7 @@ class ReplicaSet:
                     self.acct["n_snapshots"] += 1
                     self.acct["snapshot_bytes"] += nbytes
 
+        self.incidents.on_step(t, out)
         if self.recorder is not None:
             self.recorder.record(out)
         return out
@@ -321,6 +325,7 @@ class ReplicaSet:
             migrants = self.engines[r].kill()
             self.engines[r] = None
             self.alive.discard(r)
+        self.incidents.note_kill(r, [rs.rid for rs in migrants])
         self.acct["n_kills"] += 1
         self._emit(ServeEvent(t, "kill", replica=r,
                               n_inflight=len(migrants)), out)
@@ -371,6 +376,7 @@ class ReplicaSet:
             flush()
             evicted = [eng.preempt(v, t) for v in victims]
             for v_rs in evicted:
+                self.incidents.note_preempt(v_rs.rid, len(v_rs.emitted))
                 self.acct["preempted_tokens"] += len(v_rs.emitted)
                 self._emit(ServeEvent(t, "preempt", req=v_rs.rid,
                                       replica=r), out)
@@ -486,15 +492,32 @@ class ReplicaSet:
                 while nxt < len(wl) and wl[nxt].arrival_step <= clock:
                     arrivals.append(wl[nxt])
                     nxt += 1
-                for ev in self.step(t, arrivals):
+                evs = self.step(t, arrivals)
+                for ev in evs:
                     if ev.kind in ("complete", "shed"):
                         pending.discard(ev.req)
-                step_wall.append(time.perf_counter() - t0)
+                dt = time.perf_counter() - t0
+                step_wall.append(dt)
+            # one flight-recorder frame per router step (wall_s/span_s are
+            # unpinned; token/queue/page counts replay bit-exactly)
+            toks = sum(1 for ev in evs if ev.kind == "token")
+            self.incidents.record_frame(
+                t, wall_s=dt,
+                span_s=sum(s for *_, s in obs.get_tracer().timeline()),
+                tokens=toks, goodput=toks,
+                queue_depth=len(self.queue),
+                free_pages=sum(
+                    self.engines[r].alloc.free_count
+                    for r in sorted(self.alive)
+                ),
+                n_alive=len(self.alive),
+            )
             clock += self._arrival_mult
             t += 1
         for r in sorted(self.alive):
             self._harvest(self.engines[r])
         self._export_obs()
+        self.incidents.finalize(t)
         return ServeResult(
             states=dict(self.requests),
             accounting=dict(self.acct),

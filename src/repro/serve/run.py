@@ -129,9 +129,17 @@ def build_replica_set(
 
 
 def run_from_header(header: ServeTraceHeader,
-                    record_path: Optional[str] = None) -> Tuple[ServeResult, List]:
+                    record_path: Optional[str] = None,
+                    rset_hook=None) -> Tuple[ServeResult, ReplicaSet]:
+    """Run one serve workload; returns (result, the ReplicaSet that ran it).
+
+    ``rset_hook`` is called with the ReplicaSet before the run starts —
+    the CLI uses it to arm the crash-flush hook and to reach the incident
+    manager after replays."""
     recorder = ServeTraceRecorder(record_path) if record_path else None
     rset, workload = build_replica_set(header, recorder=recorder)
+    if rset_hook is not None:
+        rset_hook(rset)
     # stamp the decode implementation this run resolves to (informational —
     # replays on another backend may resolve differently and must still be
     # bit-exact; that cross-impl contract is pinned by tests/CI)
@@ -142,12 +150,13 @@ def run_from_header(header: ServeTraceHeader,
     if recorder is not None:
         recorder.close(result.n_steps, result.streams_sha256(),
                        result.accounting)
-    return result, rset.events
+    return result, rset
 
 
 def replay_serve_trace(path, replay_record: Optional[str] = None,
                        paged_kernel: bool = False,
-                       kernel_interpret: Optional[bool] = None) -> List[str]:
+                       kernel_interpret: Optional[bool] = None,
+                       rset_hook=None) -> List[str]:
     """Re-simulate ``path`` and return mismatch descriptions (empty = exact).
 
     ``paged_kernel=True`` replays with the page-table-walking flash-decode
@@ -164,9 +173,10 @@ def replay_serve_trace(path, replay_record: Optional[str] = None,
     if kernel_interpret is not None:
         trace.header.engine = dict(trace.header.engine,
                                    kernel_interpret=kernel_interpret)
-    result, events = run_from_header(trace.header, record_path=replay_record)
+    result, rset = run_from_header(trace.header, record_path=replay_record,
+                                   rset_hook=rset_hook)
     return verify_serve_replay(
-        trace, events, accounting=result.accounting,
+        trace, rset.events, accounting=result.accounting,
         streams_sha256=result.streams_sha256(),
     )
 
@@ -323,23 +333,58 @@ def main(argv=None) -> int:
                     help="write run telemetry (metrics + span timeline) as "
                          "JSONL to PATH, the Prometheus exposition to "
                          "PATH.prom, and render the run report")
+    ap.add_argument("--incidents-out", default=None, metavar="PATH",
+                    help="write the incident log (flight-recorder windows + "
+                         "attributed failover costs) as JSONL to PATH; "
+                         "render with 'python -m repro.obs incidents PATH'")
     args = ap.parse_args(argv)
     obs.logging_setup()
 
+    run_meta = {
+        "run": "serve", "config": args.config,
+        "chaos": args.chaos, "admission": args.admission,
+    }
+    holder: dict = {"rset": None}
+
+    class _MgrProxy:
+        """Late-bound incident manager for the crash-flush hook (the
+        ReplicaSet does not exist yet when the hook is armed)."""
+
+        @property
+        def mgr(self):
+            rs = holder["rset"]
+            return rs.incidents.mgr if rs is not None else None
+
+    def grab_rset(rs) -> None:
+        holder["rset"] = rs
+
+    disarm = None
+    if args.obs_out or args.incidents_out:
+        disarm = obs.install_crash_flush(
+            obs_path=args.obs_out, incidents_path=args.incidents_out,
+            incidents=_MgrProxy(), meta=run_meta,
+        )
+
     def dump_obs(mode: str) -> None:
-        if not args.obs_out:
-            return
-        path = obs.dump(args.obs_out, meta={
-            "run": "serve", "mode": mode, "config": args.config,
-            "chaos": args.chaos, "admission": args.admission,
-        })
-        _log.info("obs telemetry written to %s (+ .prom)", path)
-        sys.stdout.write(obs.render_report_file(path))
+        if disarm is not None:
+            disarm()
+        if args.obs_out:
+            path = obs.dump(args.obs_out, meta={**run_meta, "mode": mode})
+            _log.info("obs telemetry written to %s (+ .prom)", path)
+            sys.stdout.write(obs.render_report_file(path))
+        if args.incidents_out and holder["rset"] is not None:
+            mgr = holder["rset"].incidents.mgr
+            path = obs.write_incident_log(
+                args.incidents_out, mgr, meta={**run_meta, "mode": mode}
+            )
+            _log.info("incident log written to %s (%d incidents)", path,
+                      len(mgr.incidents))
 
     if args.replay:
         problems = replay_serve_trace(
             args.replay, args.replay_record, paged_kernel=args.paged_kernel,
             kernel_interpret=True if args.kernel_interpret else None,
+            rset_hook=grab_rset,
         )
         dump_obs("replay")
         if problems:
@@ -352,7 +397,8 @@ def main(argv=None) -> int:
         return 0
 
     header = header_from_args(args)
-    result, _ = run_from_header(header, record_path=args.record)
+    result, _ = run_from_header(header, record_path=args.record,
+                                rset_hook=grab_rset)
     acct = result.accounting
     done = sum(1 for rs in result.states.values() if rs.done)
     _log.info(

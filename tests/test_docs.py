@@ -24,7 +24,9 @@ OBS_DOC = DOCS / "observability.md"
 # metric names and span names live in disjoint dotted namespaces (see
 # repro/obs/catalog.py) so a backticked token can be classified by prefix;
 # tokens with wildcards (`serve.engine.*`) or paths (`a/b`) never match
-_METRIC_TOKEN = re.compile(r"^(?:ft|statexfer|serve|train|kernels)\.[a-z0-9_.]+$")
+_METRIC_TOKEN = re.compile(
+    r"^(?:ft|statexfer|serve|train|kernels|incidents)\.[a-z0-9_.]+$"
+)
 _SPAN_TOKEN = re.compile(
     r"^(?:trainer|controller|snapshot|reshard|engine|router|kernel)\.[a-z0-9_]+$"
 )
@@ -112,4 +114,53 @@ def test_obs_doc_has_no_stale_span_names():
     stale = documented - set(obs.SPANS)
     assert not stale, (
         f"docs/observability.md names undeclared spans: {sorted(stale)}"
+    )
+
+
+# -- incident pipeline: record schema, detectors, paths --------------------
+
+def _obs_doc_section(heading):
+    text = OBS_DOC.read_text()
+    m = re.search(rf"^###? {re.escape(heading)}$(.*?)(?=^###? |\Z)",
+                  text, re.M | re.S)
+    assert m, f"docs/observability.md section {heading!r} not found"
+    return m.group(1)
+
+
+def test_incident_record_schema_table_matches_pinned_fields():
+    """The schema table's pinned/unpinned split IS the code's split —
+    both directions: every PINNED_INCIDENT_FIELDS member must be a `yes`
+    row, and no extra field may claim to be pinned."""
+    section = _obs_doc_section("Incident record schema")
+    rows = re.findall(r"^\| `([a-z_]+)` \| (yes|no) \|", section, re.M)
+    assert rows, "incident record schema table not found"
+    pinned = {name for name, flag in rows if flag == "yes"}
+    assert pinned == set(obs.PINNED_INCIDENT_FIELDS), (
+        f"schema table pinned rows != PINNED_INCIDENT_FIELDS: "
+        f"{sorted(pinned ^ set(obs.PINNED_INCIDENT_FIELDS))}"
+    )
+    # every unpinned frame field is documented as such
+    tokens = _obs_doc_tokens()
+    missing = set(obs.UNPINNED_FRAME_FIELDS) - tokens
+    assert not missing, f"unpinned frame fields undocumented: {missing}"
+
+
+def test_detector_table_matches_declared_detectors():
+    """Two-way: the detector-rules table names exactly the detectors the
+    code ships (repro.obs.DETECTORS)."""
+    section = _obs_doc_section("Anomaly detectors")
+    rows = set(re.findall(r"^\| `([a-z_]+)` \|", section, re.M))
+    assert rows == set(obs.DETECTORS), (
+        f"detector table != DETECTORS: {sorted(rows ^ set(obs.DETECTORS))}"
+    )
+
+
+def test_every_recovery_path_is_documented():
+    from repro.obs.incidents import PATHS
+
+    tokens = _obs_doc_tokens()
+    missing = set(PATHS) - tokens
+    assert not missing, (
+        f"recovery paths missing from docs/observability.md: "
+        f"{sorted(missing)}"
     )

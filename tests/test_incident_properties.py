@@ -1,0 +1,206 @@
+"""Hypothesis invariants for the incident pipeline.
+
+The determinism contract docs/observability.md states, checked over
+arbitrary op sequences instead of the golden traces:
+
+* per-key non-overlap — no entity ever has two incidents open at once,
+  and same-key incidents form disjoint step intervals;
+* event totality — every event fed to an adapter maps to exactly one
+  incident;
+* conservation of attributed cost — ``acct_sums`` over a run's
+  non-synthetic incidents equals exactly what was contributed, and for
+  the serve adapter it reconciles with the event counts themselves;
+* the flight-recorder ring is a pure function of the record() calls.
+"""
+from tests.conftest import require_hypothesis
+
+require_hypothesis()
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro import obs  # noqa: E402
+from repro.serve.trace import ServeEvent  # noqa: E402
+from tests.test_incidents import (  # noqa: E402
+    assert_event_totality,
+    assert_no_overlap,
+    fresh_manager,
+)
+
+# -- raw manager ops --------------------------------------------------------
+
+N_KEYS = 4
+
+manager_ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("open"), st.integers(0, N_KEYS - 1),
+                  st.integers(0, 3)),              # dt before the op
+        st.tuples(st.just("close"), st.integers(0, N_KEYS - 1),
+                  st.integers(0, 3)),
+        st.tuples(st.just("instant"), st.integers(0, N_KEYS - 1),
+                  st.integers(0, 3)),
+        st.tuples(st.just("add"), st.integers(0, N_KEYS - 1),
+                  st.integers(1, 50)),             # contribution size
+    ),
+    min_size=1, max_size=60,
+)
+
+
+@settings(max_examples=80, deadline=None)
+@given(ops=manager_ops, end_dt=st.integers(0, 5))
+def test_manager_invariants_under_arbitrary_ops(ops, end_dt):
+    mgr = fresh_manager()
+    step = 0
+    contributed = 0   # reference model for acct conservation
+    n_mapped = 0
+    for kind, k, arg in ops:
+        key = ("entity", k)
+        if kind == "open":
+            step += arg
+            inc = mgr.open(key, "device_fail", step)
+            mgr.map_event(step, "fail", inc)
+            n_mapped += 1
+        elif kind == "close":
+            step += arg
+            mgr.close(key, step)
+        elif kind == "instant":
+            step += arg
+            mgr.instant(key, "load_shed", step, path="shed", n_shed=1)
+            contributed += 1
+        elif kind == "add":
+            inc = mgr.open_incident(("entity", k))
+            if inc is not None:
+                inc.add(peer_fetch_bytes=arg)
+                contributed += arg
+        mgr.tick(step)
+        # at most one open incident per key, always
+        open_keys = [i.key for i in mgr.incidents if i.close_step is None]
+        assert len(open_keys) == len(set(open_keys))
+    mgr.finalize(step + end_dt)
+    assert_no_overlap(mgr)
+    assert_event_totality(mgr, n_mapped)
+    sums = mgr.acct_sums()
+    assert sum(sums.values()) == contributed
+    # closed incidents all fed the cost model; unclosed ones never did
+    n_cost = sum(e["count"] for e in mgr.cost.table())
+    assert n_cost == mgr.n_closed()
+    # every incident interval is well-formed
+    for inc in mgr.incidents:
+        assert inc.close_step is not None  # finalize leaves nothing open
+        assert inc.close_step >= inc.open_step
+        assert inc.lost_steps >= 0
+
+
+# -- serve adapter over generated chaos scripts -----------------------------
+
+# one episode = one self-contained chaos story; episodes are concatenated
+# with fresh ids so any interleaving of outcomes stays valid
+episode = st.one_of(
+    # kill with n migrants, each then migrating (snapshot/replay) or shedding
+    st.tuples(st.just("kill"),
+              st.lists(st.sampled_from(["snapshot", "replay", "shed"]),
+                       min_size=0, max_size=3)),
+    # evict-and-replay preemption, resolved by a replay migrate or a shed
+    st.tuples(st.just("preempt"),
+              st.sampled_from(["replay", "shed"])),
+    st.tuples(st.just("shed"), st.just(None)),       # deadline shed
+    st.tuples(st.just("spike"), st.integers(1, 5)),  # surge duration
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(episodes=st.lists(episode, min_size=1, max_size=10),
+       gap=st.integers(1, 3))
+def test_serve_adapter_reconciles_with_event_counts(episodes, gap):
+    si = obs.ServeIncidents(fresh_manager("serve"))
+    t = 0
+    rid = 100
+    replica = 0
+    expect = {}
+    n_events = 0
+
+    def bump(**kw):
+        for key, v in kw.items():
+            expect[key] = expect.get(key, 0) + v
+
+    for kind, arg in episodes:
+        t += gap
+        if kind == "kill":
+            outcomes, r = arg, replica
+            replica += 1
+            rids = list(range(rid, rid + len(outcomes)))
+            rid += len(outcomes)
+            si.note_kill(r, rids)
+            si.on_step(t, [ServeEvent(t, "kill", replica=r,
+                                      n_inflight=len(rids))])
+            n_events += 1
+            bump(n_kills=1)
+            for mrid, outcome in zip(rids, outcomes):
+                t += gap
+                if outcome == "shed":
+                    si.on_step(t, [ServeEvent(t, "shed", req=mrid)])
+                    bump(n_shed=1)
+                else:
+                    si.on_step(t, [ServeEvent(
+                        t, "migrate", req=mrid, replica=replica,
+                        path=outcome, replayed=3 if outcome == "replay"
+                        else 0, nbytes=64 if outcome == "snapshot" else 0,
+                    )])
+                    bump(n_migrations=1,
+                         replayed_tokens=3 if outcome == "replay" else 0,
+                         restored_bytes=64 if outcome == "snapshot" else 0)
+                    bump(**{("n_restore_snapshot" if outcome == "snapshot"
+                             else "n_restore_replay"): 1})
+                n_events += 1
+        elif kind == "preempt":
+            si.note_preempt(rid, 5)
+            si.on_step(t, [ServeEvent(t, "preempt", req=rid, replica=0)])
+            n_events += 1
+            bump(n_preemptions=1, preempted_tokens=5)
+            t += gap
+            if arg == "replay":
+                si.on_step(t, [ServeEvent(t, "migrate", req=rid, replica=1,
+                                          path="replay", replayed=5)])
+                bump(n_migrations=1, n_restore_replay=1, replayed_tokens=5)
+            else:
+                si.on_step(t, [ServeEvent(t, "shed", req=rid)])
+                bump(n_shed=1)
+            n_events += 1
+            rid += 1
+        elif kind == "shed":
+            si.on_step(t, [ServeEvent(t, "shed", req=rid)])
+            n_events += 1
+            bump(n_shed=1)
+            rid += 1
+        elif kind == "spike":
+            si.on_step(t, [ServeEvent(t, "spike", magnitude=2.0,
+                                      duration=arg)])
+            n_events += 1
+            bump(n_spikes=1)
+
+    si.finalize(t + 10)  # past any spike deadline: everything resolves
+    mgr = si.mgr
+    assert_no_overlap(mgr)
+    assert_event_totality(mgr, n_events)
+    sums = {k: v for k, v in mgr.acct_sums().items() if v}
+    assert sums == {k: v for k, v in expect.items() if v}
+    # every episode resolved: nothing is left unclosed
+    assert mgr.n_closed() == len(mgr.incidents)
+
+
+# -- flight recorder --------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(0, 120), cap=st.integers(8, 64),
+       probe=st.integers(0, 130))
+def test_flight_ring_is_pure_function_of_records(n, cap, probe):
+    fr = obs.FlightRecorder(capacity=cap, window=4)
+    for s in range(n):
+        fr.record(s, tokens=s % 7)
+    assert len(fr) == min(n, cap)
+    assert fr.n_recorded == n
+    steps = [f["step"] for f in fr.frames()]
+    assert steps == list(range(max(0, n - cap), n))
+    lo, hi = probe - 4, probe + 4
+    window = [f["step"] for f in fr.window_around(probe)]
+    assert window == [s for s in steps if lo <= s <= hi]

@@ -1,0 +1,697 @@
+"""Incident pipeline: flight recorder, lifecycle, cost model, golden logs.
+
+Covers the three determinism invariants the incident subsystem promises
+(docs/observability.md):
+
+* **non-overlap** — at most one open incident per entity key, and closed
+  intervals for the same key never overlap;
+* **totality** — every chaos event the adapters see maps to exactly one
+  incident (``event_log``);
+* **exact attribution** — per-key sums over a run's incidents reconcile
+  with the ``RecoveryAccounting`` / ``ReplicaSet.acct`` totals the trace
+  footer pins (:func:`repro.obs.incidents.reconcile`).
+
+The chaos-marked tests at the bottom replay the committed golden traces
+and verify the committed golden *incident* logs bit-exactly over the
+pinned projection.  Hypothesis variants live in
+tests/test_incident_properties.py.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro import obs
+from repro.obs.costmodel import (
+    COLLAPSE_FRAMES,
+    SNAPSHOT_MIN_FRAMES,
+    SPIKE_MIN_SAMPLES,
+    GoodputCollapseDetector,
+    SnapshotBudgetDetector,
+    StepTimeSpikeDetector,
+)
+from repro.obs.incidents import (
+    TRAIN_RECONCILE_KEYS,
+    IncidentManager,
+    ServeIncidents,
+    TrainIncidents,
+    footer_accounting,
+    load_incident_log,
+    pinned_incident,
+    reconcile,
+    render_incidents,
+    verify_incident_log,
+    write_incident_log,
+)
+from repro.serve.trace import ServeEvent
+
+DATA = pathlib.Path(__file__).parent / "data"
+REPO = pathlib.Path(__file__).parent.parent
+
+
+def fresh_manager(domain="train", detectors=False, **kw):
+    return IncidentManager(domain, reg=obs.MetricsRegistry(),
+                           detectors=detectors, **kw)
+
+
+# -- invariant checkers (shared with test_incident_properties.py) -----------
+
+
+def assert_no_overlap(mgr: IncidentManager) -> None:
+    """Per-key non-overlap: same-key incidents form disjoint intervals."""
+    by_key = {}
+    for inc in mgr.incidents:
+        by_key.setdefault(inc.key, []).append(inc)  # list is in open order
+    for key, incs in by_key.items():
+        for prev, nxt in zip(incs, incs[1:]):
+            assert prev.close_step is not None, \
+                f"two open incidents for key {key}"
+            assert nxt.open_step >= prev.close_step, \
+                f"overlapping incidents for key {key}: " \
+                f"[{prev.open_step}..{prev.close_step}] then " \
+                f"[{nxt.open_step}..]"
+
+
+def assert_event_totality(mgr: IncidentManager, n_events: int) -> None:
+    """Every chaos event maps to exactly one incident."""
+    assert len(mgr.event_log) == n_events, \
+        f"{n_events} events fed, {len(mgr.event_log)} mapped"
+    iids = {inc.iid for inc in mgr.incidents}
+    for e in mgr.event_log:
+        assert e["iid"] in iids, f"event mapped to unknown incident {e}"
+    assert sum(i.n_events for i in mgr.incidents) == len(mgr.event_log)
+
+
+# -- flight recorder --------------------------------------------------------
+
+
+def test_flight_recorder_ring_semantics():
+    fr = obs.FlightRecorder(capacity=8, window=3)
+    for s in range(20):
+        fr.record(s, wall_s=0.1 * s, tokens=s)
+    assert len(fr) == 8
+    assert [f["step"] for f in fr.frames()] == list(range(12, 20))
+    assert fr.n_recorded == 20
+    # window_around clips to what the ring still holds
+    assert [f["step"] for f in fr.window_around(13)] == [12, 13, 14, 15, 16]
+    assert [f["step"] for f in fr.frames_between(15, 17)] == [15, 16, 17]
+    assert [f["step"] for f in fr.last(3)] == [17, 18, 19]
+    assert fr.last(0) == []
+
+
+def test_flight_recorder_drops_none_fields_and_rejects_tiny_capacity():
+    fr = obs.FlightRecorder(capacity=16, window=2)
+    frame = fr.record(0, wall_s=0.5, snap_blocked_s=None, tokens=3)
+    assert frame == {"step": 0, "wall_s": 0.5, "tokens": 3}
+    with pytest.raises(ValueError):
+        obs.FlightRecorder(capacity=3, window=2)
+
+
+def test_pinned_frame_drops_wall_clock_fields():
+    frame = {"step": 4, "wall_s": 0.1, "span_s": 0.05,
+             "snap_blocked_s": 0.01, "tokens": 7, "dp_size": 4}
+    assert obs.pinned_frame(frame) == {"step": 4, "tokens": 7, "dp_size": 4}
+    for f in obs.UNPINNED_FRAME_FIELDS:
+        assert f not in obs.pinned_frame(frame)
+
+
+# -- cost model -------------------------------------------------------------
+
+
+def test_cost_model_estimate_statistics():
+    cm = obs.CostModel(obs.MetricsRegistry())
+    assert cm.estimate("rank_drop", "peer_restore") is None
+    for lost in (2, 4, 6):
+        cm.observe("rank_drop", "peer_restore", lost_steps=lost,
+                   transfer_bytes=100 * lost, replayed_tokens=0,
+                   wall_s=0.1 * lost)
+    est = cm.estimate("rank_drop", "peer_restore")
+    assert est["count"] == 3
+    assert est["lost_steps"]["mean"] == pytest.approx(4.0)
+    assert est["lost_steps"]["p50"] == pytest.approx(4.0)
+    assert est["transfer_bytes"]["mean"] == pytest.approx(400.0)
+    assert est["wall_s"]["mean"] == pytest.approx(0.4)
+    assert cm.pairs() == [("rank_drop", "peer_restore")]
+    assert cm.table() == [est]
+
+
+def test_cost_model_handles_missing_wall():
+    cm = obs.CostModel(obs.MetricsRegistry())
+    cm.observe("load_shed", "shed", lost_steps=0, transfer_bytes=0,
+               replayed_tokens=3, wall_s=None)
+    est = cm.estimate("load_shed", "shed")
+    assert est["count"] == 1 and est["wall_s"] is None
+    assert est["replayed_tokens"]["mean"] == pytest.approx(3.0)
+
+
+# -- detectors --------------------------------------------------------------
+
+
+def test_step_time_spike_detector_fires_and_clears():
+    det = StepTimeSpikeDetector()
+    for s in range(SPIKE_MIN_SAMPLES):
+        assert det.update({"step": s, "wall_s": 1.0}) is None
+    assert det.update({"step": 8, "wall_s": 10.0}) is True   # 10 > 3x median
+    assert det.update({"step": 9, "wall_s": 1.0}) is False   # back to normal
+    assert det.update({"step": 10, "wall_s": 1.0}) is None
+    assert det.update({"step": 11}) is None                  # no wall: inert
+
+
+def test_goodput_collapse_detector_needs_queued_work():
+    det = GoodputCollapseDetector()
+    for s in range(COLLAPSE_FRAMES - 1):
+        assert det.update({"step": s, "tokens": 0, "queue_depth": 2}) is None
+    assert det.update({"step": 3, "tokens": 0, "queue_depth": 2}) is True
+    assert det.update({"step": 4, "tokens": 5, "queue_depth": 2}) is False
+    # zero tokens with an EMPTY queue is idleness, not collapse
+    det2 = GoodputCollapseDetector()
+    for s in range(2 * COLLAPSE_FRAMES):
+        assert det2.update({"step": s, "tokens": 0, "queue_depth": 0}) is None
+
+
+def test_snapshot_budget_detector_tracks_cumulative_fraction():
+    det = SnapshotBudgetDetector()
+    # blocked is cumulative; 20% of wall >> the 5% budget
+    fired = [det.update({"step": s, "wall_s": 1.0,
+                         "snap_blocked_s": 0.2 * (s + 1)})
+             for s in range(SNAPSHOT_MIN_FRAMES)]
+    assert fired[-1] is True and all(f is None for f in fired[:-1])
+    # blocked stops growing; the cumulative fraction decays under budget
+    out = None
+    for s in range(SNAPSHOT_MIN_FRAMES, 60):
+        out = det.update({"step": s, "wall_s": 1.0, "snap_blocked_s": 2.0})
+        if out is not None:
+            break
+    assert out is False
+
+
+# -- incident manager lifecycle ---------------------------------------------
+
+
+def test_open_extends_instead_of_overlapping():
+    mgr = fresh_manager()
+    a = mgr.open(("rank", 1), "rank_drop", 3)
+    b = mgr.open(("rank", 1), "rank_drop", 5, deadline=9)
+    assert a is b and len(mgr.incidents) == 1
+    assert b.deadline == 9
+    mgr.open(("rank", 1), "rank_drop", 6, deadline=7)
+    assert b.deadline == 9  # deadlines only ever extend
+    mgr.close(("rank", 1), 8)
+    c = mgr.open(("rank", 1), "rank_drop", 10)
+    assert c is not a and c.iid == a.iid + 1
+    assert_no_overlap(mgr)
+
+
+def test_close_costs_the_incident():
+    mgr = fresh_manager()
+    inc = mgr.open(("rank", 2), "rank_drop", 4, path="peer_restore")
+    inc.add(peer_fetch_bytes=1000, n_rejoins=1, zero_is_dropped=0)
+    assert "zero_is_dropped" not in inc.acct
+    closed = mgr.close(("rank", 2), 9)
+    assert closed is inc and inc.closed and inc.lost_steps == 5
+    assert inc.transfer_bytes() == 1000
+    est = mgr.cost.estimate("rank_drop", "peer_restore")
+    assert est["count"] == 1
+    assert est["lost_steps"]["mean"] == pytest.approx(5.0)
+    assert mgr.close(("rank", 2), 10) is None  # double close is a no-op
+
+
+def test_instant_and_deadline_autoclose():
+    mgr = fresh_manager()
+    shed = mgr.instant(("request", 7), "load_shed", 6, path="shed", n_shed=1)
+    assert shed.closed and shed.lost_steps == 0 and shed.acct == {"n_shed": 1}
+    spike = mgr.open(("spike",), "traffic_spike", 10, deadline=13)
+    mgr.tick(11)
+    assert not spike.closed
+    mgr.tick(20)  # past the deadline: closes AT the deadline, not at 20
+    assert spike.closed and spike.close_step == 13
+
+
+def test_finalize_marks_unclosed():
+    mgr = fresh_manager()
+    inc = mgr.open(("device", 1, 0), "device_fail", 5)
+    mgr.finalize(12)
+    assert inc.unclosed and inc.close_step == 12 and not inc.closed
+    assert mgr.open_incident(("device", 1, 0)) is None
+    assert mgr.incident_for(("device", 1, 0)) is inc  # still findable
+    assert mgr.n_closed() == 0
+    # unclosed incidents never feed the cost model
+    assert mgr.cost.pairs() == []
+
+
+def test_synthetic_incidents_get_negative_iids():
+    mgr = fresh_manager()
+    real = mgr.open(("rank", 0), "rank_drop", 1)
+    syn = mgr.open(("detector", "step_time_spike"), "step_time_spike", 2,
+                   synthetic=True)
+    real2 = mgr.open(("rank", 3), "rank_drop", 3)
+    assert (real.iid, real2.iid) == (0, 1)  # synthetic opens never shift
+    assert syn.iid == -1
+    assert pinned_incident(syn.to_record()) is None
+    syn.add(n_shed=1)
+    assert mgr.acct_sums() == {}  # synthetic excluded by default
+    assert mgr.acct_sums(synthetic=True) == {"n_shed": 1}
+
+
+def test_record_frame_drives_detectors():
+    mgr = fresh_manager(domain="serve", detectors=True)
+    for s in range(SPIKE_MIN_SAMPLES):
+        mgr.record_frame(s, wall_s=1.0)
+    mgr.record_frame(8, wall_s=10.0)
+    syn = mgr.open_incident(("detector", "step_time_spike"))
+    assert syn is not None and syn.synthetic and syn.iid == -1
+    mgr.record_frame(9, wall_s=1.0)
+    assert syn.closed and syn.close_step == 9
+
+
+def test_correlation_attaches_window_and_goodput_delta():
+    mgr = fresh_manager(window=4)
+    for s in range(10):
+        mgr.record_frame(s, wall_s=0.5, goodput=8)
+    inc = mgr.open(("rank", 1), "rank_drop", 10)
+    for s in range(10, 14):
+        mgr.record_frame(s, wall_s=2.0, goodput=4)
+    mgr.close(("rank", 1), 13)
+    assert [f["step"] for f in inc.frames] == list(range(6, 14))
+    assert inc.wall_s == pytest.approx(4 * 2.0)     # frames 10..13
+    assert inc.goodput_delta == pytest.approx(4 - 8)
+
+
+# -- train adapter ----------------------------------------------------------
+
+
+def test_train_failover_and_recovery_classification():
+    ti = TrainIncidents(fresh_manager())
+    ti.begin_step(3, slow={(1, 0)})
+    ti.on_failover((1, 0), 100, replicated=True)    # slow -> straggler
+    ti.on_failover((2, 1), 50, replicated=False)    # failed -> device_fail
+    ti.end_step([_ev(3, "straggle", (1, 0)), _ev(3, "fail", (2, 1))])
+    strag = ti.mgr.open_incident(("device", 1, 0))
+    fail = ti.mgr.open_incident(("device", 2, 1))
+    assert strag.kind == "straggler" and strag.path == "skip_lowrank"
+    assert strag.acct == {"n_failovers": 1, "peer_fetch_bytes": 100}
+    assert fail.kind == "device_fail"
+    assert fail.acct == {"n_failovers": 1, "ckpt_restore_bytes": 50}
+
+    ti.begin_step(6, slow=set())
+    ti.on_recovery((1, 0), 100)
+    ti.end_step([_ev(6, "straggle_end", (1, 0))])
+    assert strag.closed and strag.close_step == 6 and strag.lost_steps == 3
+    assert strag.acct["n_recoveries"] == 1
+    assert strag.acct["peer_fetch_bytes"] == 200
+    assert_event_totality(ti.mgr, 3)
+    assert_no_overlap(ti.mgr)
+
+
+def test_train_rank_drop_subsumes_device_incidents_then_rejoins():
+    ti = TrainIncidents(fresh_manager())
+    ti.begin_step(4, slow=set())
+    ti.on_failover((3, 0), 10, replicated=True)
+    ti.on_rank_drop(3)
+    assert ti.mgr.open_incident(("device", 3, 0)) is None  # subsumed
+    rank_inc = ti.mgr.open_incident(("rank", 3))
+    assert rank_inc.kind == "rank_drop"
+
+    ti.begin_step(9, slow=set())
+    ti.on_rejoin(3, 5000, replicated=True)
+    ti.end_step([_ev(9, "rejoin", None, rank=3)])
+    assert rank_inc.closed and rank_inc.path == "peer_restore"
+    assert rank_inc.acct == {"n_rank_drops": 1, "n_rejoins": 1,
+                             "peer_fetch_bytes": 5000}
+    assert rank_inc.lost_steps == 5
+    assert_no_overlap(ti.mgr)
+
+
+def test_train_statexfer_receipt_closes_the_rejoin():
+    from repro.statexfer.reshard_exec import TransferReceipt
+
+    ti = TrainIncidents(fresh_manager(), expect_receipts=True)
+    ti.begin_step(2, slow=set())
+    ti.on_rank_drop(1)
+    ti.begin_step(5, slow=set())
+    ti.on_rejoin(1, 5000, replicated=True)
+    inc = ti.mgr.open_incident(("rank", 1))
+    assert inc is not None, "rejoin must stay open until the receipt"
+
+    bad = TransferReceipt(rank=1, step=5, source="peer", bytes_moved=1,
+                          seconds=0.1, ok=False)
+    ti.on_receipt(bad)
+    assert not inc.closed  # failed transfers never close the incident
+
+    good = TransferReceipt(rank=1, step=5, source="peer", bytes_moved=777,
+                           seconds=0.1)
+    ti.on_receipt(good)
+    assert inc.closed and inc.path == "peer_restore"
+    assert inc.acct["measured_transfer_bytes"] == 777
+    assert inc.acct["n_peer_restores"] == 1
+
+
+def test_train_net_and_spike_episodes():
+    ti = TrainIncidents(fresh_manager())
+    ti.begin_step(2, slow=set())
+    ti.end_step([_ev(2, "net_degrade", None)])
+    net = ti.mgr.open_incident(("net",))
+    assert net.kind == "net_degrade"
+    ti.begin_step(6, slow=set())
+    ti.end_step([_ev(6, "net_restore", None)])
+    assert net.closed and net.lost_steps == 4
+
+    ti.begin_step(8, slow=set())
+    ti.end_step([_ev(8, "traffic_spike", None, duration_steps=5)])
+    spike = ti.mgr.open_incident(("spike",))
+    assert spike.deadline == 13
+    ti.begin_step(11, slow=set())
+    ti.end_step([_ev(11, "traffic_calm", None)])
+    assert spike.closed and spike.close_step == 11
+    assert_event_totality(ti.mgr, 4)
+    assert_no_overlap(ti.mgr)
+
+
+def _ev(step, kind, device, **kw):
+    from repro.ft.events import FailureEvent
+
+    return FailureEvent(step, kind, device, **kw)
+
+
+# -- serve adapter ----------------------------------------------------------
+
+
+def test_serve_kill_with_mixed_migrations():
+    si = ServeIncidents(fresh_manager("serve"))
+    si.note_kill(0, [10, 11])
+    si.on_step(5, [ServeEvent(5, "kill", replica=0, n_inflight=2)])
+    inc = si.mgr.open_incident(("replica", 0))
+    assert inc.kind == "replica_kill" and inc.pending == {10, 11}
+
+    si.on_step(6, [
+        ServeEvent(6, "migrate", req=10, replica=1, path="snapshot",
+                   nbytes=256),
+        ServeEvent(6, "revive", replica=0),
+    ])
+    assert not inc.closed  # one migrant still in flight
+    si.on_step(7, [ServeEvent(7, "migrate", req=11, replica=1,
+                              path="replay", replayed=8)])
+    assert inc.closed and inc.path == "migrate_mixed"
+    assert inc.acct == {
+        "n_kills": 1, "n_revives": 1, "n_migrations": 2,
+        "n_restore_snapshot": 1, "n_restore_replay": 1,
+        "replayed_tokens": 8, "restored_bytes": 256,
+    }
+    assert_event_totality(si.mgr, 4)
+    assert_no_overlap(si.mgr)
+
+
+def test_serve_kill_paths():
+    si = ServeIncidents(fresh_manager("serve"))
+    # no inflight requests: the kill incident closes on the spot
+    si.note_kill(0, [])
+    si.on_step(2, [ServeEvent(2, "kill", replica=0)])
+    empty = si.mgr.incidents[-1]
+    assert empty.closed and empty.path == "none" and empty.lost_steps == 0
+    # every migrant sheds: the kill resolves as a shed
+    si.note_kill(1, [20])
+    si.on_step(3, [ServeEvent(3, "kill", replica=1, n_inflight=1)])
+    si.on_step(4, [ServeEvent(4, "shed", req=20)])
+    killed = si.mgr.incident_for(("replica", 1))
+    assert killed.closed and killed.path == "shed"
+    assert killed.acct["n_shed"] == 1
+
+
+def test_serve_preemption_and_replay():
+    si = ServeIncidents(fresh_manager("serve"))
+    si.note_preempt(20, 5)
+    si.on_step(8, [ServeEvent(8, "preempt", req=20, replica=1)])
+    inc = si.mgr.open_incident(("request", 20))
+    assert inc.kind == "preemption" and inc.path == "evict_replay"
+    assert inc.acct == {"n_preemptions": 1, "preempted_tokens": 5}
+    si.on_step(11, [ServeEvent(11, "migrate", req=20, replica=2,
+                               path="replay", replayed=5)])
+    assert inc.closed and inc.path == "evict_replay"
+    assert inc.token_cost() == 10  # preempted + replayed
+    assert inc.lost_steps == 3
+
+
+def test_serve_shed_and_spike():
+    si = ServeIncidents(fresh_manager("serve"))
+    si.on_step(3, [ServeEvent(3, "shed", req=40)])
+    shed = si.mgr.incidents[-1]
+    assert shed.kind == "load_shed" and shed.path == "shed" and shed.closed
+
+    si.on_step(5, [ServeEvent(5, "spike", magnitude=3.0, duration=4)])
+    spike = si.mgr.open_incident(("spike",))
+    assert spike.acct == {"n_spikes": 1} and spike.deadline == 9
+    si.on_step(9, [])  # tick reaches the deadline
+    assert spike.closed and spike.close_step == 9 and spike.lost_steps == 4
+    assert_event_totality(si.mgr, 2)
+
+
+# -- JSONL log: write / load / verify / reconcile / render ------------------
+
+
+def _sample_manager():
+    mgr = fresh_manager()
+    inc = mgr.open(("rank", 1), "rank_drop", 3, path="peer_restore")
+    inc.add(n_rank_drops=1, n_rejoins=1, peer_fetch_bytes=1000)
+    mgr.map_event(3, "fail", inc)
+    mgr.close(("rank", 1), 7)
+    syn = mgr.open(("detector", "step_time_spike"), "step_time_spike", 5,
+                   synthetic=True)
+    mgr.close(("detector", "step_time_spike"), 6)
+    assert syn.synthetic
+    mgr.open(("device", 0, 2), "device_fail", 9).add(n_failovers=1)
+    mgr.finalize(11)
+    return mgr
+
+
+def test_incident_log_roundtrip_and_verify(tmp_path):
+    mgr = _sample_manager()
+    path = write_incident_log(tmp_path / "inc.jsonl", mgr,
+                              meta={"run": "unit"})
+    header, records, footer = load_incident_log(path)
+    assert header["domain"] == "train" and header["run"] == "unit"
+    assert header["version"] == 1
+    assert len(records) == 3
+    assert footer["n_incidents"] == 3 and footer["n_closed"] == 2
+    assert footer["n_events"] == 1
+    assert footer["acct_sums"] == {"n_rank_drops": 1, "n_rejoins": 1,
+                                   "peer_fetch_bytes": 1000,
+                                   "n_failovers": 1}
+    assert "rank_drop|peer_restore" in footer["costmodel"]
+    # a fresh identical run verifies bit-exactly against the written log
+    again = _sample_manager()
+    assert verify_incident_log(path, again.records()) == []
+    # ...and a perturbed one does not
+    mutated = again.records()
+    mutated[0]["acct"]["peer_fetch_bytes"] += 1
+    problems = verify_incident_log(path, mutated)
+    assert problems and "diverged" in problems[0]
+    assert verify_incident_log(path, mutated[:1]) != []  # count mismatch
+
+
+def test_pinned_projection_drops_wall_quantities():
+    mgr = _sample_manager()
+    rec = mgr.records()[0]
+    pinned = pinned_incident(rec)
+    assert set(pinned) == set(obs.PINNED_INCIDENT_FIELDS)
+    for unpinned in ("wall_s", "goodput_delta", "frames", "synthetic"):
+        assert unpinned not in pinned
+    assert pinned["acct"] == {"n_rank_drops": 1, "n_rejoins": 1,
+                              "peer_fetch_bytes": 1000}
+
+
+def test_reconcile_matches_and_flags():
+    mgr = _sample_manager()
+    records = mgr.records()
+    totals = {"n_failovers": 1, "n_rank_drops": 1, "n_rejoins": 1,
+              "peer_fetch_bytes": 1000, "n_recoveries": 0}
+    assert reconcile(records, totals) == []
+    # a missing unit of cost is flagged...
+    assert reconcile(records, {**totals, "peer_fetch_bytes": 1001})
+    # ...and so is an attribution outside the declared key set
+    mgr.incidents[0].add(made_up_key=3)
+    problems = reconcile(mgr.records(), totals)
+    assert any("undeclared" in p for p in problems)
+
+
+def test_render_incidents_table(tmp_path):
+    mgr = _sample_manager()
+    path = write_incident_log(tmp_path / "inc.jsonl", mgr)
+    _, records, footer = load_incident_log(path)
+    out = render_incidents(records, footer)
+    assert "cost per (event kind x recovery path):" in out
+    assert "rank_drop" in out and "peer_restore" in out
+    assert "cost model estimates" in out
+    assert "unclosed" in out  # the finalized-open device incident
+
+
+def test_obs_incidents_cli(tmp_path, capsys):
+    from repro.obs.report import main as report_main
+
+    mgr = _sample_manager()
+    path = write_incident_log(tmp_path / "inc.jsonl", mgr)
+    assert report_main(["incidents", str(path)]) == 0
+    assert "cost per (event kind x recovery path):" in capsys.readouterr().out
+    assert report_main(["incidents", str(path),
+                        "--require-closed", "99"]) == 1
+
+
+def test_crash_flush_emits_partial_incident_log(tmp_path):
+    """A run that dies mid-flight still writes its incident log, with the
+    open incident marked unclosed and the header marked partial."""
+    out = tmp_path / "crash_incidents.jsonl"
+    code = (
+        "from repro import obs\n"
+        "mgr = obs.IncidentManager('train', reg=obs.MetricsRegistry())\n"
+        "mgr.open(('rank', 1), 'rank_drop', 5).add(n_rank_drops=1)\n"
+        "mgr.step = 7\n"
+        f"obs.install_crash_flush(incidents_path={str(out)!r}, "
+        "incidents=mgr, meta={'run': 'crash-test'})\n"
+        "raise SystemExit(3)\n"
+    )
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True)
+    assert proc.returncode == 3
+    header, records, _ = load_incident_log(out)
+    assert header["partial"] is True and header["run"] == "crash-test"
+    assert len(records) == 1
+    assert records[0]["unclosed"] is True and records[0]["close_step"] == 7
+
+
+def test_crash_flush_disarm_suppresses_the_dump(tmp_path):
+    out = tmp_path / "disarmed.jsonl"
+    code = (
+        "from repro import obs\n"
+        "mgr = obs.IncidentManager('train', reg=obs.MetricsRegistry())\n"
+        f"disarm = obs.install_crash_flush(incidents_path={str(out)!r}, "
+        "incidents=mgr)\n"
+        "disarm()\n"
+    )
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True)
+    assert proc.returncode == 0
+    assert not out.exists()
+
+
+# -- golden traces: invariants + committed golden incident logs -------------
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("name", [
+    "golden_trace.jsonl",
+    "golden_trace_elastic.jsonl",
+])
+def test_train_chaos_replay_incident_invariants(name):
+    """Replaying a golden chaos trace through the FT controller satisfies
+    all three incident invariants, and the attribution reconciles with the
+    SAME RecoveryAccounting the trace footer pins."""
+    from repro.configs.base import MeCeFOConfig, get_config, reduced
+    from repro.ft.controller import FTController
+    from repro.ft.trace import load_trace, replay_engine
+
+    trace = load_trace(DATA / name)
+    cfg = reduced(get_config("llama-350m"), dtype="float32")
+    ctl = FTController(
+        cfg=cfg, mecefo=MeCeFOConfig(mode="dynamic"),
+        n_dp=trace.header.n_dp, n_stages=trace.header.n_stages,
+        global_batch=8,
+    )
+    engine = replay_engine(trace)
+    for step in range(trace.footer.total_steps):
+        ctl.apply_chaos(engine.step(step))
+    ctl.incidents.finalize(trace.footer.total_steps)
+    mgr = ctl.incidents.mgr
+    assert_no_overlap(mgr)
+    assert_event_totality(mgr, len(engine.events))
+    assert reconcile(mgr.records(), ctl.accounting.as_dict()) == []
+    assert mgr.n_closed() >= 1
+
+
+@pytest.mark.chaos
+def test_golden_overload_incident_log_replays_bit_exactly():
+    """The committed golden incident log for the overload trace: a fresh
+    replay reproduces every pinned incident projection, and the attributed
+    costs reconcile with the trace footer's accounting."""
+    from repro.serve.run import replay_serve_trace
+
+    grabbed = {}
+    problems = replay_serve_trace(
+        str(DATA / "golden_trace_overload.jsonl"),
+        rset_hook=lambda rs: grabbed.update(rset=rs),
+    )
+    assert problems == [], "\n".join(problems)
+    mgr = grabbed["rset"].incidents.mgr
+    records = mgr.records()
+    assert verify_incident_log(
+        DATA / "golden_incidents_overload.jsonl", records) == []
+    totals = footer_accounting(DATA / "golden_trace_overload.jsonl")
+    assert totals is not None
+    assert reconcile(records, totals) == []
+    assert mgr.n_closed() >= 1
+    assert_no_overlap(mgr)
+    # the golden log itself reconciles too (committed artifact is coherent)
+    _, golden_records, golden_footer = load_incident_log(
+        DATA / "golden_incidents_overload.jsonl")
+    assert reconcile(golden_records, totals) == []
+    assert golden_footer["n_closed"] >= 1
+
+
+@pytest.mark.chaos
+def test_golden_serve_trace_incidents_reconcile():
+    from repro.serve.run import replay_serve_trace
+
+    grabbed = {}
+    assert replay_serve_trace(
+        str(DATA / "golden_trace_serve.jsonl"),
+        rset_hook=lambda rs: grabbed.update(rset=rs),
+    ) == []
+    mgr = grabbed["rset"].incidents.mgr
+    totals = footer_accounting(DATA / "golden_trace_serve.jsonl")
+    assert reconcile(mgr.records(), totals) == []
+    assert_no_overlap(mgr)
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_golden_statexfer_incident_log_replays_bit_exactly(tmp_path):
+    """Full-trainer statexfer replay (measured TransferReceipts and all)
+    reproduces the committed golden incident log and reconciles with the
+    trace footer — the acceptance bar for the incident pipeline."""
+    from repro.launch.train import main as train_main
+
+    out = tmp_path / "incidents.jsonl"
+    rc = train_main([
+        "--mecefo", "dynamic", "--chaos", "elastic", "--statexfer",
+        "--trace", "replay", str(DATA / "golden_trace_statexfer.jsonl"),
+        "--incidents-out", str(out),
+    ])
+    assert rc == 0, "golden statexfer replay diverged"
+    _, records, footer = load_incident_log(out)
+    assert verify_incident_log(
+        DATA / "golden_incidents_statexfer.jsonl", records) == []
+    totals = footer_accounting(DATA / "golden_trace_statexfer.jsonl")
+    assert reconcile(records, totals) == []
+    assert footer["n_closed"] >= 1
+    # the per-(kind x path) sums in the footer match the trace accounting
+    for k in TRAIN_RECONCILE_KEYS:
+        if k in totals:
+            assert footer["acct_sums"].get(k, 0) == totals[k], k
+
+
+def test_committed_golden_incident_logs_are_well_formed():
+    """Cheap tier-1 guard: both committed golden incident logs parse, have
+    coherent footers, and their non-synthetic incidents verify against
+    themselves (the pinned projection is stable under JSON roundtrip)."""
+    for name in ("golden_incidents_statexfer.jsonl",
+                 "golden_incidents_overload.jsonl"):
+        path = DATA / name
+        header, records, footer = load_incident_log(path)
+        assert header["version"] == 1
+        assert footer["n_incidents"] == len(records)
+        assert footer["n_closed"] >= 1
+        assert verify_incident_log(path, records) == []
+        roundtrip = [json.loads(json.dumps(r)) for r in records]
+        assert verify_incident_log(path, roundtrip) == []

@@ -124,3 +124,40 @@ def test_obs_span_overhead_under_two_percent():
         f"{n_spans} spans x {per_span * 1e6:.2f}us = {overhead * 1e3:.1f}ms "
         f">= 2% of {wall:.2f}s wall"
     )
+
+
+@pytest.mark.chaos
+@pytest.mark.slow
+def test_flight_recorder_overhead_under_two_percent():
+    """The incident pipeline rides the same <2% side-channel budget: the
+    frames + lifecycle work a serve replay performs, costed at a measured
+    per-frame rate, must stay under 2% of that replay's wall time."""
+    from repro.serve.run import replay_serve_trace
+
+    grabbed = {}
+    t0 = time.perf_counter()
+    assert replay_serve_trace(
+        str(DATA / "golden_trace_serve.jsonl"),
+        rset_hook=lambda rs: grabbed.update(rset=rs),
+    ) == []
+    wall = time.perf_counter() - t0
+
+    mgr = grabbed["rset"].incidents.mgr
+    n_frames = mgr.flight.n_recorded
+    assert n_frames > 0, "serve replay recorded no flight frames"
+    assert len(mgr.incidents) > 0, "chaos replay opened no incidents"
+
+    bench = obs.IncidentManager("serve", reg=obs.MetricsRegistry())
+    reps = 10_000
+    t1 = time.perf_counter()
+    for i in range(reps):
+        bench.record_frame(i, wall_s=0.001, span_s=0.0005, tokens=3,
+                           goodput=3, queue_depth=2, free_pages=100,
+                           n_alive=3)
+    per_frame = (time.perf_counter() - t1) / reps
+
+    overhead = n_frames * per_frame
+    assert overhead < 0.02 * wall, (
+        f"{n_frames} frames x {per_frame * 1e6:.2f}us = "
+        f"{overhead * 1e3:.1f}ms >= 2% of {wall:.2f}s wall"
+    )
