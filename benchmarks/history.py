@@ -25,6 +25,23 @@ def headline(bench: Dict) -> Dict:
     engine = bench.get("engine") or {}
     cont = bench.get("continuous") or {}
     lock = bench.get("lockstep") or {}
+    pol_presets = (bench.get("policy") or {}).get("presets") or {}
+    # per-preset recovery-adjusted goodput for every policy, plus the
+    # worst-case margin of the adaptive engine over the best fixed path
+    # (>= 0 is the bench invariant CI asserts; the trajectory here shows
+    # whether the margin ever erodes toward the tie)
+    policy_goodput = {
+        preset: {
+            pol: run.get("goodput")
+            for pol, run in sorted((p.get("policies") or {}).items())
+        }
+        for preset, p in sorted(pol_presets.items())
+    }
+    margins = [
+        p["adaptive_goodput"] - max(p["fixed_goodputs"].values())
+        for p in pol_presets.values()
+        if p.get("adaptive_goodput") is not None and p.get("fixed_goodputs")
+    ]
     return {
         "type": "bench_history",
         "bench": bench.get("bench"),
@@ -41,6 +58,8 @@ def headline(bench: Dict) -> Dict:
         "goodput_frac": {
             mode: m.get("goodput_frac") for mode, m in sorted(modes.items())
         },
+        "policy_goodput": policy_goodput,
+        "policy_adaptive_margin": min(margins) if margins else None,
     }
 
 

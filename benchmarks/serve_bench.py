@@ -57,12 +57,12 @@ _log = logging.getLogger("repro.bench.serve")
 
 
 def run_mode(cfg, params, rules, flags, ecfg, workload, *, n_replicas=1,
-             chaos=None, snapshot_cadence=1, keep_result=False):
+             chaos=None, snapshot_cadence=1, keep_result=False, policy=""):
     injs = injectors_from_spec(chaos or {"kind": "none"})
     rset = ReplicaSet(
         cfg, params, rules, flags, ecfg, n_replicas=n_replicas,
         injectors=injs, chaos_seed=11, snapshots=True,
-        snapshot_cadence=snapshot_cadence,
+        snapshot_cadence=snapshot_cadence, policy=policy,
     )
     t0 = time.perf_counter()
     result = rset.run(workload)
@@ -124,6 +124,8 @@ def run_mode(cfg, params, rules, flags, ecfg, workload, *, n_replicas=1,
         "n_shed": acct["n_shed"],
         "n_preemptions": acct["n_preemptions"],
         "preempted_tokens": acct["preempted_tokens"],
+        "n_policy_decisions": (len(rset.policy.decisions)
+                               if rset.policy is not None else 0),
     }
     if keep_result:
         return stats, result
@@ -320,6 +322,87 @@ def overload_section(cfg, params, rules, flags, *, n_requests, seed):
     return out
 
 
+def policy_section(cfg, params, rules, flags, ecfg, *, seed=0):
+    """Adaptive recovery policy vs each fixed restore path under chaos.
+
+    One pinned workload (deterministic in the step domain — the same kills,
+    the same migrations, the same token schedule for every policy; only the
+    per-migration restore *path* differs) runs under each chaos preset three
+    ways: pinned to snapshot restore, pinned to replay restore, and with the
+    adaptive engine scoring both paths per incident through the online cost
+    model.
+
+    The headline per run is recovery-adjusted goodput: useful tokens over
+    useful tokens plus the token-equivalent recovery overhead
+    (``replayed_tokens + restored_bytes * W_bytes/W_tokens``, the exact
+    weighted cost the adaptive engine minimizes — see
+    ``repro.ft.policy.SCORE_WEIGHTS``).  Both restore paths complete within
+    the admission step, so useful-token counts are identical across
+    policies and the goodput ordering is a pure function of the per-incident
+    path choices.  CI asserts ``adaptive_goodput >= max(fixed)`` on every
+    preset — a pinned deterministic scenario, like the overload smoke.
+    """
+    from repro.ft.policy import SCORE_WEIGHTS
+
+    bytes_per_token = (SCORE_WEIGHTS["transfer_bytes"]
+                       / SCORE_WEIGHTS["replayed_tokens"])
+    spec = WorkloadSpec(
+        n_requests=18, vocab_size=cfg.vocab_size, seed=seed,
+        mean_interarrival_steps=1.0, prompt_len=(4, 16),
+        new_tokens=(8, 32),
+    )
+    workload = build_workload(spec)
+    presets = {
+        "pod": {"kind": "pod", "fail_every_steps": 10.0, "heal_steps": 5.0,
+                "ranks_per_pod": 1, "transfer_steps": 1},
+        "pod_spike": {"kind": "multi", "specs": [
+            {"kind": "pod", "fail_every_steps": 9.0, "heal_steps": 4.0,
+             "ranks_per_pod": 1, "transfer_steps": 1},
+            {"kind": "spike", "mean_interval_steps": 24.0,
+             "duration_steps": 8.0, "magnitude": 3.0},
+        ]},
+    }
+    policies = ("fixed:migrate_snapshot", "fixed:migrate_replay", "adaptive")
+    out = {"workload": spec.to_json(),
+           "bytes_per_token_equiv": bytes_per_token,
+           "policies": list(policies), "presets": {}}
+    ok_all = True
+    for pname, chaos in presets.items():
+        runs = {}
+        for pol in policies:
+            stats = run_mode(cfg, params, rules, flags, ecfg, workload,
+                             n_replicas=3, chaos=chaos, snapshot_cadence=2,
+                             policy=pol)
+            overhead = (stats["replayed_tokens"]
+                        + stats["restored_bytes"] * bytes_per_token)
+            runs[pol] = {
+                "goodput": stats["n_tokens"] / (stats["n_tokens"] + overhead),
+                "overhead_token_equiv": overhead,
+                "n_tokens": stats["n_tokens"],
+                "engine_steps": stats["engine_steps"],
+                "n_kills": stats["n_kills"],
+                "n_migrations": stats["n_migrations"],
+                "n_restore_snapshot": stats["n_restore_snapshot"],
+                "n_restore_replay": stats["n_restore_replay"],
+                "replayed_tokens": stats["replayed_tokens"],
+                "restored_bytes": stats["restored_bytes"],
+                "n_policy_decisions": stats["n_policy_decisions"],
+            }
+        fixed = {p: runs[p]["goodput"] for p in policies if p != "adaptive"}
+        adaptive = runs["adaptive"]["goodput"]
+        ok = all(adaptive >= g for g in fixed.values())
+        ok_all = ok_all and ok
+        out["presets"][pname] = {
+            "chaos": chaos,
+            "policies": runs,
+            "adaptive_goodput": adaptive,
+            "fixed_goodputs": fixed,
+            "adaptive_beats_fixed": ok,
+        }
+    out["adaptive_beats_fixed_all"] = ok_all
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_serve.json")
@@ -399,6 +482,7 @@ def main():
         n_requests=args.overload_requests,
         seed=args.seed if args.overload_seed is None else args.overload_seed,
     )
+    policy = policy_section(cfg, params, rules, flags, ecfg, seed=args.seed)
 
     # the engine section carries the resolved kernel choice alongside the
     # raw knobs: kernel_interpret=None means "backend-derived", so record
@@ -419,6 +503,7 @@ def main():
         "paged_decode": paged,
         "prefix_sharing": sharing,
         "overload": overload,
+        "policy": policy,
         "speedup_tok_s": continuous["tok_s"] / lockstep["tok_s"],
         "speedup_steps": lockstep["engine_steps"] / continuous["engine_steps"],
         "continuous_beats_lockstep":
@@ -464,6 +549,15 @@ def main():
         100 * om["preempt"]["goodput_frac"],
         om["preempt"]["n_preemptions"], om["preempt"]["ttft_steps_p99"],
     )
+    for pname, p in policy["presets"].items():
+        _log.info(
+            "policy [%s]: adaptive goodput %.4f vs fixed %s "
+            "(adaptive_beats_fixed=%s)",
+            pname, p["adaptive_goodput"],
+            {k.split(":", 1)[1]: round(v, 4)
+             for k, v in p["fixed_goodputs"].items()},
+            p["adaptive_beats_fixed"],
+        )
     _log.info("wrote %s", args.out)
     if args.obs_out:
         import sys

@@ -377,6 +377,95 @@ def run_statexfer_bench(
     return result
 
 
+def run_policy_bench(
+    steps: int = 28,
+    out_path: str = "BENCH_policy.json",
+    verbose: bool = True,
+):
+    """Adaptive recovery policy vs each fixed restore path on REAL runs.
+
+    The same reduced training run (live statexfer subsystem, deterministic
+    chaos preset) executes under each recovery policy: pinned to peer
+    restore, pinned to checkpoint restore, and the adaptive engine scoring
+    both paths per rank_drop through the online cost model.
+
+    Restore-path choice never changes the membership trajectory — both
+    paths materialize the rejoining rank within the same reshard — so the
+    effective-DP goodput (mean serving fraction ``(dp_size -
+    pending_rejoin) / n_dp`` over the run) is equal-or-better for adaptive
+    by construction, and CI asserts exactly that (``adaptive >= fixed`` per
+    preset).  What *does* differ is where the recovery bytes land
+    (peer-fetch vs checkpoint-restore ledgers) and what the policy engine
+    pinned: those ride along per run, with the loss pinned equal across
+    policies as a same-math guard.
+    """
+    import json
+
+    from repro.configs.base import (
+        MeCeFOConfig, ShapeConfig, TrainConfig, get_config, reduced,
+    )
+    from repro.launch.train import Trainer
+
+    cfg = reduced(get_config("llama-350m"), dtype="float32")
+    shape = ShapeConfig("bench", 128, 8, "train")
+    tc = TrainConfig(steps=steps, learning_rate=3e-4)
+    mecefo = MeCeFOConfig(mode="dynamic", rank=16, svd_period=20)
+    n_dp = 4
+    presets = ("elastic", "kitchen-sink")
+    policies = ("fixed:peer_restore", "fixed:ckpt_restore", "adaptive")
+    result = {"steps": steps, "n_dp": n_dp, "policies": list(policies),
+              "presets": {}}
+    ok_all = True
+    for preset in presets:
+        runs = {}
+        for pol in policies:
+            trainer = Trainer(
+                cfg, shape, tc, mecefo=mecefo,
+                injectors=chaos_preset(preset, SCENARIOS["none"]),
+                n_dp=n_dp, n_stages=4, step_time_s=3600.0, seed=0,
+                statexfer=True, snapshot_every=2, ft_policy=pol,
+            )
+            hist = trainer.run(log_every=0)
+            acc = trainer.controller.accounting
+            pol_engine = trainer.controller.policy
+            goodput = float(np.mean(
+                [(h["dp_size"] - h["pending_rejoin"]) / n_dp for h in hist]
+            ))
+            runs[pol] = {
+                "goodput": goodput,
+                "final_loss": hist[-1]["loss"],
+                "n_failovers": int(acc.n_failovers),
+                "n_rejoins": int(acc.n_rejoins),
+                "peer_fetch_bytes": int(acc.peer_fetch_bytes),
+                "ckpt_restore_bytes": int(acc.ckpt_restore_bytes),
+                "n_policy_decisions": len(pol_engine.decisions),
+            }
+        fixed = {p: runs[p]["goodput"] for p in policies if p != "adaptive"}
+        adaptive = runs["adaptive"]["goodput"]
+        ok = all(adaptive >= g for g in fixed.values())
+        ok_all = ok_all and ok
+        result["presets"][preset] = {
+            "policies": runs,
+            "adaptive_goodput": adaptive,
+            "fixed_goodputs": fixed,
+            "adaptive_beats_fixed": ok,
+        }
+        if verbose:
+            print(
+                f"policy [{preset}]: adaptive goodput {adaptive:.4f} vs "
+                + " ".join(f"{p.split(':', 1)[1]}={g:.4f}"
+                           for p, g in fixed.items())
+                + f"  (adaptive_beats_fixed={ok})"
+            )
+    result["adaptive_beats_fixed_all"] = ok_all
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    if verbose:
+        print(f"policy bench -> {out_path} "
+              f"(adaptive_beats_fixed_all={ok_all})")
+    return result
+
+
 def main():
     import argparse
 
@@ -390,6 +479,9 @@ def main():
     ap.add_argument("--statexfer-bench", action="store_true",
                     help="measure real snapshot overhead + rejoin transfer "
                          "latency vs the modeled numbers (BENCH_statexfer.json)")
+    ap.add_argument("--policy-bench", action="store_true",
+                    help="adaptive recovery policy vs each fixed restore "
+                         "path on real training runs (BENCH_policy.json)")
     ap.add_argument("--snapshot-every", type=int, default=2)
     ap.add_argument("--steps", type=int, default=40)
     args = ap.parse_args()
@@ -400,6 +492,8 @@ def main():
         return run_statexfer_bench(
             steps=args.steps, snapshot_every=args.snapshot_every
         )
+    if args.policy_bench:
+        return run_policy_bench(steps=args.steps)
     if args.chaos or args.trace:
         return run_chaos_table(chaos=args.chaos, trace_path=args.trace)
     rows = run_table2()

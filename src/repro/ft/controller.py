@@ -88,6 +88,11 @@ class ReshardPlan:
     shares: Dict[int, int]
     transfer_bytes: int
     source: str  # "peer" (replicated params) | "ckpt" (FSDP)
+    # per-rejoining-rank restore source chosen by the policy engine,
+    # ((rank, "peer"|"ckpt"), ...); empty -> every rank uses ``source``
+    # (the legacy static dispatch).  A tuple-of-pairs keeps the plan
+    # hashable; consumers dict() it.
+    sources: Tuple[Tuple[int, str], ...] = ()
 
     @property
     def dp_size(self) -> int:
@@ -116,7 +121,14 @@ class FTController:
     incidents: Optional[TrainIncidents] = field(
         default_factory=TrainIncidents
     )
+    # adaptive recovery-path selection (repro.ft.policy.PolicyEngine);
+    # None -> the legacy static dispatch driven by params_replicated
+    policy: Optional[Any] = None
+    # current chaos step + straggler set, maintained by apply_chaos so
+    # policy decisions made inside update_plan carry the right step/kind
+    step: int = 0
     _step_times: list = field(default_factory=list)
+    _slow: Set[Tuple[int, int]] = field(default_factory=set)
 
     def __post_init__(self):
         if self.plan is None:
@@ -172,6 +184,17 @@ class FTController:
                 self.incidents.on_failover(
                     dev, fetch_bytes, self.params_replicated
                 )
+            if self.policy is not None:
+                # in-step failover is always the MeCeFO takeover — the
+                # decision is pinned anyway so replay can assert the
+                # policy consulted the same state
+                kind = "straggler" if dev in self._slow else "device_fail"
+                dec = self.policy.commit(self.policy.decide(
+                    kind, f"device:{dev[0]}:{dev[1]}", self.step
+                ))
+                if self.incidents is not None:
+                    self.incidents.note_decision(("device",) + tuple(dev),
+                                                 dec)
         for dev in recovered:
             if dev[0] in self.plan.detached:
                 # healed hardware of a detached rank: its state resync is the
@@ -190,24 +213,38 @@ class FTController:
             for rank in sorted(new_dropped - old_dropped):
                 self.incidents.on_rank_drop(rank)
         rejoined = tuple(sorted(self.plan.detached - new_plan.detached))
+        rejoin_sources: Tuple[Tuple[int, str], ...] = ()
         if rejoined:
-            # a rejoining rank resyncs its FULL pipeline, not one stage
+            # a rejoining rank resyncs its FULL pipeline, not one stage;
+            # the restore source is chosen per rank — by the policy
+            # engine when one is wired, by params_replicated otherwise
             full_state = fetch_bytes * new_plan.n_stages
             self.accounting.n_rejoins += len(rejoined)
-            if self.params_replicated:
-                self.accounting.peer_fetch_bytes += full_state * len(rejoined)
-            else:
-                self.accounting.ckpt_restore_bytes += full_state * len(rejoined)
-            if self.incidents is not None:
-                for rank in rejoined:
-                    self.incidents.on_rejoin(
-                        rank, full_state, self.params_replicated
-                    )
+            srcs = []
+            for rank in rejoined:
+                dec = None
+                if self.policy is not None:
+                    dec = self.policy.commit(self.policy.decide(
+                        "rank_drop", f"rank:{rank}", self.step,
+                        valid={"peer_restore": self.params_replicated},
+                    ))
+                use_peer = (dec["chosen"] == "peer_restore" if dec is not None
+                            else self.params_replicated)
+                if use_peer:
+                    self.accounting.peer_fetch_bytes += full_state
+                else:
+                    self.accounting.ckpt_restore_bytes += full_state
+                srcs.append((rank, "peer" if use_peer else "ckpt"))
+                if self.incidents is not None:
+                    self.incidents.on_rejoin(rank, full_state, use_peer)
+                    if dec is not None:
+                        self.incidents.note_decision(("rank", rank), dec)
+            rejoin_sources = tuple(srcs)
         if self.plan.detached != new_plan.detached:
             # a formal membership change (elastic resize) — transient derived
             # drops zero-weight their slice instead and emit no reshard
             self.last_reshard = self._make_reshard(
-                self.plan, new_plan, rejoined, fetch_bytes
+                self.plan, new_plan, rejoined, fetch_bytes, rejoin_sources
             )
         self.plan = new_plan
         return True
@@ -218,6 +255,7 @@ class FTController:
         new_plan: NDBPlan,
         rejoined: Tuple[int, ...],
         fetch_bytes: int,
+        sources: Tuple[Tuple[int, str], ...] = (),
     ) -> ReshardPlan:
         from repro.data.pipeline import rank_batch_shares
 
@@ -231,6 +269,7 @@ class FTController:
             shares=rank_batch_shares(self.global_batch, self.n_dp, new_active),
             transfer_bytes=fetch_bytes * new_plan.n_stages * len(rejoined),
             source="peer" if self.params_replicated else "ckpt",
+            sources=sources,
         )
 
     def record_transfer(self, receipt) -> None:
@@ -263,7 +302,10 @@ class FTController:
         with obs.span("controller.apply_chaos"):
             slow = self.straggler_devices(outcome.device_times)
             # the incident clock must advance before update_plan: the
-            # attribution hooks below fire from inside it
+            # attribution hooks below fire from inside it (as do policy
+            # decisions, which stamp the current step/straggler set)
+            self.step = int(outcome.step)
+            self._slow = set(slow)
             if self.incidents is not None:
                 self.incidents.begin_step(outcome.step, slow)
             plan = outcome.plan

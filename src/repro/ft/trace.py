@@ -43,6 +43,10 @@ class TraceHeader:
     # elastic DP membership bookkeeping was active during recording; replay
     # must re-enable it so the derived rejoin events are regenerated.
     elastic: bool = False
+    # recovery-policy spec ("adaptive" | "fixed:<path>" | "" for the legacy
+    # static dispatch); replay re-enables the same engine so the pinned
+    # policy_decision records can be re-derived and matched.
+    policy: str = ""
 
     def to_json(self) -> dict:
         d = {
@@ -52,6 +56,8 @@ class TraceHeader:
         }
         if self.elastic:
             d["elastic"] = True
+        if self.policy:
+            d["policy"] = self.policy
         return d
 
     @classmethod
@@ -62,6 +68,7 @@ class TraceHeader:
             version=int(d.get("version", 1)),
             injectors=list(d.get("injectors", [])),
             elastic=bool(d.get("elastic", False)),
+            policy=str(d.get("policy", "")),
         )
 
 
@@ -90,6 +97,8 @@ class Trace:
     header: TraceHeader
     events: List[FailureEvent]
     footer: Optional[TraceFooter] = None
+    # pinned policy_decision records, in commit order (repro.ft.policy)
+    decisions: List[dict] = field(default_factory=list)
 
     def cause_events(self) -> List[FailureEvent]:
         return [e for e in self.events if e.kind in CAUSE_KINDS]
@@ -102,6 +111,9 @@ class TraceRecorder:
         self.path = Path(path)
         self._fh = None
         self._n_events = 0
+        # set by the trainer before write_header when a policy engine is
+        # wired; pinned in the header so replay re-derives decisions
+        self.policy = ""
 
     def write_header(self, engine) -> None:
         self.path.parent.mkdir(parents=True, exist_ok=True)
@@ -111,6 +123,7 @@ class TraceRecorder:
             step_time_s=engine.step_time_s, seed=engine.seed,
             injectors=[inj.describe() for inj in engine.injectors],
             elastic=getattr(engine, "elastic", False),
+            policy=self.policy,
         )
         self._fh.write(json.dumps(header.to_json()) + "\n")
 
@@ -120,6 +133,14 @@ class TraceRecorder:
         for ev in events:
             self._fh.write(json.dumps(ev.to_json()) + "\n")
             self._n_events += 1
+
+    def record_decision(self, decision: dict) -> None:
+        """Pin one committed policy decision (not counted in n_events —
+        the footer's event count stays comparable across policies)."""
+        if self._fh is None:
+            return
+        self._fh.write(json.dumps({"type": "policy_decision", **decision})
+                       + "\n")
 
     def close(self, total_steps: int,
               accounting: Optional[Dict[str, int]] = None) -> None:
@@ -136,6 +157,7 @@ def load_trace(path) -> Trace:
     header = None
     footer = None
     events: List[FailureEvent] = []
+    decisions: List[dict] = []
     with Path(path).open() as fh:
         for line in fh:
             line = line.strip()
@@ -147,13 +169,17 @@ def load_trace(path) -> Trace:
                 header = TraceHeader.from_json(d)
             elif t == "event":
                 events.append(FailureEvent.from_json(d))
+            elif t == "policy_decision":
+                decisions.append({k: v for k, v in d.items()
+                                  if k != "type"})
             elif t == "footer":
                 footer = TraceFooter.from_json(d)
             else:
                 raise ValueError(f"unknown trace record type {t!r}")
     if header is None:
         raise ValueError(f"trace {path} has no header record")
-    return Trace(header=header, events=events, footer=footer)
+    return Trace(header=header, events=events, footer=footer,
+                 decisions=decisions)
 
 
 def replay_engine(trace: Trace, recorder=None):
@@ -176,12 +202,19 @@ def replay_engine(trace: Trace, recorder=None):
 
 
 def verify_replay(trace: Trace, engine,
-                  accounting: Optional[Dict[str, int]] = None) -> List[str]:
+                  accounting: Optional[Dict[str, int]] = None,
+                  decisions: Optional[List[dict]] = None) -> List[str]:
     """Compare a replayed engine (and optional accounting) against a trace.
 
+    ``decisions`` is the replay's re-derived policy_decision list; when
+    given, it must match the trace's pinned decisions bit-exactly.
     Returns a list of human-readable mismatch descriptions (empty = exact).
     """
     problems: List[str] = []
+    if decisions is not None:
+        from repro.ft.policy import verify_decisions
+
+        problems.extend(verify_decisions(trace.decisions, decisions))
     rec, got = trace.events, engine.events
     if len(rec) != len(got):
         problems.append(f"event count: recorded {len(rec)} vs replayed {len(got)}")

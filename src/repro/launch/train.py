@@ -77,6 +77,7 @@ class Trainer:
         elastic: Optional[bool] = None,
         statexfer: bool = False,
         snapshot_every: int = 1,
+        ft_policy: Optional[str] = None,
     ):
         self.cfg, self.shape, self.train_cfg = cfg, shape, train
         self.parallel = parallel or ParallelConfig(
@@ -103,10 +104,23 @@ class Trainer:
             )
             h = self.replay_trace.header
             n_dp, n_stages, step_time_s = h.n_dp, h.n_stages, h.step_time_s
+            # the header's policy wins on replay: decisions must re-derive
+            # from the same engine the recording ran
+            ft_policy = h.policy or None
+        self.policy_spec = ft_policy or ""
+        if recorder is not None:
+            recorder.policy = self.policy_spec
         self.controller = FTController(
             cfg=cfg, mecefo=mecefo, n_dp=n_dp, n_stages=min(n_stages, cfg.n_layers),
             global_batch=shape.global_batch,
             params_replicated=not self.parallel.fsdp,
+        )
+        from repro.ft.policy import make_policy
+
+        self.controller.policy = make_policy(
+            ft_policy,
+            cost=(self.controller.incidents.mgr.cost
+                  if self.controller.incidents is not None else None),
         )
         if self.replay_trace is not None:
             if self.replay_trace.header.n_stages != self.controller.n_stages:
@@ -228,6 +242,12 @@ class Trainer:
                 step_idx = int(self.state.step)
                 outcome = self.process.step(step_idx)
                 changed, slow = self.controller.apply_chaos(outcome)
+                if (self.controller.policy is not None
+                        and self.process.recorder is not None):
+                    # pin this step's committed decisions right after its
+                    # events — replay re-derives and verifies them
+                    for dec in self.controller.policy.drain():
+                        self.process.recorder.record_decision(dec)
                 if changed and self.mecefo.mode != "off":
                     pass  # static mode: next _get_step call compiles/caches
                 if self.xfer is not None:
@@ -350,6 +370,8 @@ class Trainer:
         return verify_replay(
             self.replay_trace, self.process,
             accounting=self.controller.accounting.as_dict(),
+            decisions=(self.controller.policy.decisions
+                       if self.controller.policy is not None else None),
         )
 
     def resume_from_checkpoint(self) -> bool:
@@ -396,6 +418,13 @@ def main(argv: Optional[List[str]] = None) -> int:
         "--snapshot-every", type=int, default=1, metavar="N",
         help="statexfer snapshot cadence in steps (default 1)",
     )
+    ap.add_argument(
+        "--ft-policy", metavar="SPEC", default=None,
+        help="recovery-policy selection: 'adaptive' (pick the cheapest "
+             "path per event from CostModel estimates, priors until "
+             "confident) or 'fixed:<path>' (e.g. fixed:peer_restore); "
+             "default: the legacy static dispatch",
+    )
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgdm"])
@@ -422,6 +451,13 @@ def main(argv: Optional[List[str]] = None) -> int:
         ap.error(f"--trace mode must be 'record' or 'replay', got {trace_mode!r}")
     if args.replay_record and trace_mode != "replay":
         ap.error("--replay-record requires --trace replay PATH")
+    if args.ft_policy is not None:
+        from repro.ft.policy import parse_policy
+
+        try:
+            parse_policy(args.ft_policy)
+        except ValueError as e:
+            ap.error(str(e))
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -456,11 +492,13 @@ def main(argv: Optional[List[str]] = None) -> int:
         trace_replay=replay_trace,
         statexfer=args.statexfer,
         snapshot_every=args.snapshot_every,
+        ft_policy=args.ft_policy,
     )
     run_meta = {
         "run": "train", "arch": args.arch,
         "mecefo": args.mecefo, "scenario": args.scenario,
         "chaos": args.chaos, "statexfer": args.statexfer,
+        "ft_policy": trainer.policy_spec or None,
     }
     disarm = None
     if args.obs_out or args.incidents_out:

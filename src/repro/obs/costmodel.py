@@ -31,6 +31,11 @@ COST_DIMS: Tuple[str, ...] = (
     "lost_steps", "transfer_bytes", "replayed_tokens", "wall_s",
 )
 
+# estimates below this many closed incidents report ``confident: false``
+# — the adaptive policy keeps using its priors until then (one noisy
+# sample must not flip a recovery decision)
+MIN_SAMPLES = 3
+
 # detector names (== the synthetic incident kinds they open); documented
 # in docs/observability.md, two-way pinned by tests/test_docs.py
 DETECTORS: Tuple[str, ...] = (
@@ -56,9 +61,10 @@ def _median(xs) -> float:
 class CostModel:
     """Running per-(kind, path) cost statistics over closed incidents."""
 
-    def __init__(self, reg: Optional[_registry.MetricsRegistry] = None
-                 ) -> None:
+    def __init__(self, reg: Optional[_registry.MetricsRegistry] = None,
+                 min_samples: int = MIN_SAMPLES) -> None:
         self._reg = reg or _registry.get_registry()
+        self.min_samples = int(min_samples)
         self._samples: Dict[Tuple[str, str], Dict[str, List[float]]] = {}
         self._counters: Dict[Tuple[str, Tuple[str, str]], object] = {}
         self._hists: Dict[Tuple[str, str], object] = {}
@@ -113,8 +119,9 @@ class CostModel:
         dims = self._samples.get((kind, path))
         if dims is None:
             return None
-        out: Dict = {"kind": kind, "path": path,
-                     "count": len(dims["lost_steps"])}
+        count = len(dims["lost_steps"])
+        out: Dict = {"kind": kind, "path": path, "count": count,
+                     "confident": count >= self.min_samples}
         for d in COST_DIMS:
             xs = dims[d]
             if not xs:

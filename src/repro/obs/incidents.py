@@ -99,6 +99,10 @@ class Incident:
     wall_s: Optional[float] = None
     goodput_delta: Optional[float] = None
     pending: set = field(default_factory=set)  # serve: migrant rids in flight
+    # policy decisions acted on for this incident (repro.ft.policy
+    # records; unpinned here — the trace pins them as policy_decision
+    # records, the incident copy is for the operator CLI audit)
+    decisions: List[Dict] = field(default_factory=list)
 
     @property
     def lost_steps(self) -> int:
@@ -139,6 +143,7 @@ class Incident:
             "wall_s": self.wall_s,
             "goodput_delta": self.goodput_delta,
             "frames": self.frames,
+            "decisions": self.decisions,
         }
 
 
@@ -376,6 +381,14 @@ class TrainIncidents:
             self.mgr.close(key, self.mgr.step)
         # else: the incident closes when the rank's receipt lands
 
+    def note_decision(self, key: Tuple, decision: Dict) -> None:
+        """Mirror a committed policy decision onto ``key``'s incident
+        (called by the controller right after the on_* mirror, so the
+        incident exists — possibly already closed, via ``_last``)."""
+        inc = self.mgr.incident_for(key)
+        if inc is not None:
+            inc.decisions.append(decision)
+
     def on_receipt(self, receipt) -> None:
         """A measured TransferReceipt landed (statexfer runs only)."""
         if not receipt.ok or receipt.source not in ("peer", "ckpt"):
@@ -459,6 +472,7 @@ class ServeIncidents:
         self._noted_kills: Dict[int, List[int]] = {}
         self._preempt_tokens: Dict[int, int] = {}
         self._migrant_owner: Dict[int, Tuple] = {}
+        self._pending_dec: Dict[int, List[Dict]] = {}
 
     # hooks from inside ReplicaSet (no ServeEvent carries these details)
     def note_kill(self, replica: int, migrant_rids: List[int]) -> None:
@@ -466,6 +480,27 @@ class ServeIncidents:
 
     def note_preempt(self, rid: int, tokens_owed: int) -> None:
         self._preempt_tokens[rid] = int(tokens_owed)
+
+    def note_decision(self, rid: int, decision: Dict) -> None:
+        """A policy decision was acted on for migrant ``rid``; it attaches
+        to the owning incident when the migrate/shed event settles."""
+        self._pending_dec.setdefault(rid, []).append(decision)
+
+    def owner_kind(self, rid: int) -> str:
+        """The incident kind a restore of ``rid`` will be costed under —
+        the estimate the policy should consult for it.  Same-step kills
+        and preemptions are visible via the note_* staging maps (their
+        events reach on_step only after the admission phase)."""
+        owner = self._migrant_owner.get(rid)
+        if owner is not None:
+            inc = self.mgr.incident_for(owner)
+            if inc is not None:
+                return inc.kind
+        if any(rid in rids for rids in self._noted_kills.values()):
+            return "replica_kill"
+        if rid in self._preempt_tokens:
+            return "preemption"
+        return "migration"
 
     def on_step(self, t: int, events) -> None:
         m = self.mgr
@@ -498,6 +533,7 @@ class ServeIncidents:
                 m.map_event(t, ev.kind, inc)
             elif ev.kind == "migrate":
                 inc = self._owner(ev.req, t)
+                inc.decisions.extend(self._pending_dec.pop(ev.req, ()))
                 inc.add(n_migrations=1, replayed_tokens=ev.replayed,
                         restored_bytes=ev.nbytes)
                 if ev.path == "snapshot":
@@ -507,6 +543,7 @@ class ServeIncidents:
                 m.map_event(t, ev.kind, inc)
                 self._settle(inc, ev.req, t)
             elif ev.kind == "shed":
+                self._pending_dec.pop(ev.req, None)
                 owner = self._migrant_owner.get(ev.req)
                 if owner is not None and m.open_incident(owner) is not None:
                     inc = m.open_incident(owner)
@@ -720,6 +757,29 @@ def render_incidents(records: List[Dict],
             f"[{r['open_step']}..{close}] path={r['path']:<16} "
             f"{acct}{(' ' + ' '.join(extras)) if extras else ''}"
         )
+        for dec in r.get("decisions") or ():
+            # estimated-vs-realized audit: the chosen candidate's score
+            # vs the same weighting over what the incident actually cost
+            from repro.ft.policy import realized_score
+            cands = dec.get("candidates") or []
+            chosen = dec.get("chosen")
+            est = next((c["score"] for c in cands
+                        if c.get("path") == chosen), None)
+            others = " ".join(
+                f"{c['path']}={c['score']:.4g}[{c['source'][0]}]"
+                + ("" if c.get("valid", True) else "!")
+                for c in cands if c.get("path") != chosen
+            )
+            parts = [
+                f"       policy@{dec.get('step')}: chose {chosen}",
+                f"({dec.get('reason')})",
+                f"est={est:.4g}" if est is not None else "est=-",
+            ]
+            if r.get("close_step") is not None:
+                parts.append(f"realized={realized_score(r):.4g}")
+            if others:
+                parts.append(f"vs {others}")
+            lines.append(" ".join(parts))
 
     # per-(kind x path) cost table over closed, non-synthetic incidents
     by_pair: Dict[Tuple[str, str], List[Dict]] = {}

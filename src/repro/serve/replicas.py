@@ -158,6 +158,7 @@ class ReplicaSet:
         snapshot_cadence: int = 1,
         layout_seed: Optional[int] = None,
         recorder=None,
+        policy: str = "",
     ):
         self.cfg, self.params = cfg, params
         self.rules, self.flags, self.ecfg = rules, flags, ecfg
@@ -206,6 +207,13 @@ class ReplicaSet:
         # incident pipeline (pure side channel): every failover/overload
         # acct increment is mirrored onto exactly one incident
         self.incidents = obs.ServeIncidents()
+        # adaptive restore-path selection for migrants (repro.ft.policy);
+        # empty spec -> the legacy snapshot-first dispatch
+        from repro.ft.policy import make_policy
+
+        self.policy_spec = policy or ""
+        self.policy = make_policy(policy or None,
+                                  cost=self.incidents.mgr.cost)
 
     def _fresh_engine(self, r: int) -> ServeEngine:
         rng = (
@@ -313,6 +321,9 @@ class ReplicaSet:
         self.incidents.on_step(t, out)
         if self.recorder is not None:
             self.recorder.record(out)
+            if self.policy is not None:
+                for dec in self.policy.drain():
+                    self.recorder.record_decision(dec)
         return out
 
     def _kill(self, r: int, t: int, out: List[ServeEvent]) -> None:
@@ -401,13 +412,28 @@ class ReplicaSet:
             if rs.emitted:  # migrated / re-queued: restore, don't restart
                 flush()
                 snap = self.registry.get(rs.rid)
+                dec = None
+                if self.policy is not None:
+                    # decide the restore path up front; forcing the replay
+                    # path just drops the snapshot from the admission call
+                    dec = self.policy.decide(
+                        self.incidents.owner_kind(rs.rid),
+                        f"req:{rs.rid}", t,
+                        valid={"migrate_snapshot": snap is not None},
+                    )
+                    if dec["chosen"] == "migrate_replay":
+                        snap = None
                 with obs.span("router.restore"):
                     res = eng.try_admit_restored(rs, snap, t)
                     if res is None and preempt_for(rs):
                         res = eng.try_admit_restored(rs, snap, t)
                 if res is None:
-                    break
+                    break  # the undone decision is discarded (re-derived
+                    # identically when the retry actually admits)
                 self.queue.pop(0)
+                if dec is not None:
+                    self.policy.commit(dec)
+                    self.incidents.note_decision(rs.rid, dec)
                 path, replayed = res
                 key = "n_restore_snapshot" if path == "snapshot" else \
                     "n_restore_replay"

@@ -124,6 +124,7 @@ def build_replica_set(
         snapshot_cadence=header.snapshot_cadence,
         layout_seed=header.layout_seed,
         recorder=recorder,
+        policy=header.policy,
     )
     return rs, workload
 
@@ -178,6 +179,8 @@ def replay_serve_trace(path, replay_record: Optional[str] = None,
     return verify_serve_replay(
         trace, rset.events, accounting=result.accounting,
         streams_sha256=result.streams_sha256(),
+        decisions=(rset.policy.decisions
+                   if rset.policy is not None else None),
     )
 
 
@@ -253,6 +256,7 @@ def header_from_args(args) -> ServeTraceHeader:
         snapshot_cadence=args.snapshot_cadence,
         layout_seed=args.seed,
         engine=asdict(ecfg), workload=spec.to_json(), chaos=chaos,
+        policy=args.ft_policy or "",
     )
 
 
@@ -322,6 +326,12 @@ def main(argv=None) -> int:
     ap.add_argument("--prefix-groups", type=int, default=0,
                     help="distinct system-prompt populations (needs "
                          "--shared-prefix)")
+    ap.add_argument("--ft-policy", default="", metavar="SPEC",
+                    help="recovery-policy engine: 'adaptive' scores every "
+                         "applicable restore path with the online cost "
+                         "model and picks the cheapest; 'fixed:<path>' "
+                         "pins one (migrate_snapshot | migrate_replay). "
+                         "Empty = legacy static dispatch.")
     ap.add_argument("--priority-classes", default="",
                     help="prio:weight:deadline[,...] request classes, e.g. "
                          "'2:0.2:0,1:0.3:48,0:0.5:32'")
@@ -339,10 +349,17 @@ def main(argv=None) -> int:
                          "render with 'python -m repro.obs incidents PATH'")
     args = ap.parse_args(argv)
     obs.logging_setup()
+    if args.ft_policy:
+        from repro.ft.policy import parse_policy
+        try:
+            parse_policy(args.ft_policy)
+        except ValueError as e:
+            ap.error(str(e))
 
     run_meta = {
         "run": "serve", "config": args.config,
         "chaos": args.chaos, "admission": args.admission,
+        "ft_policy": args.ft_policy or None,
     }
     holder: dict = {"rset": None}
 

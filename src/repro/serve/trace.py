@@ -115,6 +115,10 @@ class ServeTraceHeader:
     # bitwise contract between implementations is what lets a trace
     # recorded on one backend replay on another.
     kernel_impl: str = ""
+    # recovery-policy spec ("adaptive" | "fixed:<path>" | ""); unlike
+    # kernel_impl this IS replayed — the re-simulation must run the same
+    # policy engine so the pinned policy_decision records re-derive.
+    policy: str = ""
     version: int = SERVE_TRACE_VERSION
 
     def to_json(self) -> dict:
@@ -132,6 +136,8 @@ class ServeTraceHeader:
         }
         if self.kernel_impl:
             d["kernel_impl"] = self.kernel_impl
+        if self.policy:
+            d["policy"] = self.policy
         return d
 
     @classmethod
@@ -145,6 +151,7 @@ class ServeTraceHeader:
             snapshot_cadence=int(d.get("snapshot_cadence", 1)),
             layout_seed=int(d.get("layout_seed", 0)),
             kernel_impl=str(d.get("kernel_impl", "")),
+            policy=str(d.get("policy", "")),
             engine=dict(d["engine"]), workload=dict(d["workload"]),
             chaos=dict(d.get("chaos", {})),
             version=int(d.get("version", 1)),
@@ -180,6 +187,8 @@ class ServeTrace:
     header: ServeTraceHeader
     events: List[ServeEvent]
     footer: Optional[ServeTraceFooter] = None
+    # pinned policy_decision records, in commit order (repro.ft.policy)
+    decisions: List[dict] = field(default_factory=list)
 
 
 class ServeTraceRecorder:
@@ -202,6 +211,13 @@ class ServeTraceRecorder:
             self._fh.write(json.dumps(ev.to_json()) + "\n")
             self._n_events += 1
 
+    def record_decision(self, decision: dict) -> None:
+        """Pin one committed policy decision (not counted in n_events)."""
+        if self._fh is None:
+            return
+        self._fh.write(json.dumps({"type": "policy_decision", **decision})
+                       + "\n")
+
     def close(self, total_steps: int, streams_sha256: str,
               accounting: Optional[Dict[str, int]] = None) -> None:
         if self._fh is None:
@@ -220,6 +236,7 @@ def load_serve_trace(path) -> ServeTrace:
     header = None
     footer = None
     events: List[ServeEvent] = []
+    decisions: List[dict] = []
     with Path(path).open() as fh:
         for line in fh:
             line = line.strip()
@@ -231,13 +248,17 @@ def load_serve_trace(path) -> ServeTrace:
                 header = ServeTraceHeader.from_json(d)
             elif t == "event":
                 events.append(ServeEvent.from_json(d))
+            elif t == "policy_decision":
+                decisions.append({k: v for k, v in d.items()
+                                  if k != "type"})
             elif t == "footer":
                 footer = ServeTraceFooter.from_json(d)
             else:
                 raise ValueError(f"unknown serve trace record type {t!r}")
     if header is None:
         raise ValueError(f"serve trace {path} has no header record")
-    return ServeTrace(header=header, events=events, footer=footer)
+    return ServeTrace(header=header, events=events, footer=footer,
+                      decisions=decisions)
 
 
 def verify_serve_replay(
@@ -245,10 +266,16 @@ def verify_serve_replay(
     events: Sequence[ServeEvent],
     accounting: Optional[Dict[str, int]] = None,
     streams_sha256: Optional[str] = None,
+    decisions: Optional[List[dict]] = None,
 ) -> List[str]:
     """Mismatch descriptions between a recorded trace and a re-simulation
-    (empty list = bit-exact replay)."""
+    (empty list = bit-exact replay).  ``decisions`` is the re-derived
+    policy_decision list; when given it must match the pinned one."""
     problems: List[str] = []
+    if decisions is not None:
+        from repro.ft.policy import verify_decisions
+
+        problems.extend(verify_decisions(trace.decisions, decisions))
     rec = trace.events
     if len(rec) != len(events):
         problems.append(

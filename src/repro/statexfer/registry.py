@@ -61,6 +61,9 @@ class StateTransferRegistry:
         self.receipts: List[TransferReceipt] = []
         self.last_restored: Dict[int, Tree] = {}
         self.pending: Set[int] = set()
+        # policy-chosen restore source per rank ("peer" | "ckpt"), carried
+        # from ReshardPlan.sources so pending retries honor the same choice
+        self._prefer: Dict[int, str] = {}
         # training-thread stall joining an in-flight cycle before a reshard
         # or retry reads the store — transfer-execution cost, kept separate
         # from the cadence handoff time in SnapshotManager.blocked_s
@@ -125,13 +128,15 @@ class StateTransferRegistry:
         *pre-resize* membership (the ring it was actually replicating to);
         ``execute_reshard`` still requires that holder to have survived.
         """
+        prefer = dict(getattr(plan, "sources", ()) or ())
+        self._prefer.update(prefer)
         with obs.span("reshard.execute"):
             self._join_for_transfer()
             out = execute_reshard(
                 plan, state, step, self.store,
                 ring_peers(plan.old_active, self.domain_of),
                 replicated=self.replicated, ckpt_like=ckpt_like,
-                ckpt_dir=ckpt_dir,
+                ckpt_dir=ckpt_dir, prefer=prefer or None,
             )
         # a pending rejoiner that dropped again leaves the pending set: its
         # detach pin is now the state a future rejoin must restore, and a
@@ -151,13 +156,20 @@ class StateTransferRegistry:
         self._join_for_transfer()  # deterministic store content (on_reshard)
         done: List[TransferReceipt] = []
         for rank in sorted(self.pending):
-            receipt, tree = (
-                restore_from_peer(rank, step, self.store)
-                if self.replicated else (None, None)
-            )
-            if receipt is None:
-                receipt, tree = restore_from_ckpt(rank, step, ckpt_like,
-                                                  ckpt_dir)
+            want = self._prefer.get(
+                rank, "peer" if self.replicated else "ckpt")
+            order = ("ckpt", "peer") if want == "ckpt" else ("peer", "ckpt")
+            receipt = tree = None
+            for source in order:
+                if source == "peer":
+                    if not self.replicated:
+                        continue
+                    receipt, tree = restore_from_peer(rank, step, self.store)
+                else:
+                    receipt, tree = restore_from_ckpt(rank, step, ckpt_like,
+                                                      ckpt_dir)
+                if receipt is not None:
+                    break
             if receipt is None:
                 continue
             self.pending.discard(rank)

@@ -107,6 +107,7 @@ def execute_reshard(
     replicated: bool = True,
     ckpt_like: Optional[Tree] = None,
     ckpt_dir: Optional[str] = None,
+    prefer: Optional[Dict[int, str]] = None,
 ) -> ReshardOutcome:
     """Run one resize for real: pin dropped ranks' state, restore rejoiners.
 
@@ -114,6 +115,12 @@ def execute_reshard(
     the same resize are dropped, so a rank whose peer survives keeps its
     replica while a rank whose peer died in the same outage loses it (and
     will fall back to the checkpoint on rejoin).
+
+    ``prefer`` maps a rejoining rank to the restore source the policy
+    engine chose ("peer" | "ckpt"); the other source stays as fallback so
+    a mispredicted choice still recovers (the receipt then records the
+    realized source, which is what the incident pins).  Absent ranks use
+    the legacy dispatch: peer first when ``replicated``, else checkpoint.
     """
     out = ReshardOutcome()
     if replicated:
@@ -128,14 +135,19 @@ def execute_reshard(
         store.lose_holder(rank)
 
     for rank in plan.rejoined:
-        if replicated:
-            receipt, tree = restore_from_peer(rank, step, store)
+        want = (prefer or {}).get(rank, "peer" if replicated else "ckpt")
+        order = ("ckpt", "peer") if want == "ckpt" else ("peer", "ckpt")
+        receipt = tree = None
+        for source in order:
+            if source == "peer":
+                if not replicated:
+                    continue  # FSDP shards: no peer replica exists
+                receipt, tree = restore_from_peer(rank, step, store)
+            else:
+                receipt, tree = restore_from_ckpt(
+                    rank, step, ckpt_like, ckpt_dir)
             if receipt is not None:
-                store.thaw(rank)
-                out.receipts.append(receipt)
-                out.restored[rank] = tree
-                continue
-        receipt, tree = restore_from_ckpt(rank, step, ckpt_like, ckpt_dir)
+                break
         if receipt is not None:
             store.thaw(rank)
             out.receipts.append(receipt)

@@ -164,3 +164,64 @@ def test_every_recovery_path_is_documented():
         f"recovery paths missing from docs/observability.md: "
         f"{sorted(missing)}"
     )
+
+
+# -- adaptive recovery policy: decision schema, prior table ----------------
+
+def test_policy_decision_schema_table_matches_record_fields():
+    """Two-way: the decision + candidate schema tables name exactly the
+    fields the engine emits, and every row is documented as pinned —
+    the whole record is replay-verified."""
+    from repro.ft.policy import CANDIDATE_FIELDS, DECISION_FIELDS
+
+    section = _obs_doc_section("Adaptive recovery policy")
+    rows = re.findall(r"^\| `([a-z_]+)` \| (yes|no) \|", section, re.M)
+    assert rows, "policy decision schema tables not found"
+    documented = {name for name, _ in rows}
+    expected = set(DECISION_FIELDS) | set(CANDIDATE_FIELDS)
+    assert documented == expected, (
+        f"decision schema rows != DECISION_FIELDS + CANDIDATE_FIELDS: "
+        f"{sorted(documented ^ expected)}"
+    )
+    unpinned = [name for name, flag in rows if flag != "yes"]
+    assert not unpinned, (
+        f"policy decision fields documented as unpinned: {unpinned}"
+    )
+
+
+def test_policy_prior_table_matches_committed_priors():
+    """Two-way, values included: the documented prior table IS the
+    committed PRIORS cold-start table."""
+    from repro.ft.policy import PRIORS
+
+    section = _obs_doc_section("Adaptive recovery policy")
+    num = r"([0-9][0-9e.+]*)"
+    rows = re.findall(
+        rf"^\| `([a-z_]+)` \| {num} \| {num} \| {num} \|", section, re.M
+    )
+    assert rows, "policy prior table not found"
+    documented = {
+        path: {"lost_steps": float(a), "transfer_bytes": float(b),
+               "replayed_tokens": float(c)}
+        for path, a, b, c in rows
+    }
+    assert documented == PRIORS, (
+        f"prior table != repro.ft.policy.PRIORS: "
+        f"{sorted(set(documented) ^ set(PRIORS))} / value drift in "
+        f"{[p for p in documented if p in PRIORS and documented[p] != PRIORS[p]]}"
+    )
+
+
+def test_policy_doc_mentions_every_reason_and_mode():
+    """The decision vocabulary (reasons, modes, the --ft-policy grammar)
+    stays documented."""
+    from repro.ft.policy import POLICY_MODES
+
+    tokens = _obs_doc_tokens()
+    reasons = {"fixed", "fixed:fallback", "only_valid",
+               "adaptive:measured", "adaptive:prior"}
+    missing = (reasons | set(POLICY_MODES) | {"--ft-policy"}) - tokens
+    assert not missing, (
+        f"policy vocabulary missing from docs/observability.md: "
+        f"{sorted(missing)}"
+    )

@@ -1,0 +1,377 @@
+"""Unit tests for the adaptive recovery-policy engine (repro.ft.policy).
+
+Covers the decision space itself (spec parsing, prior ranking, validity
+and totality, fixed-mode fallback), the CostModel ``min_samples``
+confidence gate the engine leans on for cold start, the commit/drain
+trace plumbing, and the bit-exact decision verification used by both
+replay paths.  End-to-end decision pinning lives in the golden traces
+(tests/test_ft.py, tests/test_serve.py and the CI replay jobs).
+"""
+import json
+
+import pytest
+
+from repro import obs
+from repro.ft.policy import (
+    CANDIDATE_FIELDS,
+    DECISION_FIELDS,
+    EVENT_PATHS,
+    KIND_SCORED_DIMS,
+    PRIORS,
+    SCORE_WEIGHTS,
+    PolicyEngine,
+    make_policy,
+    measured_score,
+    parse_policy,
+    prior_score,
+    realized_score,
+    verify_decisions,
+)
+from repro.obs.costmodel import MIN_SAMPLES, CostModel
+
+
+def fresh_cost(min_samples=MIN_SAMPLES):
+    return CostModel(obs.MetricsRegistry(), min_samples=min_samples)
+
+
+def observe_n(cm, kind, path, n, *, lost_steps=0, transfer_bytes=0,
+              replayed_tokens=0):
+    for _ in range(n):
+        cm.observe(kind, path, lost_steps=lost_steps,
+                   transfer_bytes=transfer_bytes,
+                   replayed_tokens=replayed_tokens, wall_s=None)
+
+
+# -- spec parsing -----------------------------------------------------------
+
+
+def test_parse_policy_adaptive():
+    assert parse_policy("adaptive") == ("adaptive", None)
+
+
+@pytest.mark.parametrize("path", sorted(PRIORS))
+def test_parse_policy_fixed_every_known_path(path):
+    assert parse_policy(f"fixed:{path}") == ("fixed", path)
+
+
+@pytest.mark.parametrize("bad", [
+    "", "Adaptive", "fixed", "fixed:", "fixed:warp_drive", "peer_restore",
+])
+def test_parse_policy_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_policy(bad)
+
+
+def test_make_policy_empty_spec_means_legacy():
+    assert make_policy(None) is None
+    assert make_policy("") is None
+    eng = make_policy("adaptive")
+    assert isinstance(eng, PolicyEngine) and eng.mode == "adaptive"
+
+
+# -- priors reproduce the legacy static preferences -------------------------
+
+
+def test_prior_ranking_matches_legacy_dispatch():
+    assert (prior_score("rank_drop", "peer_restore")
+            < prior_score("rank_drop", "ckpt_restore"))
+    for kind in ("replica_kill", "preemption", "migration"):
+        assert (prior_score(kind, "migrate_snapshot")
+                < prior_score(kind, "migrate_replay"))
+
+
+def test_serve_kinds_exclude_lost_steps_from_scores():
+    for kind in ("replica_kill", "preemption", "migration"):
+        assert "lost_steps" not in KIND_SCORED_DIMS[kind]
+    for kind in ("device_fail", "straggler", "rank_drop"):
+        assert "lost_steps" in KIND_SCORED_DIMS[kind]
+
+
+# -- decide(): validity, totality, fixed mode -------------------------------
+
+
+def test_adaptive_prior_decision_picks_peer():
+    eng = make_policy("adaptive")
+    dec = eng.decide("rank_drop", "rank:1", 5)
+    assert dec["chosen"] == "peer_restore"
+    assert dec["reason"] == "adaptive:prior"
+    assert tuple(sorted(dec)) == tuple(sorted(DECISION_FIELDS))
+    for c in dec["candidates"]:
+        assert tuple(sorted(c)) == tuple(sorted(CANDIDATE_FIELDS))
+        assert c["source"] == "prior" and not c["confident"]
+
+
+def test_invalid_path_is_never_chosen():
+    eng = make_policy("adaptive")
+    dec = eng.decide("rank_drop", "rank:0", 0,
+                     valid={"peer_restore": False})
+    assert dec["chosen"] == "ckpt_restore"
+    assert dec["reason"] == "only_valid"
+    flags = {c["path"]: c["valid"] for c in dec["candidates"]}
+    assert flags == {"peer_restore": False, "ckpt_restore": True}
+
+
+def test_all_invalid_forces_last_candidate():
+    eng = make_policy("adaptive")
+    dec = eng.decide("replica_kill", "req:3", 9,
+                     valid={"migrate_snapshot": False,
+                            "migrate_replay": False})
+    # totality: the last candidate is forced valid; execution may still
+    # fall back, and the incident then records the realized path
+    assert dec["chosen"] == "migrate_replay"
+
+
+def test_single_candidate_kind_is_only_valid():
+    eng = make_policy("adaptive")
+    dec = eng.decide("device_fail", "device:0:1", 2)
+    assert dec["chosen"] == "skip_lowrank"
+    assert dec["reason"] == "only_valid"
+
+
+def test_fixed_mode_pins_and_falls_back():
+    eng = make_policy("fixed:ckpt_restore")
+    dec = eng.decide("rank_drop", "rank:2", 1)
+    assert (dec["chosen"], dec["reason"]) == ("ckpt_restore", "fixed")
+    dec = eng.decide("rank_drop", "rank:2", 1,
+                     valid={"ckpt_restore": False})
+    assert (dec["chosen"], dec["reason"]) == ("peer_restore",
+                                              "fixed:fallback")
+    # a fixed path no candidate of this kind offers: first valid wins
+    dec = eng.decide("replica_kill", "req:0", 1)
+    assert (dec["chosen"], dec["reason"]) == ("migrate_snapshot",
+                                              "fixed:fallback")
+
+
+# -- min_samples / confidence gate (CostModel + engine) ---------------------
+
+
+def test_estimate_confident_flag_respects_min_samples():
+    cm = fresh_cost()
+    assert cm.min_samples == MIN_SAMPLES
+    assert cm.estimate("rank_drop", "peer_restore") is None
+    observe_n(cm, "rank_drop", "peer_restore", MIN_SAMPLES - 1, lost_steps=2)
+    est = cm.estimate("rank_drop", "peer_restore")
+    assert est["count"] == MIN_SAMPLES - 1 and not est["confident"]
+    observe_n(cm, "rank_drop", "peer_restore", 1, lost_steps=2)
+    est = cm.estimate("rank_drop", "peer_restore")
+    assert est["count"] == MIN_SAMPLES and est["confident"]
+
+
+def test_estimate_custom_min_samples():
+    cm = fresh_cost(min_samples=5)
+    observe_n(cm, "rank_drop", "peer_restore", 4)
+    assert not cm.estimate("rank_drop", "peer_restore")["confident"]
+    observe_n(cm, "rank_drop", "peer_restore", 1)
+    assert cm.estimate("rank_drop", "peer_restore")["confident"]
+
+
+def test_measured_score_needs_confidence():
+    cm = fresh_cost()
+    observe_n(cm, "rank_drop", "peer_restore", MIN_SAMPLES - 1,
+              lost_steps=1)
+    assert measured_score(
+        "rank_drop", cm.estimate("rank_drop", "peer_restore")) is None
+    observe_n(cm, "rank_drop", "peer_restore", 1, lost_steps=1)
+    score = measured_score(
+        "rank_drop", cm.estimate("rank_drop", "peer_restore"))
+    assert score == pytest.approx(SCORE_WEIGHTS["lost_steps"] * 1.0)
+
+
+def test_engine_uses_priors_until_confident_then_flips():
+    cm = fresh_cost()
+    eng = make_policy("adaptive", cost=cm)
+    # cold start: priors say peer < ckpt
+    assert eng.decide("rank_drop", "r", 0)["reason"] == "adaptive:prior"
+    # peer restores measure expensive, ckpt measures cheap — but below
+    # min_samples the engine must keep trusting the priors
+    observe_n(cm, "rank_drop", "peer_restore", MIN_SAMPLES - 1,
+              lost_steps=50)
+    observe_n(cm, "rank_drop", "ckpt_restore", MIN_SAMPLES - 1,
+              lost_steps=0)
+    dec = eng.decide("rank_drop", "r", 1)
+    assert dec["chosen"] == "peer_restore"
+    assert dec["reason"] == "adaptive:prior"
+    # one more sample each: both confident, the measured ranking wins
+    observe_n(cm, "rank_drop", "peer_restore", 1, lost_steps=50)
+    observe_n(cm, "rank_drop", "ckpt_restore", 1, lost_steps=0)
+    dec = eng.decide("rank_drop", "r", 2)
+    assert dec["chosen"] == "ckpt_restore"
+    assert dec["reason"] == "adaptive:measured"
+    assert all(c["source"] == "measured" and c["confident"]
+               for c in dec["candidates"])
+
+
+def test_tie_breaks_on_candidate_order():
+    cm = fresh_cost()
+    observe_n(cm, "rank_drop", "peer_restore", MIN_SAMPLES, lost_steps=7)
+    observe_n(cm, "rank_drop", "ckpt_restore", MIN_SAMPLES, lost_steps=7)
+    eng = make_policy("adaptive", cost=cm)
+    dec = eng.decide("rank_drop", "r", 0)
+    assert dec["chosen"] == EVENT_PATHS["rank_drop"][0]  # stable min
+
+
+# -- commit / drain trace plumbing ------------------------------------------
+
+
+def test_decide_is_pure_and_drain_hands_out_once():
+    eng = make_policy("adaptive")
+    dec = eng.decide("rank_drop", "r", 0)
+    assert eng.decisions == [] and eng.drain() == []
+    assert eng.commit(dec) is dec
+    assert eng.drain() == [dec]
+    assert eng.drain() == []  # exactly once
+    second = eng.commit(eng.decide("rank_drop", "r", 1))
+    assert eng.drain() == [second]
+    assert eng.decisions == [dec, second]
+
+
+# -- replay verification + JSON round-trip ----------------------------------
+
+
+def test_decision_json_round_trips_exactly():
+    cm = fresh_cost()
+    observe_n(cm, "rank_drop", "peer_restore", MIN_SAMPLES,
+              lost_steps=1, transfer_bytes=1234567891)
+    eng = make_policy("adaptive", cost=cm)
+    dec = eng.decide("rank_drop", "r", 3)
+    assert json.loads(json.dumps(dec)) == dec
+
+
+def test_verify_decisions_reports_drift():
+    eng = make_policy("adaptive")
+    a = eng.decide("rank_drop", "r", 0)
+    b = eng.decide("rank_drop", "r", 1)
+    assert verify_decisions([a, b], [a, b]) == []
+    assert verify_decisions([a, b], [a]) != []
+    tampered = dict(b, chosen="ckpt_restore")
+    errs = verify_decisions([a, b], [a, tampered])
+    assert len(errs) == 1 and "diverged" in errs[0]
+
+
+# -- realized-score audit ---------------------------------------------------
+
+
+def test_realized_score_weights_match_kind_dims():
+    rec = {"kind": "replica_kill", "lost_steps": 9,
+           "acct": {"restored_bytes": 1000, "replayed_tokens": 5}}
+    # serve kind: lost_steps excluded, bytes + tokens weighted
+    assert realized_score(rec) == pytest.approx(
+        1000 * SCORE_WEIGHTS["transfer_bytes"]
+        + 5 * SCORE_WEIGHTS["replayed_tokens"]
+    )
+    rec = {"kind": "rank_drop", "lost_steps": 2,
+           "acct": {"peer_fetch_bytes": 1000}}
+    assert realized_score(rec) == pytest.approx(
+        2.0 + 1000 * SCORE_WEIGHTS["transfer_bytes"]
+    )
+
+
+# -- trace pinning: the committed golden adaptive traces --------------------
+
+
+@pytest.mark.chaos
+def test_golden_policy_train_trace_pins_adaptive_decisions():
+    """The committed adaptive train trace carries the policy header and
+    pinned decisions (the CI job re-runs the full trainer against it and
+    asserts every decision re-derives bit-exactly)."""
+    from pathlib import Path
+
+    from repro.ft.trace import load_trace
+
+    golden = Path(__file__).parent / "data" / "golden_trace_policy.jsonl"
+    trace = load_trace(golden)
+    assert trace.header.policy == "adaptive"
+    assert trace.header.elastic
+    assert trace.footer is not None
+    assert len(trace.decisions) > 0
+    for dec in trace.decisions:
+        assert tuple(sorted(dec)) == tuple(sorted(DECISION_FIELDS))
+        assert dec["kind"] in EVENT_PATHS
+        assert dec["chosen"] in EVENT_PATHS[dec["kind"]]
+        for c in dec["candidates"]:
+            assert tuple(sorted(c)) == tuple(sorted(CANDIDATE_FIELDS))
+    # the trace must exercise the adaptive machinery, not just cold-start
+    # priors: at least one decision was scored against a confident
+    # measured estimate, and at least one decision departed from the
+    # prior-only ranking because of it (here: measured peer-restore cost
+    # exceeding the checkpoint prior flips the choice to ckpt_restore)
+    assert any(c["source"] == "measured" and c["confident"]
+               for d in trace.decisions for c in d["candidates"])
+    assert any(d["chosen"] != EVENT_PATHS[d["kind"]][0]
+               for d in trace.decisions if d["reason"].startswith("adaptive"))
+    # decisions must not inflate the footer's event count
+    assert trace.footer.n_events == len(trace.events)
+
+
+@pytest.mark.chaos
+def test_golden_policy_serve_trace_replays_with_decisions():
+    """Full re-simulation of the committed adaptive serve trace: events,
+    token streams, accounting AND every pinned policy decision must
+    re-derive bit-exactly."""
+    from repro.serve.run import replay_serve_trace
+    from repro.serve.trace import load_serve_trace
+
+    golden = "tests/data/golden_trace_serve_policy.jsonl"
+    trace = load_serve_trace(golden)
+    assert trace.header.policy == "adaptive"
+    assert len(trace.decisions) > 0
+    problems = replay_serve_trace(golden)
+    assert problems == [], "\n".join(problems)
+
+
+@pytest.mark.chaos
+def test_tampered_policy_decision_fails_serve_replay(tmp_path):
+    """Flipping one pinned decision's chosen path must fail verification —
+    proof the replay actually compares decisions, not just events."""
+    import pathlib
+
+    from repro.serve.run import replay_serve_trace
+
+    lines = pathlib.Path(
+        "tests/data/golden_trace_serve_policy.jsonl"
+    ).read_text().splitlines()
+    idx, d = next(
+        (i, json.loads(ln)) for i, ln in enumerate(lines)
+        if json.loads(ln).get("type") == "policy_decision"
+    )
+    d["chosen"] = ("migrate_replay" if d["chosen"] == "migrate_snapshot"
+                   else "migrate_snapshot")
+    lines[idx] = json.dumps(d)
+    bad = tmp_path / "tampered_policy.jsonl"
+    bad.write_text("\n".join(lines) + "\n")
+    problems = replay_serve_trace(str(bad))
+    assert any("policy decision" in p for p in problems), problems
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_trainer_policy_record_replay_round_trip(tmp_path):
+    """Trainer-level round trip: an adaptive run records decisions, the
+    replay re-derives them from its own re-built cost-model state, and
+    verify_replay pins the match (including measured-score decisions)."""
+    from tests.test_statexfer import GB, _elastic_trainer
+
+    from repro.configs.base import MeCeFOConfig, ShapeConfig, TrainConfig
+    from repro.ft.trace import load_trace
+    from repro.launch.train import Trainer
+    from tests.conftest import TINY_DENSE
+
+    path = tmp_path / "pol.jsonl"
+    rec = _elastic_trainer(trace_record=str(path), ft_policy="adaptive")
+    rec.run(log_every=0)
+    assert rec.controller.policy is not None
+    assert len(rec.controller.policy.decisions) > 0
+    trace = load_trace(path)
+    assert trace.header.policy == "adaptive"
+    assert trace.decisions == rec.controller.policy.decisions
+
+    rep = Trainer(
+        TINY_DENSE, ShapeConfig("sx", 32, GB, "train"),
+        TrainConfig(steps=16, learning_rate=3e-3),
+        mecefo=MeCeFOConfig(mode="dynamic", rank=8, svd_period=50),
+        statexfer=True, trace_replay=str(path),
+    )
+    rep.run(log_every=0)
+    assert rep.controller.policy is not None  # header re-armed the engine
+    assert not rep.verify_replay()
+    assert rep.controller.policy.decisions == trace.decisions

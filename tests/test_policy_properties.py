@@ -1,0 +1,118 @@
+"""Hypothesis invariants for the adaptive recovery-policy engine.
+
+The replay-safety contract, checked over arbitrary observed-cost
+histories instead of the golden traces:
+
+* determinism — identical cost-model state and identical decide() args
+  always produce the identical decision record (the property the
+  pinned ``policy_decision`` replay verification rests on);
+* totality — every (kind, validity-mask) pair yields a chosen path
+  from that kind's candidate set, even when the caller marks every
+  candidate invalid;
+* validity — the chosen path is never an invalid one unless ALL were
+  invalid, in which case it is exactly the forced last candidate;
+* fixed-mode pinning — a fixed policy chooses its path whenever that
+  path is a valid candidate, and something valid otherwise;
+* JSON round-trip — decision records survive json dumps/loads exactly
+  (what makes trace pinning bit-exact).
+"""
+import json
+
+from tests.conftest import require_hypothesis
+
+require_hypothesis()
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro import obs  # noqa: E402
+from repro.ft.policy import (  # noqa: E402
+    EVENT_PATHS,
+    PRIORS,
+    PolicyEngine,
+    make_policy,
+)
+from repro.obs.costmodel import CostModel  # noqa: E402
+
+KINDS = sorted(EVENT_PATHS)
+
+# one closed-incident observation: (kind, path-index, costs).  The path
+# index maps into EVENT_PATHS[kind] so observations always hit pairs
+# estimate() can be queried with.
+observations = st.lists(
+    st.tuples(
+        st.sampled_from(KINDS),
+        st.integers(0, 1),
+        st.integers(0, 60),          # lost_steps
+        st.integers(0, int(2e9)),    # transfer_bytes
+        st.integers(0, 500),         # replayed_tokens
+    ),
+    max_size=24,
+)
+
+valid_masks = st.dictionaries(
+    st.sampled_from(sorted(PRIORS)), st.booleans(), max_size=3
+)
+
+
+def build_cost(obs_list) -> CostModel:
+    cm = CostModel(obs.MetricsRegistry())
+    for kind, pi, steps, nbytes, toks in obs_list:
+        paths = EVENT_PATHS[kind]
+        cm.observe(kind, paths[pi % len(paths)], lost_steps=steps,
+                   transfer_bytes=nbytes, replayed_tokens=toks,
+                   wall_s=None)
+    return cm
+
+
+@settings(deadline=None, max_examples=60)
+@given(obs_list=observations, kind=st.sampled_from(KINDS),
+       valid=valid_masks, step=st.integers(0, 1000))
+def test_decisions_are_deterministic(obs_list, kind, valid, step):
+    a = make_policy("adaptive", cost=build_cost(obs_list))
+    b = make_policy("adaptive", cost=build_cost(obs_list))
+    da = a.decide(kind, "k", step, valid=valid)
+    db = b.decide(kind, "k", step, valid=valid)
+    assert da == db
+    # and the record a trace would pin re-derives bit-exactly
+    assert json.loads(json.dumps(da)) == da
+    assert a.decide(kind, "k", step, valid=valid) == da  # decide is pure
+
+
+@settings(deadline=None, max_examples=60)
+@given(obs_list=observations, kind=st.sampled_from(KINDS),
+       valid=valid_masks)
+def test_decisions_are_total_and_valid(obs_list, kind, valid):
+    eng = make_policy("adaptive", cost=build_cost(obs_list))
+    dec = eng.decide(kind, "k", 0, valid=valid)
+    paths = EVENT_PATHS[kind]
+    assert dec["chosen"] in paths
+    assert [c["path"] for c in dec["candidates"]] == list(paths)
+    flags = {c["path"]: c["valid"] for c in dec["candidates"]}
+    if any(valid.get(p, True) for p in paths):
+        # a valid candidate existed: the chosen one must be valid
+        assert flags[dec["chosen"]]
+    else:
+        # all invalid: the last candidate is forced (totality)
+        assert dec["chosen"] == paths[-1]
+        assert flags[paths[-1]]
+
+
+@settings(deadline=None, max_examples=60)
+@given(obs_list=observations, kind=st.sampled_from(KINDS),
+       fixed=st.sampled_from(sorted(PRIORS)), valid=valid_masks)
+def test_fixed_mode_pins_its_path_when_valid(obs_list, kind, fixed, valid):
+    eng = PolicyEngine("fixed", fixed, cost=build_cost(obs_list))
+    dec = eng.decide(kind, "k", 0, valid=valid)
+    paths = EVENT_PATHS[kind]
+    # mirror the engine's totality rule: with every candidate marked
+    # invalid, the last one is forced back to valid
+    flags = [bool(valid.get(p, True)) for p in paths]
+    if not any(flags):
+        flags[-1] = True
+    effective = dict(zip(paths, flags))
+    if effective.get(fixed, False):
+        assert dec["chosen"] == fixed
+        assert dec["reason"] == "fixed"
+    else:
+        assert dec["chosen"] in paths
+        assert dec["reason"] == "fixed:fallback"
